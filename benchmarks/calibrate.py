@@ -1,0 +1,202 @@
+"""Calibrate the charge-model constants to the paper's reported aggregates.
+
+The paper's SPICE netlists and vendor cell distributions are not public
+(DESIGN.md §8), so the model's free constants are fitted — *once* — to the
+paper's §1.5 numbers:
+
+    per-parameter mean reductions  @85 °C: 15.6/20.4/20.6/28.5 %
+                                   @55 °C: 17.3/37.7/54.8/35.2 %
+    write-latency-sum reductions   @85/55 °C: 34.4/55.1 %
+    (read sums 21.1/32.7 % follow arithmetically from the per-parameter
+     means — verified, not fitted.)
+
+Differentiates *through the actual model* (repro.core.charge) with
+straight-through ceil-to-cycle quantization, Adam, fixed population
+uniforms. Run:  PYTHONPATH=src python -m benchmarks.calibrate
+
+Prints fitted ChargeModelConstants / population fields to paste into
+repro/core/{charge,dimm}.py (already done for the committed defaults), and
+verifies the committed defaults against the targets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import charge
+from repro.core.charge import CellParams, ChargeModelConstants
+from repro.core.timing import JEDEC_DDR3_1600, TCK_DDR3_1600_NS
+
+TARGETS = {
+    (85.0, "trcd"): 0.156, (85.0, "tras"): 0.204,
+    (85.0, "twr"): 0.206, (85.0, "trp"): 0.285,
+    (55.0, "trcd"): 0.173, (55.0, "tras"): 0.377,
+    (55.0, "twr"): 0.548, (55.0, "trp"): 0.352,
+    # Write-mode tRCD/tRP reductions implied by Fig. 2b sums (see DESIGN.md).
+    (85.0, "trcd_w"): 0.419, (85.0, "trp_w"): 0.419,
+    (55.0, "trcd_w"): 0.553, (55.0, "trp_w"): 0.553,
+}
+
+N = 115
+
+
+def _sigmoid(x):
+    return jax.nn.sigmoid(x)
+
+
+def _bounded(x, lo, hi):
+    return lo + (hi - lo) * _sigmoid(x)
+
+
+def make_consts(theta: Dict[str, jax.Array]) -> ChargeModelConstants:
+    return ChargeModelConstants(
+        ret85=_bounded(theta["ret85"], 0.75, 0.985),
+        mobility_exp=_bounded(theta["mob"], 0.2, 6.0),
+        pc_var=_bounded(theta["pc_var"], 0.2, 5.0),
+        pc_temp=_bounded(theta["pc_temp"], 0.02, 2.0),
+        wm_gain_rcd=_bounded(theta["wm_rcd"], 1.05, 6.0),
+        wm_temp=_bounded(theta["wm_temp"], 0.02, 2.5),
+        wm_gain_rp=_bounded(theta["wm_rp"], 1.05, 10.0),
+        v_overdrive=_bounded(theta["vod"], 0.976, 1.10),
+        leak_doubling_c=_bounded(theta["dbl"], 7.0, 20.0),
+    )
+
+
+def make_cells(theta: Dict[str, jax.Array], u: Dict[str, jax.Array],
+               consts: ChargeModelConstants) -> CellParams:
+    gap_r = jnp.clip(
+        _bounded(theta["r_floor"], 0.01, 0.4)
+        + _bounded(theta["r_scale"], 0.2, 0.95) * u["r"] ** _bounded(theta["r_shape"], 0.4, 3.0),
+        0, 1)
+    gap_c = jnp.clip(
+        _bounded(theta["c_floor"], 0.0, 0.05)
+        + _bounded(theta["c_scale"], 0.005, 0.25) * u["c"], 0, 1)
+    gap_l = jnp.clip(
+        _bounded(theta["l_floor"], 0.0, 0.2)
+        + _bounded(theta["l_scale"], 0.1, 0.9) * u["l"], 0, 1)
+    leak_range = _bounded(theta["l_range"], 0.05, 0.6)
+    return CellParams(
+        r=1.0 + (consts.r_max - 1.0) * (1.0 - gap_r),
+        c=consts.c_min + (1.0 - consts.c_min) * gap_c,
+        leak=1.0 - leak_range * gap_l,
+    )
+
+
+def _stq(t_ns: jax.Array) -> jax.Array:
+    """Straight-through ceil-to-cycle quantization."""
+    q = jnp.ceil(t_ns / TCK_DDR3_1600_NS - 1e-6) * TCK_DDR3_1600_NS
+    return t_ns + jax.lax.stop_gradient(q - t_ns)
+
+
+def mean_reductions(consts: ChargeModelConstants, cells: CellParams,
+                    temp: float) -> Dict[str, jax.Array]:
+    base = JEDEC_DDR3_1600
+    out = {}
+    out["trcd"] = 1.0 - _stq(charge.min_trcd(cells, temp, consts=consts)).mean() / base.trcd
+    out["tras"] = 1.0 - _stq(charge.min_tras(cells, temp, consts=consts)).mean() / base.tras
+    out["twr"] = 1.0 - _stq(charge.min_twr(cells, temp, consts=consts)).mean() / base.twr
+    out["trp"] = 1.0 - _stq(charge.min_trp(cells, temp, consts=consts)).mean() / base.trp
+    out["trcd_w"] = 1.0 - _stq(charge.min_trcd_write(cells, temp, consts=consts)).mean() / base.trcd
+    out["trp_w"] = 1.0 - _stq(charge.min_trp_write(cells, temp, consts=consts)).mean() / base.trp
+    return out
+
+
+WRITE_SUM_TARGETS = {85.0: 0.344, 55.0: 0.551}
+
+
+def loss_fn(theta, u):
+    consts = make_consts(theta)
+    cells = make_cells(theta, u, consts)
+    base = JEDEC_DDR3_1600
+    loss = 0.0
+    for temp in (85.0, 55.0):
+        preds = mean_reductions(consts, cells, temp)
+        for k in ("trcd", "tras", "twr", "trp"):
+            w = 2.0 if (temp, k) in ((55.0, "trp"), (55.0, "twr")) else 1.0
+            loss = loss + w * (preds[k] - TARGETS[(temp, k)]) ** 2
+            loss = loss + 10.0 * jnp.maximum(-preds[k], 0.0) ** 2
+        # Fig. 2b reports the write SUM; fit that (per-component split is
+        # unobserved — keep the two write-mode channels roughly equal).
+        wsum = (
+            base.trcd * preds["trcd_w"] + base.twr * preds["twr"] + base.trp * preds["trp_w"]
+        ) / base.write_sum
+        loss = loss + 2.0 * (wsum - WRITE_SUM_TARGETS[temp]) ** 2
+        loss = loss + 0.1 * (preds["trcd_w"] - preds["trp_w"]) ** 2
+    return loss
+
+
+def fit(seed: int = 0, steps: int = 4000, lr: float = 3e-2):
+    key = jax.random.PRNGKey(seed)
+    ku = jax.random.split(key, 3)
+    u = {"r": jax.random.uniform(ku[0], (N,)),
+         "c": jax.random.uniform(ku[1], (N,)),
+         "l": jax.random.uniform(ku[2], (N,))}
+    names = ["ret85", "mob", "pc_var", "pc_temp", "wm_rcd", "wm_temp", "wm_rp",
+             "vod", "dbl", "r_floor", "r_scale", "r_shape", "c_floor",
+             "c_scale", "l_floor", "l_scale", "l_range"]
+    theta = {n: jnp.zeros(()) for n in names}
+
+    grad = jax.jit(jax.value_and_grad(functools.partial(loss_fn, u=u)))
+    m = {n: jnp.zeros(()) for n in names}
+    v = {n: jnp.zeros(()) for n in names}
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    for i in range(steps):
+        l, g = grad(theta)
+        for n in names:
+            m[n] = b1 * m[n] + (1 - b1) * g[n]
+            v[n] = b2 * v[n] + (1 - b2) * g[n] ** 2
+            mh = m[n] / (1 - b1 ** (i + 1))
+            vh = v[n] / (1 - b2 ** (i + 1))
+            theta[n] = theta[n] - lr * mh / (jnp.sqrt(vh) + eps)
+        if i % 500 == 0:
+            print(f"step {i:5d} loss {float(l):.6f}")
+    consts = make_consts(theta)
+    cells = make_cells(theta, u, consts)
+    print("\nfitted constants:")
+    for f in dataclasses.fields(consts):
+        print(f"  {f.name} = {float(getattr(consts, f.name)):.6g}")
+    print("fitted gap params:")
+    print(f"  r_gap = ({float(_bounded(theta['r_floor'], 0.01, 0.4)):.4f}, "
+          f"{float(_bounded(theta['r_scale'], 0.2, 0.95)):.4f}, "
+          f"{float(_bounded(theta['r_shape'], 0.4, 3.0)):.4f})")
+    print(f"  c_gap = ({float(_bounded(theta['c_floor'], 0.0, 0.05)):.4f}, "
+          f"{float(_bounded(theta['c_scale'], 0.005, 0.25)):.4f}, 1.0)")
+    print(f"  leak_gap = ({float(_bounded(theta['l_floor'], 0.0, 0.2)):.4f}, "
+          f"{float(_bounded(theta['l_scale'], 0.1, 0.9)):.4f}, 1.0)  "
+          f"leak_range = {float(_bounded(theta['l_range'], 0.05, 0.6)):.4f}")
+    print("population: r", float(cells.r.mean()), "c", float(cells.c.mean()),
+          "leak", float(cells.leak.mean()))
+    for temp in (85.0, 55.0):
+        preds = {k: round(float(x), 3) for k, x in mean_reductions(consts, cells, temp).items()}
+        print(temp, preds)
+    return theta, u, consts, cells
+
+
+def verify_defaults() -> Dict[str, Tuple[float, float]]:
+    """Check the *committed* defaults against the paper targets (used by
+    tests and EXPERIMENTS.md)."""
+    from repro.core import dimm, profiler
+
+    cells, _ = dimm.sample_population(jax.random.PRNGKey(0))
+    rows = {}
+    for temp in (85.0, 55.0):
+        s = profiler.fig2_summary(cells, temp)
+        for p in ("trcd", "tras", "twr", "trp"):
+            rows[(temp, p)] = (s[f"{p}_reduction"], TARGETS[(temp, p)])
+        rows[(temp, "read_sum")] = (
+            s["read_reduction"], {85.0: 0.211, 55.0: 0.327}[temp])
+        rows[(temp, "write_sum")] = (
+            s["write_reduction"], {85.0: 0.344, 55.0: 0.551}[temp])
+    return rows
+
+
+if __name__ == "__main__":
+    fit()
+    print("\ncommitted-default verification (model, paper):")
+    for k, (a, b) in verify_defaults().items():
+        print(f"  {k}: {a:.3f} vs {b:.3f}")

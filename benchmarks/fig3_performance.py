@@ -1,0 +1,36 @@
+"""Fig. 3 reproduction: real-system performance with AL-DRAM timings."""
+
+from __future__ import annotations
+
+from repro.core import perfmodel as pm
+
+PAPER = {
+    "multi/intensive": 0.140,
+    "multi/nonintensive": 0.029,
+    "multi/all": 0.105,
+    "multi/stream_max_leq": 0.205,
+}
+
+
+def run():
+    rows = []
+    for cfg, label in ((pm.SINGLE_CORE, "single"), (pm.MULTI_CORE, "multi")):
+        r = pm.speedup_report(cfg)
+        for out_k, in_k in (
+            ("intensive", "intensive_geomean"),
+            ("nonintensive", "nonintensive_geomean"),
+            ("all", "all_geomean"),
+            ("stream_max", "stream_max"),
+        ):
+            paper = PAPER.get(f"{label}/{out_k}",
+                              PAPER.get(f"{label}/{out_k}_leq", ""))
+            rows.append((f"fig3/{label}/{out_k}", r[in_k], paper))
+    return rows
+
+
+if __name__ == "__main__":
+    for cfg, label in ((pm.SINGLE_CORE, "single-core"), (pm.MULTI_CORE, "multi-core")):
+        r = pm.speedup_report(cfg)
+        print(f"# {label}: " + ", ".join(f"{k}={v*100:.1f}%" for k, v in r.items()))
+    for w, sp in pm.per_workload_speedups(pm.MULTI_CORE):
+        print(f"fig3/multi/{w},{sp:.4f},")

@@ -1,0 +1,58 @@
+"""§Roofline table: aggregate artifacts/dryrun into the per-cell report.
+
+Reads every dry-run JSON (launch/dryrun.py must have run), emits the
+markdown table EXPERIMENTS.md embeds and a CSV for run.py.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_cells(mesh: str = "single-pod-16x16"):
+    cells = []
+    d = ART / mesh
+    if not d.exists():
+        return cells
+    for f in sorted(d.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("ok"):
+            cells.append(r)
+    return cells
+
+
+def markdown_table(mesh: str = "single-pod-16x16") -> str:
+    rows = [
+        "| arch | cell | t_comp (s) | t_mem (s) | t_coll (s) | bottleneck "
+        "| useful | mem/dev (GiB) | fits |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load_cells(mesh):
+        roof = r["roofline"]
+        am = r.get("analytic_memory", {})
+        rows.append(
+            f"| {r['arch']} | {r['cell']} | {roof['t_compute']:.2e} "
+            f"| {roof['t_memory']:.2e} | {roof['t_collective']:.2e} "
+            f"| {roof['bottleneck']} | {roof['useful_ratio']:.2f} "
+            f"| {am.get('total_gb', '')} | {'✓' if am.get('fits_16gb') else '✗'} |"
+        )
+    return "\n".join(rows)
+
+
+def run():
+    out = []
+    for mesh in ("single-pod-16x16", "multi-pod-2x16x16"):
+        for r in load_cells(mesh):
+            roof = r["roofline"]
+            tag = f"roofline/{mesh}/{r['arch']}/{r['cell']}"
+            lb = roof["t_compute"], roof["t_memory"], roof["t_collective"]
+            out.append((f"{tag}/step_lower_bound_s", max(lb), roof["bottleneck"]))
+            out.append((f"{tag}/useful_ratio", roof["useful_ratio"], ""))
+    return out
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,64 @@
+"""Benchmark driver: one section per paper table/figure + the framework's
+own roofline/margin benches. Prints ``name,value,reference`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--skip-altune]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-altune", action="store_true",
+                    help="skip interpret-mode kernel profiling (slow)")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        crossval,
+        fig2_profiling,
+        fig3_performance,
+        paper_extras,
+        roofline,
+    )
+
+    sections = [
+        ("fig2 (115-DIMM profiling)", fig2_profiling.run),
+        ("fig3 (real-system performance)", fig3_performance.run),
+        ("paper extras (§1.7)", paper_extras.run),
+        ("roofline (dry-run cells)", roofline.run),
+        ("analytic-vs-HLO crossval", crossval.run),
+    ]
+    try:
+        from benchmarks import steptuner_bench
+        sections.append(("step auto-tuner (train cells)", steptuner_bench.run))
+    except Exception:  # needs 512 host devices; skip under other envs
+        pass
+    if not args.skip_altune:
+        from benchmarks import altune_margin
+        sections.append(("altune margin (TPU embodiment)", altune_margin.run))
+
+    print("name,value,reference")
+    failures = 0
+    for title, fn in sections:
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"# SECTION FAILED: {title}: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            failures += 1
+            continue
+        print(f"# --- {title} ({time.time()-t0:.1f}s) ---")
+        for name, value, ref in rows:
+            v = f"{value:.4f}" if isinstance(value, float) else value
+            print(f"{name},{v},{ref}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

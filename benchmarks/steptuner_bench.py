@@ -1,0 +1,53 @@
+"""Auto-tuner over every train cell: does the algorithm re-discover the
+manual §Perf moves? (Run under 512 host devices via dryrun's env, or
+standalone — meshes only need construction, nothing allocates.)"""
+
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.core.altune.steptuner import tune_train_cell
+from repro.launch.analytic import tree_device_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as lm
+from repro.parallel import policies
+from repro.parallel.sharding import param_specs
+
+
+def run():
+    mesh = make_production_mesh(multi_pod=True)
+    rows = []
+    for arch in C.ARCH_IDS:
+        cfg = C.get(arch)
+        pol = policies.make_policy(mesh, cfg, "train", 4096, 256)
+        pshapes = jax.eval_shape(
+            lambda k, c=cfg, t=pol.train: lm.init_params(
+                k, c, jnp.dtype(t.param_dtype)), jax.random.PRNGKey(0)
+        )
+        pshard = param_specs(lm.logical_specs(pshapes, cfg), pshapes, pol.sharding)
+        # params + m + v at their respective dtypes
+        opt_mult = 1 + 2 * (
+            2 if pol.train.opt.state_dtype == "bfloat16" else 4
+        ) / (2 if pol.train.param_dtype == "bfloat16" else 4)
+        state = int(tree_device_bytes(pshapes, pshard) * opt_mult)
+        tuned = tune_train_cell(cfg, 256, 4096, pol, mesh, state)
+        rows.append((
+            f"steptuner/{arch}/speedup", tuned.speedup,
+            tuned.candidate.describe(),
+        ))
+        rows.append((
+            f"steptuner/{arch}/bound_s", tuned.bound_s,
+            f"{tuned.bottleneck},{tuned.mem_gb}GB",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, v, ref in run():
+        print(f"{name},{v:.4f},{ref}")

@@ -1,0 +1,40 @@
+"""AL-DRAM end-to-end demo: boot-profile a DIMM population, then run the
+adaptive controller over a server temperature trace (paper §1.6: server
+DRAM never exceeded 34 °C and drifted <0.1 °C/s).
+
+  PYTHONPATH=src python examples/aldram_controller_demo.py
+"""
+
+import jax
+import numpy as np
+
+from repro.core import dimm
+from repro.core.controller import ALDRAMController, DimmTimingTable
+from repro.core.timing import JEDEC_DDR3_1600
+
+cells, vendors = dimm.sample_population(jax.random.PRNGKey(0))
+sub = type(cells)(r=cells.r[:8], c=cells.c[:8], leak=cells.leak[:8])
+print("boot-profiling 8 DIMMs at 5 temperature bins ...")
+table = DimmTimingTable.profile(sub)
+ctl = ALDRAMController(table)
+
+# Synthetic 24 h server trace: diurnal 26–34 °C plus load spikes.
+rng = np.random.default_rng(0)
+hours = np.arange(0, 24, 0.25)
+temps = 30 + 4 * np.sin(hours / 24 * 2 * np.pi) + rng.normal(0, 0.3, hours.size)
+temps[40:44] += 18.0  # afternoon load spike
+
+lat = []
+for t in temps:
+    timing = ctl.observe(0, float(t))
+    lat.append(timing.read_sum)
+
+base = JEDEC_DDR3_1600.read_sum
+avg_red = 1 - np.mean(lat) / base
+print(f"trace: {temps.min():.1f}–{temps.max():.1f} °C, "
+      f"{ctl.switch_count} timing-set switches")
+print(f"average read-latency reduction over the day: {avg_red*100:.1f}% "
+      f"(worst moment {100*(1-max(lat)/base):.1f}%, "
+      f"best {100*(1-min(lat)/base):.1f}%)")
+assert ctl.fallback_count == 0, "no errors expected on profiled timings"
+print("zero reliability fallbacks — the margin was free.")

@@ -1,0 +1,22 @@
+"""Batched serving example: prefill once, decode a batch of requests.
+
+  PYTHONPATH=src python examples/serve_batched.py [--arch recurrentgemma-9b]
+
+Works for every decoder arch in the registry — including the recurrent
+ones, whose "KV cache" is O(1) state (try --arch xlstm-125m).
+"""
+
+import argparse
+
+from repro.launch.serve import serve
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    ids = serve(args.arch, args.batch, args.prompt_len, args.gen)
+    for b in range(min(args.batch, 2)):
+        print(f"request {b}: {ids[b, :12].tolist()} ...")

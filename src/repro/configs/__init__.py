@@ -1,0 +1,67 @@
+"""Assigned-architecture registry: ``get(name)`` → ModelConfig,
+``reduced(name)`` → CPU-smoke-sized config of the same family,
+``SHAPES`` → the four assigned input-shape cells.
+
+Sources per arch are cited in each module ([hf:…] / [arXiv:…] per the
+assignment table).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Tuple
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS: Tuple[str, ...] = (
+    "smollm-135m",
+    "gemma3-4b",
+    "llama3.2-3b",
+    "chatglm3-6b",
+    "deepseek-moe-16b",
+    "kimi-k2-1t-a32b",
+    "qwen2-vl-72b",
+    "hubert-xlarge",
+    "xlstm-125m",
+    "recurrentgemma-9b",
+)
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def reduced(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.REDUCED
+
+
+def applicable_cells(name: str) -> Tuple[str, ...]:
+    """Shape cells this arch runs (DESIGN.md §4 skip rules)."""
+    cfg = get(name)
+    cells = ["train_4k", "prefill_32k"]
+    if cfg.causal:  # encoder-only archs have no autoregressive step
+        cells.append("decode_32k")
+        if cfg.subquadratic:
+            cells.append("long_500k")
+    return tuple(cells)

@@ -1,0 +1,22 @@
+"""AL-DRAM core: the paper's contribution.
+
+DRAM layer (faithful reproduction):
+  timing      — the four critical timing parameters + JEDEC baseline
+  charge      — cell charge ↔ latency model (paper §1.3)
+  dimm        — 115-DIMM process-variation population
+  profiler    — FPGA-platform analogue: minimal-safe-timing search
+  controller  — adaptive per-(DIMM, temperature) timing selection + fallback
+  perfmodel   — real-system performance evaluation analogue (Fig. 3)
+
+TPU embodiment (the method, transferred — DESIGN.md §2):
+  altune      — adaptive execution-parameter tuning for JAX/Pallas programs
+"""
+
+from repro.core.timing import JEDEC_DDR3_1600, TimingParams  # noqa: F401
+from repro.core.charge import (  # noqa: F401
+    CellParams,
+    ChargeModelConstants,
+    DEFAULT_CONSTANTS,
+)
+from repro.core.dimm import sample_population, worst_case_cell  # noqa: F401
+from repro.core.controller import ALDRAMController, DimmTimingTable  # noqa: F401

@@ -1,0 +1,18 @@
+"""altune: AL-DRAM's profile→tabulate→adapt method for execution params.
+
+costmodel — analytical TPU latency/VMEM model (the SPICE analogue)
+profiler  — candidate sweep + oracle validation + repeatability (the FPGA
+            platform analogue)
+table     — persisted (kernel, shape, device-bin, condition-bin) → config
+runtime   — guard-banded, hysteretic, fused adaptive selection
+"""
+
+from repro.core.altune.costmodel import (  # noqa: F401
+    Estimate,
+    flash_estimate,
+    matmul_estimate,
+    scan_estimate,
+)
+from repro.core.altune.profiler import ProfileResult, profile_kernel  # noqa: F401
+from repro.core.altune.runtime import AdaptiveExecutor, ConditionBins  # noqa: F401
+from repro.core.altune.table import TimingTable  # noqa: F401

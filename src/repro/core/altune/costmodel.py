@@ -1,0 +1,88 @@
+"""Analytical TPU v5e kernel-latency model — the SPICE analogue.
+
+The paper pairs FPGA measurements with SPICE simulation; on this CPU-only
+container the wall-clock backend is meaningless for TPU, so the profiler's
+default backend estimates kernel latency from first principles:
+
+    t ≈ max(flops / peak_mxu, hbm_bytes / hbm_bw) · (1 + grid_overhead)
+
+with a hard VMEM-feasibility gate (the "causes errors" condition of the
+DRAM analogy — an infeasible tiling is the analogue of a timing violation:
+it is never selected, no matter how fast it would be).
+
+Shapes of the traffic model per kernel family follow the standard tiling
+analysis: a (bm, bn, bk) matmul re-reads A n/bn times and B m/bm times.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, Tuple
+
+PEAK_FLOPS = 197e12     # bf16 MXU, per chip
+HBM_BW = 819e9          # bytes/s
+VMEM_BUDGET = 96 * 2**20 // 8  # ~12 MiB usable per core after double-buffer
+GRID_OVERHEAD_S = 1.5e-6       # per-kernel launch/pipeline ramp
+STEP_OVERHEAD_S = 0.3e-6       # per grid step scalar overhead
+
+
+@dataclasses.dataclass(frozen=True)
+class Estimate:
+    feasible: bool
+    t_seconds: float
+    flops: float
+    hbm_bytes: float
+    vmem_bytes: int
+    note: str = ""
+
+    @property
+    def bound(self) -> str:
+        if not self.feasible:
+            return "infeasible"
+        return "compute" if self.flops / PEAK_FLOPS >= self.hbm_bytes / HBM_BW else "memory"
+
+
+def matmul_estimate(m: int, k: int, n: int, cfg, in_bytes: int = 2) -> Estimate:
+    vmem = cfg.vmem_bytes(in_bytes)
+    if vmem > VMEM_BUDGET:
+        return Estimate(False, float("inf"), 0, 0, vmem, "VMEM overflow")
+    flops = 2.0 * m * k * n
+    reads = in_bytes * (m * k * (n // cfg.bn) + k * n * (m // cfg.bm))
+    writes = in_bytes * m * n
+    grid = (m // cfg.bm) * (n // cfg.bn) * (k // cfg.bk)
+    t = max(flops / PEAK_FLOPS, (reads + writes) / HBM_BW)
+    t += GRID_OVERHEAD_S + grid * STEP_OVERHEAD_S
+    return Estimate(True, t, flops, reads + writes, vmem)
+
+
+def flash_estimate(
+    b: int, sq: int, skv: int, h: int, hk: int, dh: int, cfg,
+    causal: bool = True, in_bytes: int = 2,
+) -> Estimate:
+    vmem = cfg.vmem_bytes(dh)
+    if vmem > VMEM_BUDGET:
+        return Estimate(False, float("inf"), 0, 0, vmem, "VMEM overflow")
+    pairs = sq * skv * (0.5 if causal else 1.0)
+    flops = 4.0 * b * h * dh * pairs
+    # Each (q-tile, kv-tile) step streams one KV tile; KV is re-read once
+    # per q tile. Q/O stream once.
+    reads = in_bytes * b * (
+        h * sq * dh + hk * skv * dh * (sq // cfg.bq)
+    )
+    writes = in_bytes * b * h * sq * dh
+    grid = b * h * (sq // cfg.bq) * (skv // cfg.bk)
+    t = max(flops / PEAK_FLOPS, (reads + writes) / HBM_BW)
+    t += GRID_OVERHEAD_S + grid * STEP_OVERHEAD_S
+    return Estimate(True, t, flops, reads + writes, vmem)
+
+
+def scan_estimate(b: int, s: int, d: int, cfg, in_bytes: int = 4) -> Estimate:
+    vmem = cfg.vmem_bytes()
+    if vmem > VMEM_BUDGET:
+        return Estimate(False, float("inf"), 0, 0, vmem, "VMEM overflow")
+    flops = 3.0 * b * s * d  # fma + write per element
+    traffic = in_bytes * b * s * d * 3  # a, b in; h out
+    grid = b * (d // cfg.bd) * (s // cfg.bs)
+    # Elementwise recurrence is VPU-bound; model as memory-bound + step cost.
+    t = traffic / HBM_BW + GRID_OVERHEAD_S + grid * STEP_OVERHEAD_S
+    return Estimate(True, t, flops, traffic, vmem)

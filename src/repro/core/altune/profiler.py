@@ -1,0 +1,146 @@
+"""Execution-parameter profiler — the FPGA-test-platform analogue for
+kernels (DESIGN.md §2 mapping table).
+
+For each candidate config of a kernel/shape class:
+1. **Feasibility** (the timing-violation analogue): VMEM gate from the
+   cost model; an infeasible config is "erroneous at any latency".
+2. **Correctness validation**: run the kernel (interpret mode on CPU,
+   compiled on real TPU) against its ref.py oracle across *adversarial
+   data patterns* — the analogue of the paper's checkerboard/walking-bit
+   tests — with repeatability (N trials, fresh random draws).
+3. **Latency**: analytical cost model (SPICE analogue) by default;
+   ``backend="wallclock"`` times real executions where meaningful.
+
+The outcome is a :class:`ProfileEntry` per candidate; `select()` returns
+the fastest *validated* one, falling back to the worst-case config — the
+same guarantee shape as AL-DRAM's per-DIMM minimal safe timings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: Adversarial data patterns (generator name → array factory).
+def _patterns(key, shape, dtype):
+    k1, k2 = jax.random.split(key)
+    normal = jax.random.normal(k1, shape, jnp.float32)
+    yield "random", normal.astype(dtype)
+    yield "zeros", jnp.zeros(shape, dtype)
+    yield "ones", jnp.ones(shape, dtype)
+    alt = jnp.where((jnp.arange(np.prod(shape)) % 2).reshape(shape) == 0, 1.0, -1.0)
+    yield "alternating", alt.astype(dtype)
+    yield "large", (normal * 1e4).astype(dtype)
+    yield "tiny", (normal * 1e-4).astype(dtype)
+
+
+@dataclasses.dataclass
+class ProfileEntry:
+    config: object
+    feasible: bool
+    validated: bool
+    t_seconds: float
+    bound: str
+    fail_pattern: Optional[str] = None
+    repeat_ok: bool = True
+
+
+@dataclasses.dataclass
+class ProfileResult:
+    kernel: str
+    shape_key: str
+    entries: List[ProfileEntry]
+    worst_case: object
+
+    def select(self) -> object:
+        """Fastest validated config; worst-case fallback (the guarantee)."""
+        ok = [e for e in self.entries if e.feasible and e.validated and e.repeat_ok]
+        if not ok:
+            return self.worst_case
+        return min(ok, key=lambda e: e.t_seconds).config
+
+    def margin(self) -> float:
+        """Harvested latency margin vs the worst-case config (the paper's
+        Fig.2 quantity, transplanted)."""
+        wc = [e for e in self.entries if e.config == self.worst_case]
+        best = self.select()
+        bt = [e for e in self.entries if e.config == best]
+        if not wc or not bt or not wc[0].t_seconds:
+            return 0.0
+        return 1.0 - bt[0].t_seconds / wc[0].t_seconds
+
+
+def _close(out, ref, rtol: float, atol: float) -> bool:
+    """Scale-aware closeness: |out−ref|∞ ≤ rtol·|ref|∞ + atol. Elementwise
+    rtol would flag benign cancellation (large inputs, near-zero outputs)."""
+    out = np.asarray(out, np.float32)
+    ref = np.asarray(ref, np.float32)
+    return float(np.max(np.abs(out - ref))) <= rtol * float(
+        np.max(np.abs(ref))
+    ) + atol
+
+
+def profile_kernel(
+    kernel_name: str,
+    run_fn: Callable[..., jax.Array],       # (inputs..., config) -> out
+    ref_fn: Callable[..., jax.Array],       # (inputs...) -> out
+    make_inputs: Callable[[jax.Array], Tuple],  # pattern array -> args
+    estimate_fn: Callable[[object], "object"],  # config -> costmodel.Estimate
+    candidates: Sequence[object],
+    worst_case: object,
+    input_shape: Tuple[int, ...],
+    dtype=jnp.float32,
+    rtol: float = 2e-2,
+    atol: float = 1e-4,
+    n_repeat: int = 3,
+    backend: str = "costmodel",
+    seed: int = 0,
+) -> ProfileResult:
+    key = jax.random.PRNGKey(seed)
+    entries: List[ProfileEntry] = []
+    for cfg in candidates:
+        est = estimate_fn(cfg)
+        if not est.feasible:
+            entries.append(ProfileEntry(cfg, False, False, float("inf"), "infeasible"))
+            continue
+        validated, fail_pattern, repeat_ok = True, None, True
+        for name, arr in _patterns(key, input_shape, dtype):
+            args = make_inputs(arr)
+            try:
+                out = run_fn(*args, cfg)
+                ref = ref_fn(*args)
+            except Exception:  # compile/shape error = timing violation
+                validated, fail_pattern = False, name
+                break
+            if not _close(out, ref, rtol, atol):
+                validated, fail_pattern = False, name
+                break
+        if validated:
+            # Repeatability (paper §1.7): same verdict across fresh draws.
+            for r in range(n_repeat):
+                kr = jax.random.fold_in(key, r + 1)
+                arr = jax.random.normal(kr, input_shape, jnp.float32).astype(dtype)
+                args = make_inputs(arr)
+                out = run_fn(*args, cfg)
+                ref = ref_fn(*args)
+                if not _close(out, ref, rtol, atol):
+                    repeat_ok = False
+                    break
+        if backend == "wallclock":
+            args = make_inputs(jax.random.normal(key, input_shape, dtype))
+            run_fn(*args, cfg)  # warmup/compile
+            t0 = time.perf_counter()
+            for _ in range(3):
+                jax.block_until_ready(run_fn(*args, cfg))
+            t = (time.perf_counter() - t0) / 3
+        else:
+            t = est.t_seconds
+        entries.append(ProfileEntry(cfg, True, validated, t, est.bound,
+                                    fail_pattern, repeat_ok))
+    return ProfileResult(kernel_name, "x".join(map(str, input_shape)),
+                         entries, worst_case)

@@ -1,0 +1,101 @@
+"""Adaptive runtime controller — AL-DRAM's temperature loop, for load.
+
+The paper's controller maps (DIMM, temperature-bin) → timing set, with a
+guard band, hysteresis (temperature drifts <0.1 °C/s) and a permanent
+error fuse. Here the operating condition is the *measured step time /
+host health* (ft/monitor.py feeds it): a node running hot/slow gets the
+conservative config; a healthy node in the fast bin runs the profiled
+aggressive one; a numerical error (non-finite grads) fuses the unit back
+to WORST_CASE and triggers checkpoint-restore.
+
+The state machine is deliberately identical in shape to
+core/controller.ALDRAMController — that's the point of the paper transfer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence
+
+
+@dataclasses.dataclass
+class ConditionBins:
+    """Condition = normalized load (e.g. step_time / baseline_step_time).
+    Bin edges ascending; bin 0 is the healthiest (fastest config allowed)."""
+
+    edges: Sequence[float] = (1.05, 1.2, 1.5)
+
+    def bin_of(self, load: float) -> int:
+        for i, e in enumerate(self.edges):
+            if load <= e:
+                return i
+        return len(self.edges)
+
+
+@dataclasses.dataclass
+class _UnitState:
+    bin_idx: int
+    calm_streak: int = 0
+    fused: bool = False
+
+
+class AdaptiveExecutor:
+    """Selects per-unit execution configs by condition bin.
+
+    configs_by_bin[b] = config to use in bin b (b beyond the list, or a
+    fused unit, gets ``worst_case``). Moving to a *worse* bin is immediate;
+    recovering to a better bin needs ``hysteresis_steps`` calm readings —
+    AL-DRAM's asymmetric switching, verbatim.
+    """
+
+    def __init__(
+        self,
+        configs_by_bin: Sequence[Any],
+        worst_case: Any,
+        bins: Optional[ConditionBins] = None,
+        hysteresis_steps: int = 3,
+    ):
+        self.configs_by_bin = list(configs_by_bin)
+        self.worst_case = worst_case
+        self.bins = bins or ConditionBins()
+        self.hysteresis_steps = hysteresis_steps
+        self._units: Dict[str, _UnitState] = {}
+        self.switches = 0
+        self.fallbacks = 0
+
+    def _state(self, unit: str) -> _UnitState:
+        if unit not in self._units:
+            self._units[unit] = _UnitState(bin_idx=len(self.bins.edges))
+        return self._units[unit]
+
+    def observe(self, unit: str, load: float) -> Any:
+        st = self._state(unit)
+        if st.fused:
+            return self.worst_case
+        target = self.bins.bin_of(load)
+        if target > st.bin_idx:
+            st.bin_idx = target          # degrade immediately (conservative)
+            st.calm_streak = 0
+            self.switches += 1
+        elif target < st.bin_idx:
+            st.calm_streak += 1
+            if st.calm_streak >= self.hysteresis_steps:
+                st.bin_idx -= 1          # recover one bin at a time
+                st.calm_streak = 0
+                self.switches += 1
+        else:
+            st.calm_streak = 0
+        return self.current(unit)
+
+    def current(self, unit: str) -> Any:
+        st = self._state(unit)
+        if st.fused or st.bin_idx >= len(self.configs_by_bin):
+            return self.worst_case
+        return self.configs_by_bin[st.bin_idx]
+
+    def report_error(self, unit: str) -> Any:
+        """Numerical error → permanent fuse to the worst case (paper
+        reliability guarantee; pair with checkpoint restore)."""
+        self._state(unit).fused = True
+        self.fallbacks += 1
+        return self.worst_case

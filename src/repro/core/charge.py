@@ -1,0 +1,451 @@
+"""Cell charge ↔ latency interdependence model (paper §1.3).
+
+The paper's three observations, implemented as a quantitative model:
+
+1. **Sensing** (tRCD, tRAS): charge sharing perturbs the bitline by
+   ``dv0 ∝ C_cell · V_cell``; the sense amplifier then amplifies
+   exponentially, so time-to-latch is ``r · τ_sa · ln(V_target / dv0)`` —
+   more initial charge ⇒ faster sensing.
+2. **Restore** (tRAS, tWR): the cell approaches full charge exponentially,
+   ``V(t) = 1 − (1 − V_start)·e^(−t/τ)``; the *final* small amount of charge
+   costs most of the time, so stopping at a reduced target ``v_tgt < v_full``
+   cuts the exponential tail.
+3. **Precharge** (tRP): the bitline returns to VDD/2 exponentially; a cell
+   with surplus margin tolerates a residual bitline offset, so the final
+   part of precharge can be cut.
+
+Temperature enters through (a) leakage — charge loss roughly doubles every
+``leak_doubling_c`` °C (the paper's [124]) — and (b) carrier mobility: the
+write driver is stronger at lower temperature (``τ_write`` shrinks as
+``(T_abs/358 K)^mobility_exp``).
+
+**Anchoring**: every time constant (τ_sa, τ_restore, τ_write, τ_bl) is
+*derived* by requiring that the worst-case cell (r = r_max, c = c_min,
+leak = 1) at 85 °C needs *exactly* the JEDEC DDR3-1600 value. The model is
+consistent with the spec by construction; every reduction it reports is
+harvested margin relative to that corner — the paper's reliability argument
+in equation form.
+
+**Reliability floor**: the adaptive restore target ``v_tgt(cell, T)`` is the
+smallest restored voltage such that, after a full refresh window of leakage
+at temperature T, the cell still presents at least the bitline differential
+the worst-case cell presents under worst-case conditions (``dv_floor``) —
+Figure 1 of the paper as an inequality.
+
+**Where the channels live** (calibration insight, DESIGN.md §8): a DIMM's
+worst *cell* capacitance/leakage concentrate near the process corner
+(extreme-value statistics over ~10⁹ cells/DIMM), so per-DIMM variation in
+tRCD/tRAS/tWR flows mostly through the *peripheral* RC multiplier ``r``
+(sense-amp drive, wordline, write driver — per-chip properties), while
+temperature flows through leakage (restore targets) and mobility (write
+drive). tRP's slack is modeled as equalizer margin with explicit variation
+and temperature gains: a pure charge-slack channel cannot reproduce the
+paper's large 85 °C tRP reduction alongside its mild 55 °C growth in a
+log-RC model (documented deviation).
+
+All functions are pure jnp and vectorized over arbitrary leading axes of the
+cell-parameter arrays, so a 115-DIMM population profiles in one call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.timing import JEDEC_DDR3_1600, TimingParams
+
+#: Refresh window (DDR3 64 ms retention requirement), in seconds.
+REFRESH_WINDOW_S: float = 64e-3
+
+#: The worst-case qualification temperature (°C) of the DDR3 standard.
+T_WORST_C: float = 85.0
+
+#: Relative tolerance for forward correctness predicates: the worst-case
+#: cell at JEDEC timings sits exactly on the threshold by construction.
+_EPS: float = 1e-4
+
+
+class CellParams(NamedTuple):
+    """Worst-case-cell parameters of a DIMM (arrays broadcast together).
+
+    r     peripheral RC multiplier, 1 = best .. r_max = JEDEC worst corner.
+    c     worst-cell capacitance fraction, c_min = corner .. 1 = nominal.
+    leak  worst-cell leakage multiplier, 1 = corner (faster = worse).
+    """
+
+    r: Array
+    c: Array
+    leak: Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ChargeModelConstants:
+    """Model constants. Defaults are calibrated by ``benchmarks/calibrate.py``
+    against paper §1.5 (see DESIGN.md §8); structural constants (thresholds,
+    spans) are typical DDR3 circuit values."""
+
+    # Worst-case retention fraction over one 64 ms refresh window at 85 °C.
+    ret85: float = 0.9282
+    # Leakage rate doubles every this many °C (paper's [124] behaviour).
+    leak_doubling_c: float = 7.24
+    # Restored cell voltage (fraction of VDD) after a full JEDEC restore.
+    v_full: float = 0.975
+    # Sense-amp latch threshold on the bitline (fraction of VDD).
+    v_sense_target: float = 0.75
+    # Charge-sharing attenuation: dv0 = cs_alpha * c * v_cell.
+    cs_alpha: float = 0.20
+    # Worst-case process corners the standard must provision for.
+    c_min: float = 0.70
+    r_max: float = 1.45
+    # Fixed (non-adaptable) command/decode overheads, ns.
+    ovh_rcd: float = 3.0
+    ovh_ras: float = 6.0
+    ovh_wr: float = 2.0
+    ovh_rp: float = 3.5
+    # Cell voltage when the restore phase begins (sense amp has latched).
+    v_restore_start: float = 0.55
+    # Write-driver overdrive level (fraction of VDD; > v_full).
+    v_overdrive: float = 0.9830
+    # Carrier-mobility exponent: write drive strengthens as temperature drops.
+    mobility_exp: float = 1.418
+    # Precharge equalizer-margin model: tolerable residual =
+    #   delta_floor * exp(pc_var * q + pc_temp * (85 − T)/30),
+    # q = (r_max − r)/(r_max − 1) the peripheral quality index.
+    delta_floor: float = 0.010
+    pc_var: float = 1.011
+    pc_temp: float = 0.672
+    v_half_swing: float = 0.50
+    # Write-mode (Fig. 2b) drive-assist gains on sensing / precharge margin.
+    wm_gain_rcd: float = 2.186
+    wm_temp: float = 1.26
+    wm_gain_rp: float = 2.709
+
+    # ---- derived anchors (worst case at 85 °C == JEDEC, by construction) --
+    @property
+    def dv_floor(self) -> float:
+        """Bitline differential of the worst-case cell at worst conditions."""
+        return self.cs_alpha * self.c_min * self.v_full * self.ret85
+
+    @property
+    def tau_sa(self):
+        # jnp (not math) so constants may be jax tracers during calibration.
+        return (JEDEC_DDR3_1600.trcd - self.ovh_rcd) / (
+            self.r_max * jnp.log(self.v_sense_target / self.dv_floor)
+        )
+
+    @property
+    def t_sense_worst(self) -> float:
+        return JEDEC_DDR3_1600.trcd - self.ovh_rcd
+
+    @property
+    def tau_restore(self):
+        return (JEDEC_DDR3_1600.tras - self.ovh_ras - self.t_sense_worst) / (
+            self.r_max
+            * jnp.log((1.0 - self.v_restore_start) / (1.0 - self.v_full))
+        )
+
+    @property
+    def tau_write(self):
+        return (JEDEC_DDR3_1600.twr - self.ovh_wr) / (
+            self.r_max
+            * jnp.log(self.v_overdrive / (self.v_overdrive - self.v_full))
+        )
+
+    @property
+    def tau_bl(self):
+        return (JEDEC_DDR3_1600.trp - self.ovh_rp) / (
+            self.r_max * jnp.log(self.v_half_swing / self.delta_floor)
+        )
+
+    def validate(self) -> None:
+        assert 0.0 < self.ret85 < 1.0
+        assert 0.0 < self.c_min < 1.0 and self.r_max > 1.0
+        assert self.v_restore_start < self.v_full < self.v_overdrive
+        assert 0.0 < float(self.dv_floor) < self.v_sense_target
+        assert float(self.tau_sa) > 0 and float(self.tau_restore) > 0
+        assert float(self.tau_write) > 0 and float(self.tau_bl) > 0
+
+
+DEFAULT_CONSTANTS = ChargeModelConstants()
+
+
+# ---------------------------------------------------------------------------
+# Temperature channels
+# ---------------------------------------------------------------------------
+def log_retention(
+    cell: CellParams,
+    temp_c: Array | float,
+    window_s: float = REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Array:
+    """log charge fraction retained over ``window_s`` at ``temp_c``.
+
+    Worst-case cell (leak=1) at 85 °C over 64 ms retains ``ret85``; leakage
+    scales exponentially in temperature (doubling per ``leak_doubling_c``),
+    linearly in the cell's leak multiplier and the window length.
+    """
+    temp_scale = 2.0 ** (
+        (jnp.asarray(temp_c, jnp.float32) - T_WORST_C) / consts.leak_doubling_c
+    )
+    return jnp.log(consts.ret85) * cell.leak * temp_scale * (window_s / REFRESH_WINDOW_S)
+
+
+def retention(
+    cell: CellParams,
+    temp_c: Array | float,
+    window_s: float = REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Array:
+    return jnp.exp(log_retention(cell, temp_c, window_s, consts))
+
+
+def drive_factor(
+    temp_c: Array | float, consts: ChargeModelConstants = DEFAULT_CONSTANTS
+) -> Array:
+    """Write-driver speed factor (<1 below 85 °C): carrier mobility rises as
+    temperature drops, ``(T_abs / 358.15 K)^mobility_exp``."""
+    t_abs = jnp.asarray(temp_c, jnp.float32) + 273.15
+    return (t_abs / (T_WORST_C + 273.15)) ** consts.mobility_exp
+
+
+def quality_index(cell: CellParams, consts: ChargeModelConstants = DEFAULT_CONSTANTS) -> Array:
+    """Peripheral quality q ∈ [0, 1]: 0 = JEDEC corner, 1 = best silicon."""
+    return (consts.r_max - cell.r) / (consts.r_max - 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Sensing (tRCD)
+# ---------------------------------------------------------------------------
+def sense_dv0(
+    cell: CellParams,
+    temp_c: Array | float,
+    v_restored: Array | float,
+    window_s: float = REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Array:
+    """Initial bitline differential at the worst access moment (end of the
+    refresh window), given the voltage the cell was restored to."""
+    v_access = v_restored * retention(cell, temp_c, window_s, consts)
+    return consts.cs_alpha * cell.c * v_access
+
+
+def sense_time(
+    cell: CellParams, dv0: Array, consts: ChargeModelConstants = DEFAULT_CONSTANTS
+) -> Array:
+    """Sense-amplifier latch time from an initial differential ``dv0``."""
+    return cell.r * consts.tau_sa * jnp.log(consts.v_sense_target / dv0)
+
+
+def min_trcd(
+    cell: CellParams,
+    temp_c: Array | float,
+    v_restored: Array | float | None = None,
+    window_s: float = REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Array:
+    """Minimal safe tRCD (ns). ``v_restored`` defaults to a full restore
+    (the *individual* profiling mode of §1.5, other timings at JEDEC)."""
+    v = consts.v_full if v_restored is None else v_restored
+    dv0 = sense_dv0(cell, temp_c, v, window_s, consts)
+    return consts.ovh_rcd + sense_time(cell, dv0, consts)
+
+
+# ---------------------------------------------------------------------------
+# Restore (tRAS) and write recovery (tWR)
+# ---------------------------------------------------------------------------
+def restore_target(
+    cell: CellParams,
+    temp_c: Array | float,
+    window_s: float = REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Array:
+    """Reduced restore target ``v_tgt``: the smallest restored voltage whose
+    end-of-window bitline differential still meets the worst-case floor.
+
+    This is the paper's Figure-1 guarantee: the lightened charge we give up
+    is exactly the slack above what the worst-case cell is guaranteed."""
+    ret = retention(cell, temp_c, window_s, consts)
+    v_needed = consts.dv_floor / (consts.cs_alpha * cell.c * ret)
+    lo = consts.v_restore_start + 0.02
+    return jnp.clip(v_needed, lo, consts.v_full)
+
+
+def restore_time(
+    cell: CellParams, v_tgt: Array, consts: ChargeModelConstants = DEFAULT_CONSTANTS
+) -> Array:
+    return (
+        cell.r
+        * consts.tau_restore
+        * jnp.log((1.0 - consts.v_restore_start) / (1.0 - v_tgt))
+    )
+
+
+def min_tras(
+    cell: CellParams,
+    temp_c: Array | float,
+    window_s: float = REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+    v_tgt: Array | None = None,
+) -> Array:
+    """Minimal safe tRAS (ns): sensing (from a fully-restored previous
+    state) followed by restore to the adaptive target."""
+    dv0 = sense_dv0(cell, temp_c, consts.v_full, window_s, consts)
+    if v_tgt is None:
+        v_tgt = restore_target(cell, temp_c, window_s, consts)
+    return consts.ovh_ras + sense_time(cell, dv0, consts) + restore_time(cell, v_tgt, consts)
+
+
+def write_time(
+    cell: CellParams,
+    v_tgt: Array,
+    temp_c: Array | float,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Array:
+    return (
+        cell.r
+        * consts.tau_write
+        * drive_factor(temp_c, consts)
+        * jnp.log(consts.v_overdrive / (consts.v_overdrive - v_tgt))
+    )
+
+
+def min_twr(
+    cell: CellParams,
+    temp_c: Array | float,
+    window_s: float = REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+    v_tgt: Array | None = None,
+) -> Array:
+    """Minimal safe tWR (ns): drive the cell from the opposite rail to the
+    adaptive restore target."""
+    if v_tgt is None:
+        v_tgt = restore_target(cell, temp_c, window_s, consts)
+    return consts.ovh_wr + write_time(cell, v_tgt, temp_c, consts)
+
+
+# ---------------------------------------------------------------------------
+# Precharge (tRP)
+# ---------------------------------------------------------------------------
+def tolerable_residual(
+    cell: CellParams,
+    temp_c: Array | float,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Array:
+    """Bitline residual the next access can overcome: equalizer margin with
+    explicit variation (peripheral quality) and temperature gains."""
+    q = quality_index(cell, consts)
+    dt = (T_WORST_C - jnp.asarray(temp_c, jnp.float32)) / 30.0
+    return consts.delta_floor * jnp.exp(consts.pc_var * q + consts.pc_temp * dt)
+
+
+def min_trp(
+    cell: CellParams,
+    temp_c: Array | float,
+    window_s: float = REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Array:
+    """Minimal safe tRP (ns)."""
+    delta = jnp.minimum(tolerable_residual(cell, temp_c, consts), 0.4 * consts.v_half_swing)
+    return consts.ovh_rp + cell.r * consts.tau_bl * jnp.log(consts.v_half_swing / delta)
+
+
+# ---------------------------------------------------------------------------
+# Write-mode variants (Fig. 2 write-latency test)
+# ---------------------------------------------------------------------------
+def _wm_dv0(
+    cell: CellParams,
+    temp_c: Array | float,
+    window_s: float,
+    consts: ChargeModelConstants,
+) -> Array:
+    dt = (T_WORST_C - jnp.asarray(temp_c, jnp.float32)) / 30.0
+    dv0 = sense_dv0(cell, temp_c, consts.v_full, window_s, consts)
+    dv0 = dv0 * consts.wm_gain_rcd * jnp.exp(consts.wm_temp * dt)
+    return jnp.minimum(dv0, consts.v_sense_target * 0.95)
+
+
+def min_trcd_write(
+    cell: CellParams,
+    temp_c: Array | float,
+    window_s: float = REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Array:
+    """Minimal tRCD for a *write* access: the external write driver assists
+    the bitline, so the sense-margin wait shrinks (fitted model — the paper
+    reports write-test sums but no write-mode decomposition, DESIGN.md §8)."""
+    dv0 = _wm_dv0(cell, temp_c, window_s, consts)
+    return consts.ovh_rcd + sense_time(cell, dv0, consts)
+
+
+def min_trp_write(
+    cell: CellParams,
+    temp_c: Array | float,
+    window_s: float = REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Array:
+    delta = tolerable_residual(cell, temp_c, consts) * consts.wm_gain_rp
+    delta = jnp.minimum(delta, 0.4 * consts.v_half_swing)
+    return consts.ovh_rp + cell.r * consts.tau_bl * jnp.log(consts.v_half_swing / delta)
+
+
+# ---------------------------------------------------------------------------
+# Forward correctness predicates (what the profiler actually tests)
+# ---------------------------------------------------------------------------
+def read_ok(
+    cell: CellParams,
+    timings: TimingParams,
+    temp_c: Array | float,
+    window_s: float = REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+    v_restored: Array | float | None = None,
+) -> Array:
+    """Does a read with these timings retrieve correct data? (per-DIMM bool)
+
+    Each phase is checked in the *forward* direction — the profiler never
+    inverts the model, mirroring the FPGA methodology of programming a
+    timing and observing errors."""
+    v = consts.v_full if v_restored is None else v_restored
+    dv0 = sense_dv0(cell, temp_c, v, window_s, consts)
+    t_avail = timings.trcd - consts.ovh_rcd
+    dv_reached = dv0 * jnp.exp(t_avail / (cell.r * consts.tau_sa))
+    sense_pass = dv_reached >= consts.v_sense_target * (1.0 - _EPS)
+
+    t_restore_avail = timings.tras - consts.ovh_ras - sense_time(cell, dv0, consts)
+    v_reached = 1.0 - (1.0 - consts.v_restore_start) * jnp.exp(
+        -jnp.maximum(t_restore_avail, 0.0) / (cell.r * consts.tau_restore)
+    )
+    v_tgt = restore_target(cell, temp_c, window_s, consts)
+    restore_pass = v_reached >= v_tgt * (1.0 - _EPS)
+
+    delta_reached = consts.v_half_swing * jnp.exp(
+        -(timings.trp - consts.ovh_rp) / (cell.r * consts.tau_bl)
+    )
+    delta_ok = jnp.minimum(tolerable_residual(cell, temp_c, consts), 0.4 * consts.v_half_swing)
+    prech_pass = delta_reached <= delta_ok * (1.0 + _EPS)
+    return sense_pass & restore_pass & prech_pass
+
+
+def write_ok(
+    cell: CellParams,
+    timings: TimingParams,
+    temp_c: Array | float,
+    window_s: float = REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Array:
+    """Does a write with these timings commit correct data?"""
+    t_avail = timings.twr - consts.ovh_wr
+    v_reached = consts.v_overdrive * (
+        1.0
+        - jnp.exp(
+            -t_avail / (cell.r * consts.tau_write * drive_factor(temp_c, consts))
+        )
+    )
+    v_tgt = restore_target(cell, temp_c, window_s, consts)
+    write_pass = v_reached >= v_tgt * (1.0 - _EPS)
+
+    trcd_pass = timings.trcd >= min_trcd_write(cell, temp_c, window_s, consts) * (1.0 - _EPS)
+    trp_pass = timings.trp >= min_trp_write(cell, temp_c, window_s, consts) * (1.0 - _EPS)
+    return write_pass & trcd_pass & trp_pass

@@ -1,0 +1,188 @@
+"""AL-DRAM memory-controller mechanism (paper §1.4).
+
+AL-DRAM requires *no DRAM chip or interface changes* — only that the memory
+controller store multiple pre-validated timing sets per DIMM and select
+among them by the current operating temperature. This module is that
+controller:
+
+* :class:`DimmTimingTable` — per-(DIMM, temperature-bin) timing sets,
+  produced by the profiler at DIMM-installation/boot time and persisted.
+* :class:`ALDRAMController` — runtime selection with a thermal guard band
+  and hysteresis (the paper measured server DRAM drifting <0.1 °C/s and
+  never above 34 °C, so infrequent conservative switching is safe), plus an
+  error fuse that drops a DIMM back to JEDEC timings permanently (the
+  reliability fallback).
+
+The same select-with-fallback state machine is reused by the TPU
+embodiment (:mod:`repro.core.altune.runtime`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import charge, profiler
+from repro.core.charge import CellParams, ChargeModelConstants, DEFAULT_CONSTANTS
+from repro.core.timing import JEDEC_DDR3_1600, PARAM_NAMES, TimingParams
+
+#: Temperature bins (°C upper edges) for which timing sets are profiled.
+#: 85 °C is the standard's qualification point; the paper evaluates 55 °C.
+DEFAULT_TEMP_BINS: Tuple[float, ...] = (45.0, 55.0, 65.0, 75.0, 85.0)
+
+#: Guard band added to the measured temperature before bin selection: the
+#: controller always assumes the DIMM is slightly hotter than measured.
+GUARD_BAND_C: float = 5.0
+
+#: Hysteresis: switch to a *faster* (cooler) bin only after the temperature
+#: has stayed below the bin edge minus this margin for `HYSTERESIS_STEPS`
+#: consecutive observations. Switching to a slower bin is immediate.
+HYSTERESIS_C: float = 2.0
+HYSTERESIS_STEPS: int = 3
+
+
+@dataclasses.dataclass
+class DimmTimingTable:
+    """Per-DIMM timing sets, one per temperature bin."""
+
+    temp_bins: Tuple[float, ...]
+    #: ``sets[dimm_idx][bin_idx]`` → TimingParams
+    sets: List[List[TimingParams]]
+
+    @classmethod
+    def profile(
+        cls,
+        cells: CellParams,
+        temp_bins: Sequence[float] = DEFAULT_TEMP_BINS,
+        window_s: float = charge.REFRESH_WINDOW_S,
+        consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+    ) -> "DimmTimingTable":
+        """Boot-time profiling: minimal safe timings per DIMM per bin.
+
+        Uses the worst-case data pattern and takes the elementwise max over
+        read- and write-mode requirements, so one set per bin is safe for
+        both access types (what a real controller programs).
+        """
+        n = cells.r.shape[0]
+        sets: List[List[TimingParams]] = [[] for _ in range(n)]
+        for t in temp_bins:
+            read = profiler.profile_individual(cells, t, window_s, consts)
+            write = profiler.profile_write_mode(cells, t, window_s, consts)
+            merged = {
+                p: jnp.maximum(read.timings[p], write.timings[p]) for p in PARAM_NAMES
+            }
+            for i in range(n):
+                sets[i].append(TimingParams(**{p: float(merged[p][i]) for p in PARAM_NAMES}))
+        return cls(temp_bins=tuple(temp_bins), sets=sets)
+
+    def lookup(self, dimm: int, temp_c: float) -> TimingParams:
+        """Timing set for the smallest bin covering ``temp_c`` (guard-banded
+        by the caller); above the last bin → JEDEC."""
+        for b, edge in enumerate(self.temp_bins):
+            if temp_c <= edge:
+                return self.sets[dimm][b]
+        return JEDEC_DDR3_1600
+
+    # -- persistence (the controller's "timing registers" survive reboot) --
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "temp_bins": list(self.temp_bins),
+                "sets": [[s.as_dict() for s in per_dimm] for per_dimm in self.sets],
+            }
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "DimmTimingTable":
+        obj = json.loads(text)
+        return cls(
+            temp_bins=tuple(obj["temp_bins"]),
+            sets=[[TimingParams(**d) for d in per_dimm] for per_dimm in obj["sets"]],
+        )
+
+
+@dataclasses.dataclass
+class _DimmState:
+    bin_idx: int
+    cool_streak: int = 0
+    fused: bool = False  # error observed → permanently JEDEC
+
+
+class ALDRAMController:
+    """Runtime timing selection with guard band, hysteresis and error fuse."""
+
+    def __init__(
+        self,
+        table: DimmTimingTable,
+        guard_band_c: float = GUARD_BAND_C,
+        hysteresis_c: float = HYSTERESIS_C,
+        hysteresis_steps: int = HYSTERESIS_STEPS,
+    ):
+        self.table = table
+        self.guard_band_c = guard_band_c
+        self.hysteresis_c = hysteresis_c
+        self.hysteresis_steps = hysteresis_steps
+        n_bins = len(table.temp_bins)
+        self._state: Dict[int, _DimmState] = {
+            i: _DimmState(bin_idx=n_bins - 1) for i in range(len(table.sets))
+        }
+        self.switch_count = 0
+        self.fallback_count = 0
+
+    def _bin_for(self, temp_c: float) -> int:
+        t = temp_c + self.guard_band_c
+        for b, edge in enumerate(self.table.temp_bins):
+            if t <= edge:
+                return b
+        return len(self.table.temp_bins)  # beyond last bin → JEDEC sentinel
+
+    def observe(self, dimm: int, temp_c: float) -> TimingParams:
+        """Feed a temperature observation; returns the timing set to use."""
+        st = self._state[dimm]
+        if st.fused:
+            return JEDEC_DDR3_1600
+        target = self._bin_for(temp_c)
+        if target > st.bin_idx:
+            # Hotter: switch immediately (conservative direction).
+            st.bin_idx = target
+            st.cool_streak = 0
+            self.switch_count += 1
+        elif target < st.bin_idx:
+            # Cooler: require a sustained streak below edge − hysteresis.
+            edge = (
+                self.table.temp_bins[target]
+                if target < len(self.table.temp_bins)
+                else float("inf")
+            )
+            if temp_c + self.guard_band_c <= edge - self.hysteresis_c:
+                st.cool_streak += 1
+            else:
+                st.cool_streak = 0
+            if st.cool_streak >= self.hysteresis_steps:
+                st.bin_idx = target
+                st.cool_streak = 0
+                self.switch_count += 1
+        else:
+            st.cool_streak = 0
+        return self.current(dimm)
+
+    def current(self, dimm: int) -> TimingParams:
+        st = self._state[dimm]
+        if st.fused or st.bin_idx >= len(self.table.temp_bins):
+            return JEDEC_DDR3_1600
+        return self.table.sets[dimm][st.bin_idx]
+
+    def report_error(self, dimm: int) -> TimingParams:
+        """Reliability fallback: any observed error fuses the DIMM to JEDEC
+        timings (the paper's ultimate guarantee — at worst, AL-DRAM degrades
+        to the baseline)."""
+        self._state[dimm].fused = True
+        self.fallback_count += 1
+        return JEDEC_DDR3_1600
+
+    def bin_of(self, dimm: int) -> Optional[int]:
+        st = self._state[dimm]
+        return None if st.fused else st.bin_idx

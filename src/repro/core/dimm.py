@@ -1,0 +1,116 @@
+"""Process-variation population: 115 DIMMs / 862 chips from three vendors.
+
+The paper profiles 115 DDR3 modules from three major manufacturers and finds
+(a) no tested module actually contains the worst-case cell the standard
+provisions for, and (b) vendors differ systematically. We model each DIMM by
+the parameters of its *worst* cell plus its peripheral-circuit quality — the
+only quantities that matter for safe timing.
+
+Distribution shape (extreme-value reasoning, see charge.py docstring): a
+DIMM's worst-cell capacitance/leakage are the minimum over ~10⁹ cells, so
+they concentrate tightly near the process corner (narrow ``c``/``leak``
+gaps); the peripheral RC multiplier ``r`` (sense-amp drive, wordline,
+write-driver strength) is a per-chip property with much wider spread.
+
+Gaps from the corner are sampled as ``gap = floor + scale · u^shape`` with
+``u ~ U(0,1)`` — a flexible, calibration-differentiable family. ``floor``
+reflects vendor screening: a shipped DIMM passes qualification, so its worst
+cell sits a screened margin away from the absolute corner.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.charge import CellParams, ChargeModelConstants, DEFAULT_CONSTANTS
+
+#: Paper population: 115 modules, 862 chips, 3 manufacturers.
+N_DIMMS: int = 115
+N_CHIPS: int = 862
+VENDOR_SPLIT: Tuple[int, int, int] = (40, 40, 35)
+
+GapSpec = Tuple[float, float, float]  # (floor, scale, shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class VendorModel:
+    """Per-vendor gap distributions (floor, scale, shape) per field.
+
+    gap_r ∈ [0,1]: 0 ⇒ r = r_max (corner), 1 ⇒ r = 1 (best peripheral).
+    gap_c ∈ [0,1]: 0 ⇒ c = c_min (corner), 1 ⇒ c = 1 (nominal).
+    gap_l ∈ [0,1]: leak = 1 − leak_range·gap_l (0 ⇒ corner leakage).
+    """
+
+    name: str
+    r_gap: GapSpec
+    c_gap: GapSpec
+    leak_gap: GapSpec
+    leak_range: float = 0.20
+
+
+#: Calibrated vendor population (benchmarks/calibrate.py; DESIGN.md §8).
+VENDORS: Tuple[VendorModel, ...] = (
+    VendorModel("A", r_gap=(0.330, 0.83, 0.556), c_gap=(0.0001, 0.0050, 1.0),
+                leak_gap=(0.002, 0.104, 1.0), leak_range=0.056),
+    VendorModel("B", r_gap=(0.345, 0.85, 0.556), c_gap=(0.0001, 0.0052, 1.0),
+                leak_gap=(0.002, 0.108, 1.0), leak_range=0.056),
+    VendorModel("C", r_gap=(0.360, 0.88, 0.556), c_gap=(0.0001, 0.0054, 1.0),
+                leak_gap=(0.002, 0.112, 1.0), leak_range=0.056),
+)
+
+
+def _gap(u: jax.Array, spec: GapSpec) -> jax.Array:
+    floor, scale, shape = spec
+    return jnp.clip(floor + scale * u**shape, 0.0, 1.0)
+
+
+def sample_population(
+    key: jax.Array,
+    n_dimms: int = N_DIMMS,
+    vendors: Sequence[VendorModel] = VENDORS,
+    split: Sequence[int] = VENDOR_SPLIT,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Tuple[CellParams, jnp.ndarray]:
+    """Sample a DIMM population.
+
+    Returns ``(cells, vendor_idx)``: each field of ``cells`` has shape
+    ``(n_dimms,)``; ``vendor_idx[i] ∈ {0,1,2}``.
+    """
+    assert sum(split) == n_dimms, (split, n_dimms)
+    rs, cs, ls, vidx = [], [], [], []
+    for i, (vm, n) in enumerate(zip(vendors, split)):
+        key, kr, kc, kl = jax.random.split(key, 4)
+        gap_r = _gap(jax.random.uniform(kr, (n,)), vm.r_gap)
+        gap_c = _gap(jax.random.uniform(kc, (n,)), vm.c_gap)
+        gap_l = _gap(jax.random.uniform(kl, (n,)), vm.leak_gap)
+        rs.append(1.0 + (consts.r_max - 1.0) * (1.0 - gap_r))
+        cs.append(consts.c_min + (1.0 - consts.c_min) * gap_c)
+        ls.append(1.0 - vm.leak_range * gap_l)
+        vidx.append(jnp.full((n,), i, jnp.int32))
+    cells = CellParams(
+        r=jnp.concatenate(rs), c=jnp.concatenate(cs), leak=jnp.concatenate(ls)
+    )
+    return cells, jnp.concatenate(vidx)
+
+
+def worst_case_cell(consts: ChargeModelConstants = DEFAULT_CONSTANTS) -> CellParams:
+    """The JEDEC provisioning corner: the cell the standard is sized for."""
+    return CellParams(
+        r=jnp.asarray(consts.r_max), c=jnp.asarray(consts.c_min), leak=jnp.asarray(1.0)
+    )
+
+
+def population_summary(cells: CellParams) -> Dict[str, float]:
+    return {
+        "r_mean": float(cells.r.mean()),
+        "r_max": float(cells.r.max()),
+        "c_mean": float(cells.c.mean()),
+        "c_min": float(cells.c.min()),
+        "leak_mean": float(cells.leak.mean()),
+        "leak_max": float(cells.leak.max()),
+        "n": int(cells.r.shape[0]),
+    }

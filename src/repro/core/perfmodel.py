@@ -1,0 +1,241 @@
+"""Memory-system performance model — real-system evaluation analogue (§1.6).
+
+The paper evaluates AL-DRAM on a real AMD system (software-controllable DRAM
+timings) across 35 workloads, single- and multi-core, with the deployed
+55 °C reductions tRCD/tRAS/tWR/tRP = 27/32/33/18 %. We reproduce that
+evaluation with an analytic DRAM + core model:
+
+* **Bank timing**: a request is a row-buffer *hit* (tCL), *empty-row miss*
+  (tRCD+tCL) or *conflict* (tRP+tRCD+tCL, plus a tRAS residual when the row
+  cycle is still open and a tWR recovery after writes) — the standard DDR3
+  state machine parameterized by the four adapted timings.
+* **Queueing / saturation**: banks are servers whose *miss* occupancy is
+  row-cycle bound (tRC = tRAS+tRP and write recovery); effective bank count
+  is derated by ``bank_balance`` (address-interleave imbalance). The data
+  bus is a second server (tBURST per transfer). Under multi-core pressure
+  the bank server saturates, so shortening the row cycle buys throughput —
+  this is why the paper's multi-core gains exceed single-core, and why
+  STREAM (bandwidth-bound, row-locality destroyed by multi-stream
+  interleaving) gains the most.
+* **Core**: IPC solves ``ipc = 1 / (cpi_exe + mpki·(lat+queue)·f/mlp)`` by
+  bisection (the rhs is monotone decreasing in ipc through the queue term,
+  so the fixed point is unique and bisection is robust even in deep
+  saturation).
+
+Workload parameters (MPKI, row-hit fraction under the evaluated system,
+write fraction, MLP) follow standard SPEC CPU2006 / STREAM characterization
+buckets; the handful of global constants are calibrated once against the
+paper's aggregates — +14.0 % memory-intensive, +2.9 % non-intensive,
++10.5 % overall (multi-core) — giving 14.7 / 2.8 / 9.8 % (EXPERIMENTS.md
+§Repro).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.timing import JEDEC_DDR3_1600, TBURST_NS, TCL_NS, TimingParams
+
+#: Deployed reductions from the paper's real-system evaluation (§1.6).
+DEPLOYED_REDUCTIONS_55C: Dict[str, float] = {
+    "trcd": 0.27,
+    "tras": 0.32,
+    "twr": 0.33,
+    "trp": 0.18,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    name: str
+    mpki: float           # last-level-cache misses per kilo-instruction
+    row_hit: float        # row-buffer hit fraction (under this system)
+    write_frac: float     # fraction of DRAM requests that are writes
+    mlp: float            # memory-level parallelism (overlapped misses)
+    category: str         # "stream" | "intensive" | "non-intensive"
+
+
+# 35 workloads: 4 STREAM kernels + 17 memory-intensive + 14 non-intensive.
+WORKLOADS: Tuple[Workload, ...] = (
+    Workload("stream.copy", 70.0, 0.42, 0.45, 10.0, "stream"),
+    Workload("stream.scale", 70.0, 0.42, 0.45, 10.0, "stream"),
+    Workload("stream.add", 70.0, 0.42, 0.33, 10.0, "stream"),
+    Workload("stream.triad", 70.0, 0.42, 0.33, 10.0, "stream"),
+    Workload("mcf", 67.0, 0.38, 0.28, 6.0, "intensive"),
+    Workload("lbm", 45.0, 0.52, 0.42, 7.0, "intensive"),
+    Workload("libquantum", 50.0, 0.65, 0.20, 7.5, "intensive"),
+    Workload("milc", 29.0, 0.48, 0.30, 5.0, "intensive"),
+    Workload("soplex", 27.0, 0.45, 0.25, 4.5, "intensive"),
+    Workload("GemsFDTD", 25.0, 0.50, 0.33, 5.0, "intensive"),
+    Workload("omnetpp", 21.0, 0.30, 0.30, 3.0, "intensive"),
+    Workload("leslie3d", 20.0, 0.52, 0.35, 4.5, "intensive"),
+    Workload("bwaves", 18.0, 0.55, 0.30, 5.0, "intensive"),
+    Workload("sphinx3", 13.0, 0.46, 0.15, 3.0, "intensive"),
+    Workload("zeusmp", 12.0, 0.48, 0.35, 3.5, "intensive"),
+    Workload("cactusADM", 11.0, 0.42, 0.35, 2.5, "intensive"),
+    Workload("astar", 10.5, 0.35, 0.25, 2.0, "intensive"),
+    Workload("wrf", 10.0, 0.50, 0.30, 3.0, "intensive"),
+    Workload("xalancbmk", 10.0, 0.32, 0.25, 2.5, "intensive"),
+    Workload("gcc", 10.2, 0.40, 0.30, 2.5, "intensive"),
+    Workload("bzip2", 11.5, 0.42, 0.35, 2.5, "intensive"),
+    Workload("perlbench", 2.7, 0.45, 0.30, 1.5, "non-intensive"),
+    Workload("gobmk", 1.8, 0.40, 0.30, 1.5, "non-intensive"),
+    Workload("sjeng", 1.5, 0.38, 0.30, 1.4, "non-intensive"),
+    Workload("h264ref", 2.4, 0.50, 0.25, 1.8, "non-intensive"),
+    Workload("hmmer", 2.1, 0.52, 0.30, 1.8, "non-intensive"),
+    Workload("namd", 1.2, 0.50, 0.25, 1.5, "non-intensive"),
+    Workload("povray", 0.45, 0.45, 0.25, 1.2, "non-intensive"),
+    Workload("calculix", 1.05, 0.50, 0.28, 1.5, "non-intensive"),
+    Workload("gamess", 0.6, 0.45, 0.25, 1.2, "non-intensive"),
+    Workload("gromacs", 2.7, 0.50, 0.28, 1.8, "non-intensive"),
+    Workload("tonto", 1.8, 0.48, 0.27, 1.5, "non-intensive"),
+    Workload("dealII", 3.0, 0.50, 0.28, 1.8, "non-intensive"),
+    Workload("sixtrack", 0.6, 0.45, 0.25, 1.2, "non-intensive"),
+    Workload("wupwise", 3.6, 0.52, 0.30, 2.0, "non-intensive"),
+)
+assert len(WORKLOADS) == 35
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemConfig:
+    """Evaluated memory system (paper: 1 rank, 1 channel) + calibrated
+    constants (benchmarks/calibrate.py; DESIGN.md §8)."""
+
+    n_cores: int = 1
+    n_banks: int = 8
+    bank_balance: float = 0.55     # address-interleave bank derating
+    cpu_ghz: float = 3.2
+    cpi_exe: float = 0.5           # non-memory CPI
+    ctrl_overhead_ns: float = 14.0  # controller + bus fixed latency
+    empty_frac: float = 0.35       # misses landing on a precharged row
+    ras_residual: float = 0.35     # conflict fraction still bound by tRAS
+    wr_turnaround: float = 0.55    # conflict-after-write tWR exposure
+    rho_max: float = 0.995
+    bisect_iters: int = 60
+
+
+#: The paper's two evaluated configurations.
+SINGLE_CORE = SystemConfig(n_cores=1)
+MULTI_CORE = SystemConfig(n_cores=4)
+
+
+def _fields(ws: Tuple[Workload, ...]) -> Dict[str, Array]:
+    return {
+        "mpki": jnp.array([w.mpki for w in ws], jnp.float32),
+        "row_hit": jnp.array([w.row_hit for w in ws], jnp.float32),
+        "write_frac": jnp.array([w.write_frac for w in ws], jnp.float32),
+        "mlp": jnp.array([w.mlp for w in ws], jnp.float32),
+    }
+
+
+def access_latency_ns(t: TimingParams, f: Dict[str, Array], cfg: SystemConfig) -> Array:
+    """Expected bank access latency (no queueing) per request."""
+    h = f["row_hit"]
+    miss = 1.0 - h
+    empty = cfg.empty_frac * miss
+    conflict = miss - empty
+    t_hit = TCL_NS + TBURST_NS
+    t_empty = t.trcd + TCL_NS + TBURST_NS
+    ras_extra = cfg.ras_residual * jnp.maximum(t.tras - (t.trcd + TCL_NS + TBURST_NS), 0.0)
+    wr_extra = cfg.wr_turnaround * f["write_frac"] * t.twr
+    t_conf = t.trp + t.trcd + TCL_NS + TBURST_NS + ras_extra + wr_extra
+    return h * t_hit + empty * t_empty + conflict * t_conf + cfg.ctrl_overhead_ns
+
+
+#: Read-to-precharge gate (DDR3 tRTP, ns): the bank may precharge this long
+#: after the column access — the burst itself rides the data bus.
+TRTP_NS: float = 7.5
+
+
+def miss_service_ns(t: TimingParams, f: Dict[str, Array], cfg: SystemConfig) -> Array:
+    """Bank occupancy per *miss*: the row cycle. Precharge may start once
+    both tRAS and read-to-precharge (tRCD+tRTP) are satisfied; writes add
+    tWR recovery."""
+    h = f["row_hit"]
+    miss = jnp.maximum(1.0 - h, 1e-9)
+    empty = cfg.empty_frac * miss
+    conflict = miss - empty
+    wr_extra = cfg.wr_turnaround * f["write_frac"] * t.twr
+    occ_conf = jnp.maximum(t.tras, t.trcd + TRTP_NS) + t.trp + wr_extra
+    return (empty * (t.trcd + TBURST_NS) + conflict * occ_conf) / miss
+
+
+def evaluate(
+    t: TimingParams,
+    cfg: SystemConfig,
+    workloads: Tuple[Workload, ...] = WORKLOADS,
+) -> Dict[str, Array]:
+    """IPC per workload under timing set ``t`` (homogeneous multi-instance
+    for the multi-core configuration, the paper's methodology)."""
+    f = _fields(workloads)
+    lat = access_latency_ns(t, f, cfg)
+    svc = miss_service_ns(t, f, cfg)
+    miss = 1.0 - f["row_hit"]
+    banks_eff = cfg.n_banks * cfg.bank_balance
+    ghz = cfg.cpu_ghz
+
+    def cpi_of(ipc: Array) -> Array:
+        rate = cfg.n_cores * ipc * ghz * f["mpki"] * 1e-3  # req/ns
+        rho_bank = jnp.clip(rate * miss * svc / banks_eff, 0.0, cfg.rho_max)
+        rho_bus = jnp.clip(rate * TBURST_NS, 0.0, cfg.rho_max)
+        queue = (
+            rho_bank / (1.0 - rho_bank) * svc * 0.5
+            + rho_bus / (1.0 - rho_bus) * TBURST_NS * 0.5
+        )
+        return cfg.cpi_exe + f["mpki"] * 1e-3 * (lat + queue) * ghz / f["mlp"]
+
+    # Bisection on the unique fixed point ipc = 1/cpi(ipc).
+    lo = jnp.full_like(lat, 1e-4)
+    hi = jnp.full_like(lat, 1.0 / cfg.cpi_exe)
+    for _ in range(cfg.bisect_iters):
+        mid = 0.5 * (lo + hi)
+        go_up = 1.0 / cpi_of(mid) > mid
+        lo = jnp.where(go_up, mid, lo)
+        hi = jnp.where(go_up, hi, mid)
+    ipc = 0.5 * (lo + hi)
+    return {"ipc": ipc, "latency_ns": lat, "service_ns": svc}
+
+
+def _geomean(x: Array) -> float:
+    return float(jnp.exp(jnp.log(x).mean()))
+
+
+def speedup_report(
+    cfg: SystemConfig,
+    reductions: Dict[str, float] = DEPLOYED_REDUCTIONS_55C,
+    workloads: Tuple[Workload, ...] = WORKLOADS,
+) -> Dict[str, float]:
+    """Fig. 3 aggregates: per-category geometric-mean speedups of AL-DRAM
+    (deployed 55 °C reductions) over JEDEC."""
+    base = evaluate(JEDEC_DDR3_1600, cfg, workloads)["ipc"]
+    fast = evaluate(JEDEC_DDR3_1600.reduced(reductions), cfg, workloads)["ipc"]
+    speedup = fast / base
+    cats = [w.category for w in workloads]
+
+    def cat(catname: str) -> Array:
+        idx = jnp.array([i for i, c in enumerate(cats) if c == catname])
+        return speedup[idx]
+
+    mem = jnp.concatenate([cat("stream"), cat("intensive")])
+    return {
+        "all_geomean": _geomean(speedup) - 1.0,
+        "intensive_geomean": _geomean(mem) - 1.0,
+        "nonintensive_geomean": _geomean(cat("non-intensive")) - 1.0,
+        "stream_max": float(cat("stream").max()) - 1.0,
+        "best": float(speedup.max()) - 1.0,
+    }
+
+
+def per_workload_speedups(
+    cfg: SystemConfig,
+    reductions: Dict[str, float] = DEPLOYED_REDUCTIONS_55C,
+    workloads: Tuple[Workload, ...] = WORKLOADS,
+) -> List[Tuple[str, float]]:
+    base = evaluate(JEDEC_DDR3_1600, cfg, workloads)["ipc"]
+    fast = evaluate(JEDEC_DDR3_1600.reduced(reductions), cfg, workloads)["ipc"]
+    sp = fast / base - 1.0
+    return [(w.name, float(sp[i])) for i, w in enumerate(workloads)]

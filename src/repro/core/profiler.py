@@ -1,0 +1,281 @@
+"""DRAM latency profiler — the FPGA-testing-platform analogue (paper §1.5).
+
+The paper's methodology: for each DIMM and temperature, test progressively
+reduced timing parameters with worst-case data/access patterns and record
+the minimal values that produce zero errors. We reproduce that methodology
+literally: the profiler sweeps the integer-cycle timing grid and evaluates
+the *forward* correctness predicates of :mod:`repro.core.charge` (it never
+inverts the model), vectorized over the whole population.
+
+Two profiling modes, matching the paper:
+
+* ``profile_individual`` — reduce ONE parameter, others at JEDEC (the §1.5
+  per-parameter numbers: 17.3/37.7/54.8/35.2 % at 55 °C).
+* ``profile_joint`` — reduce parameters simultaneously; shows the paper's
+  §1.7 interdependence (reducing tRAS leaves less charge, shrinking the
+  slack available to tRCD/tRP).
+
+Data patterns: the paper tests worst-case patterns (coupling noise). A
+pattern factor ≤ 1 scales the effective sense margin; ``PATTERNS`` includes
+the worst (1.0, which the safety guarantee is stated against) and benign
+ones, used by the repeatability analysis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Mapping, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core import charge
+from repro.core.charge import CellParams, ChargeModelConstants, DEFAULT_CONSTANTS
+from repro.core.timing import (
+    JEDEC_DDR3_1600,
+    PARAM_NAMES,
+    TCK_DDR3_1600_NS,
+    TimingParams,
+)
+
+#: Test data patterns, as effective-margin multipliers (1.0 = worst-case
+#: coupling pattern — the one all safety claims are made against).
+PATTERNS: Mapping[str, float] = {
+    "checkerboard": 1.00,   # worst-case coupling (baseline for guarantees)
+    "inv_checker": 1.00,
+    "walking_ones": 1.03,
+    "walking_zeros": 1.03,
+    "all_zeros": 1.08,
+    "all_ones": 1.08,
+    "random": 1.02,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileResult:
+    """Per-DIMM minimal safe timings (ns, cycle-quantized) + reductions."""
+
+    timings: Dict[str, Array]          # param -> (n_dimms,) ns
+    reductions: Dict[str, Array]       # param -> (n_dimms,) fraction
+    temp_c: float
+    window_s: float
+
+    def mean_reductions(self) -> Dict[str, float]:
+        return {k: float(v.mean()) for k, v in self.reductions.items()}
+
+    def min_max_reductions(self) -> Dict[str, Tuple[float, float]]:
+        return {k: (float(v.min()), float(v.max())) for k, v in self.reductions.items()}
+
+
+def _grid(param: str, tck: float = TCK_DDR3_1600_NS) -> Array:
+    """All candidate cycle-quantized values from 1 cycle up to JEDEC."""
+    jedec = getattr(JEDEC_DDR3_1600, param)
+    n = int(round(jedec / tck + 0.5))
+    return jnp.arange(1, n + 1, dtype=jnp.float32) * tck
+
+
+def _min_safe_on_grid(ok_at: Callable[[Array], Array], grid: Array) -> Array:
+    """Smallest grid value for which ``ok_at`` holds for each DIMM.
+
+    ``ok_at(t)`` maps a scalar candidate to a (n_dimms,) bool. Correctness
+    predicates are monotone in each timing, so the first passing grid point
+    is the minimum — exactly the paper's reduce-until-error methodology
+    (run in the safe direction).
+    """
+    ok = jax.vmap(ok_at)(grid)                      # (n_grid, n_dimms)
+    # First True along the grid axis; all-False falls back to JEDEC (last).
+    idx = jnp.argmax(ok, axis=0)
+    none_ok = ~ok.any(axis=0)
+    idx = jnp.where(none_ok, grid.shape[0] - 1, idx)
+    return grid[idx]
+
+
+def profile_individual(
+    cells: CellParams,
+    temp_c: float,
+    window_s: float = charge.REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+    pattern: float = 1.0,
+) -> ProfileResult:
+    """Per-parameter minimal safe timings, others held at JEDEC (§1.5)."""
+    # Pattern factor scales the cell's effective sense margin.
+    eff = CellParams(r=cells.r, c=cells.c * pattern, leak=cells.leak)
+    base = JEDEC_DDR3_1600
+
+    def ok_trcd(t: Array) -> Array:
+        return charge.read_ok(
+            eff, TimingParams(t, base.tras, base.twr, base.trp), temp_c, window_s, consts
+        )
+
+    def ok_tras(t: Array) -> Array:
+        return charge.read_ok(
+            eff, TimingParams(base.trcd, t, base.twr, base.trp), temp_c, window_s, consts
+        )
+
+    def ok_twr(t: Array) -> Array:
+        return charge.write_ok(
+            eff, TimingParams(base.trcd, base.tras, t, base.trp), temp_c, window_s, consts
+        )
+
+    def ok_trp(t: Array) -> Array:
+        return charge.read_ok(
+            eff, TimingParams(base.trcd, base.tras, base.twr, t), temp_c, window_s, consts
+        )
+
+    searchers = {"trcd": ok_trcd, "tras": ok_tras, "twr": ok_twr, "trp": ok_trp}
+    timings = {p: _min_safe_on_grid(fn, _grid(p)) for p, fn in searchers.items()}
+    reductions = {
+        p: 1.0 - timings[p] / getattr(base, p) for p in PARAM_NAMES
+    }
+    return ProfileResult(timings, reductions, temp_c, window_s)
+
+
+def profile_write_mode(
+    cells: CellParams,
+    temp_c: float,
+    window_s: float = charge.REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+    pattern: float = 1.0,
+) -> ProfileResult:
+    """Write-test minimal timings for {tRCD, tWR, tRP} (Fig. 2b)."""
+    eff = CellParams(r=cells.r, c=cells.c * pattern, leak=cells.leak)
+    base = JEDEC_DDR3_1600
+
+    def ok(param: str) -> Callable[[Array], Array]:
+        def f(t: Array) -> Array:
+            kw = {p: getattr(base, p) for p in PARAM_NAMES}
+            kw[param] = t
+            return charge.write_ok(eff, TimingParams(**kw), temp_c, window_s, consts)
+
+        return f
+
+    names = ("trcd", "twr", "trp")
+    timings = {p: _min_safe_on_grid(ok(p), _grid(p)) for p in names}
+    timings["tras"] = jnp.broadcast_to(
+        jnp.asarray(base.tras, jnp.float32), cells.r.shape
+    )
+    reductions = {p: 1.0 - timings[p] / getattr(base, p) for p in PARAM_NAMES}
+    return ProfileResult(timings, reductions, temp_c, window_s)
+
+
+def profile_joint(
+    cells: CellParams,
+    temp_c: float,
+    window_s: float = charge.REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+    restore_scale: float = 1.0,
+) -> ProfileResult:
+    """Simultaneous reduction (§1.7 interdependence).
+
+    First reduce tRAS (restore target scaled by ``restore_scale`` ≥ 1 of the
+    minimal target: 1.0 = maximally reduced restore), then profile
+    tRCD/tRP *given* the reduced restored voltage. With ``restore_scale``
+    = 1 the next access sees exactly the floor charge and tRCD/tRP have no
+    slack left — the paper's observation in its sharpest form.
+    """
+    v_tgt_min = charge.restore_target(cells, temp_c, window_s, consts)
+    v_tgt = jnp.clip(v_tgt_min * restore_scale, v_tgt_min, consts.v_full)
+
+    tras = charge.min_tras(cells, temp_c, window_s, consts, v_tgt=v_tgt)
+    twr = charge.min_twr(cells, temp_c, window_s, consts, v_tgt=v_tgt)
+    trcd = charge.min_trcd(cells, temp_c, v_restored=v_tgt, window_s=window_s, consts=consts)
+    trp = charge.min_trp(cells, temp_c, window_s, consts)
+
+    tck = TCK_DDR3_1600_NS
+    q = lambda t, p: jnp.minimum(  # noqa: E731
+        jnp.ceil(t / tck) * tck, getattr(JEDEC_DDR3_1600, p)
+    )
+    timings = {
+        "trcd": q(trcd, "trcd"),
+        "tras": q(tras, "tras"),
+        "twr": q(twr, "twr"),
+        "trp": q(trp, "trp"),
+    }
+    reductions = {p: 1.0 - timings[p] / getattr(JEDEC_DDR3_1600, p) for p in PARAM_NAMES}
+    return ProfileResult(timings, reductions, temp_c, window_s)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 2 aggregates
+# ---------------------------------------------------------------------------
+def latency_sums(
+    read: ProfileResult, write: ProfileResult
+) -> Dict[str, Array]:
+    """Per-DIMM read/write latency sums (the y-axes of Fig. 2)."""
+    read_sum = read.timings["trcd"] + read.timings["tras"] + read.timings["trp"]
+    write_sum = write.timings["trcd"] + write.timings["twr"] + write.timings["trp"]
+    return {"read_sum_ns": read_sum, "write_sum_ns": write_sum}
+
+
+def fig2_summary(
+    cells: CellParams,
+    temp_c: float,
+    window_s: float = charge.REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Dict[str, float]:
+    """Average read/write latency reductions at ``temp_c`` (Fig. 2 lines)."""
+    read = profile_individual(cells, temp_c, window_s, consts)
+    write = profile_write_mode(cells, temp_c, window_s, consts)
+    sums = latency_sums(read, write)
+    base_read = JEDEC_DDR3_1600.read_sum
+    base_write = JEDEC_DDR3_1600.write_sum
+    out = {
+        "read_reduction": float(1.0 - (sums["read_sum_ns"] / base_read).mean()),
+        "write_reduction": float(1.0 - (sums["write_sum_ns"] / base_write).mean()),
+    }
+    out.update({f"{p}_reduction": v for p, v in read.mean_reductions().items()})
+    out["twr_reduction"] = write.mean_reductions()["twr"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Repeatability (§1.7): do reduced-latency failures repeat across trials?
+# ---------------------------------------------------------------------------
+def repeatability(
+    key: jax.Array,
+    cells: CellParams,
+    temp_c: float,
+    n_trials: int = 10,
+    noise: float = 0.006,
+    window_s: float = charge.REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Dict[str, float]:
+    """Fraction of DIMMs whose failure verdict at a slightly-too-aggressive
+    timing repeats across trials (paper: >95 %).
+
+    Each trial perturbs the effective margin with measurement noise (supply
+    noise, temperature jitter of the test platform) and retests the same
+    reduced timing.
+    """
+    prof = profile_individual(cells, temp_c, window_s, consts)
+    # One cycle below each DIMM's minimum → guaranteed-failing nominally.
+    aggressive = TimingParams(
+        trcd=float(JEDEC_DDR3_1600.trcd),
+        tras=float(JEDEC_DDR3_1600.tras),
+        twr=float(JEDEC_DDR3_1600.twr),
+        trp=float(JEDEC_DDR3_1600.trp),
+    )
+    trcd_minus = prof.timings["trcd"] - TCK_DDR3_1600_NS
+
+    def one_trial(k: jax.Array) -> Array:
+        eps = 1.0 + noise * jax.random.normal(k, cells.c.shape)
+        eff = CellParams(r=cells.r, c=cells.c * eps, leak=cells.leak)
+        return charge.read_ok(
+            eff,
+            TimingParams(trcd_minus, aggressive.tras, aggressive.twr, aggressive.trp),
+            temp_c,
+            window_s,
+            consts,
+        )
+
+    oks = jax.vmap(one_trial)(jax.random.split(key, n_trials))  # (T, n)
+    fails = ~oks
+    ever_fails = fails.any(axis=0)
+    always_fails = fails.all(axis=0)
+    n_ever = jnp.maximum(ever_fails.sum(), 1)
+    return {
+        "repeat_fraction": float(always_fails.sum() / n_ever),
+        "ever_fail_fraction": float(ever_fails.mean()),
+        "n_trials": n_trials,
+    }

@@ -1,0 +1,105 @@
+"""DRAM timing parameters (the paper's §1.1 objects of study).
+
+A :class:`TimingParams` bundle is the unit AL-DRAM adapts: the four most
+critical DDR3 timing parameters identified by the paper — tRCD (activate to
+read/write), tRAS (activate to precharge), tWR (write recovery) and tRP
+(precharge). All values are in nanoseconds; DRAM controllers program them in
+integer clock cycles, so :meth:`TimingParams.quantize` rounds *up* to the bus
+clock (correctness-preserving, exactly like a real controller).
+
+JEDEC DDR3-1600 baseline values follow the DDR3 SDRAM specification
+(JESD79-3F, the paper's [44]).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterator, Tuple
+
+# DDR3-1600: 800 MHz bus clock.
+TCK_DDR3_1600_NS: float = 1.25
+
+#: Names, in the paper's canonical order.
+PARAM_NAMES: Tuple[str, str, str, str] = ("trcd", "tras", "twr", "trp")
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingParams:
+    """The four critical DRAM timing parameters, in nanoseconds."""
+
+    trcd: float
+    tras: float
+    twr: float
+    trp: float
+
+    # -- derived sums used by the paper's Fig. 2 ---------------------------
+    @property
+    def read_sum(self) -> float:
+        """tRCD + tRAS + tRP: the paper's read-latency figure of merit."""
+        return self.trcd + self.tras + self.trp
+
+    @property
+    def write_sum(self) -> float:
+        """tRCD + tWR + tRP: the paper's write-latency figure of merit."""
+        return self.trcd + self.twr + self.trp
+
+    @property
+    def trc(self) -> float:
+        """Row-cycle time tRC = tRAS + tRP (back-to-back row activations)."""
+        return self.tras + self.trp
+
+    # -- transforms --------------------------------------------------------
+    def scaled(self, factors: "TimingParams | Dict[str, float]") -> "TimingParams":
+        """Multiply each parameter by a per-parameter factor."""
+        if isinstance(factors, TimingParams):
+            factors = factors.as_dict()
+        return TimingParams(**{k: getattr(self, k) * factors[k] for k in PARAM_NAMES})
+
+    def reduced(self, reductions: Dict[str, float]) -> "TimingParams":
+        """Apply fractional reductions, e.g. ``{"twr": 0.33}`` → tWR × 0.67."""
+        return TimingParams(
+            **{k: getattr(self, k) * (1.0 - reductions.get(k, 0.0)) for k in PARAM_NAMES}
+        )
+
+    def quantize(self, tck_ns: float = TCK_DDR3_1600_NS) -> "TimingParams":
+        """Round each parameter *up* to an integer number of clock cycles."""
+        return TimingParams(
+            **{
+                k: math.ceil(round(getattr(self, k) / tck_ns, 9)) * tck_ns
+                for k in PARAM_NAMES
+            }
+        )
+
+    def cycles(self, tck_ns: float = TCK_DDR3_1600_NS) -> Dict[str, int]:
+        """Integer cycle counts at the given bus clock."""
+        return {
+            k: int(math.ceil(round(getattr(self, k) / tck_ns, 9))) for k in PARAM_NAMES
+        }
+
+    def reduction_vs(self, baseline: "TimingParams") -> Dict[str, float]:
+        """Fractional reduction of each parameter relative to ``baseline``."""
+        return {
+            k: 1.0 - getattr(self, k) / getattr(baseline, k) for k in PARAM_NAMES
+        }
+
+    def as_dict(self) -> Dict[str, float]:
+        return {k: getattr(self, k) for k in PARAM_NAMES}
+
+    def __iter__(self) -> Iterator[float]:
+        return iter(getattr(self, k) for k in PARAM_NAMES)
+
+    def validate(self) -> None:
+        for k in PARAM_NAMES:
+            v = getattr(self, k)
+            if not (v > 0.0 and math.isfinite(v)):
+                raise ValueError(f"{k}={v!r} must be positive and finite")
+
+
+#: JEDEC DDR3-1600 standard timings (JESD79-3F): the worst-case provisioned
+#: baseline every DIMM must honour regardless of its actual cells/temperature.
+JEDEC_DDR3_1600 = TimingParams(trcd=13.75, tras=35.0, twr=15.0, trp=13.75)
+
+#: Additional fixed latencies used by the performance model (not adapted).
+TCL_NS: float = 13.75  # CAS latency (read command to first data)
+TBURST_NS: float = 5.0  # burst transfer of one 64B cache line (BL8)

@@ -1,0 +1,109 @@
+"""Deterministic synthetic data pipeline (host-sharded, seedable).
+
+Real deployments plug a tokenized corpus in here; the framework contract is
+only the batch dict {"tokens"|"embeds", "labels"(+"positions")}. The
+synthetic stream is a fixed-seed Zipf-ish token process with enough
+structure (bigram coupling) that a ~100M model visibly learns within a few
+hundred steps (examples/train_smollm.py) — a flat random stream would give
+a constant loss and hide optimizer bugs.
+
+Determinism contract: batch(step, host) depends only on (seed, step,
+host_index), so restart/elastic-reshard replays identically — required by
+the checkpoint/restore tests. In multi-host mode each host materializes its
+slice and assembles the global array via
+``jax.make_array_from_process_local_data``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.rope import default_positions
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    vocab_zipf_a: float = 1.2
+
+
+def _host_slice(global_batch: int) -> slice:
+    n = jax.process_count()
+    i = jax.process_index()
+    per = global_batch // n
+    return slice(i * per, (i + 1) * per)
+
+
+def synth_tokens(cfg: ModelConfig, dc: DataConfig, step: int) -> np.ndarray:
+    """(B_host, S+1) int32 — deterministic in (seed, step, host)."""
+    sl = _host_slice(dc.global_batch)
+    b = sl.stop - sl.start
+    rng = np.random.default_rng(
+        np.random.SeedSequence([dc.seed, step, jax.process_index()])
+    )
+    v = cfg.vocab_size
+    # Zipf marginal + bigram coupling: token_{t+1} correlates with token_t.
+    base = rng.zipf(dc.vocab_zipf_a, size=(b, dc.seq_len + 1)).astype(np.int64)
+    base = np.minimum(base - 1, v - 1)
+    prev = np.roll(base, 1, axis=1)
+    mix = rng.random((b, dc.seq_len + 1)) < 0.3
+    tok = np.where(mix, (prev * 31 + 7) % v, base)
+    return tok.astype(np.int32)
+
+
+def batch_for_step(cfg: ModelConfig, dc: DataConfig, step: int) -> Dict[str, np.ndarray]:
+    """Next-token LM batch for this host."""
+    tok = synth_tokens(cfg, dc, step)
+    out: Dict[str, np.ndarray] = {
+        "labels": tok[:, 1:].copy(),
+    }
+    if cfg.embeds_input:
+        # Modality stub: deterministic frame/patch embeddings from token ids
+        # (a cheap stand-in for the conv/ViT frontend).
+        rng = np.random.default_rng(
+            np.random.SeedSequence([dc.seed + 1, step, jax.process_index()])
+        )
+        proj = rng.standard_normal((257, cfg.d_model)).astype(np.float32) * 0.02
+        out["embeds"] = proj[tok[:, :-1] % 257].astype(np.float32)
+        if cfg.rope_variant == "mrope":
+            b, s = tok.shape[0], dc.seq_len
+            pos = np.broadcast_to(np.arange(s, dtype=np.int32), (b, s))
+            out["positions"] = np.broadcast_to(pos, (3, b, s)).copy()
+    else:
+        out["tokens"] = tok[:, :-1].copy()
+    return out
+
+
+def iterate(cfg: ModelConfig, dc: DataConfig, start_step: int = 0) -> Iterator[Dict]:
+    step = start_step
+    while True:
+        yield batch_for_step(cfg, dc, step)
+        step += 1
+
+
+def input_specs(cfg: ModelConfig, seq_len: int, global_batch: int, kind: str):
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation).
+
+    kind: "train" → loss-fn batch; "prefill" → prefill batch;
+    "decode" → (tokens, pos) pair shapes (cache specs come from the
+    launcher, which knows the policy)."""
+    b, s = global_batch, seq_len
+    sds = jax.ShapeDtypeStruct
+    if kind == "decode":
+        return {"tokens": sds((b, 1), jnp.int32), "pos": sds((), jnp.int32)}
+    out = {"labels": sds((b, s), jnp.int32)}
+    if cfg.embeds_input:
+        out["embeds"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+        if cfg.rope_variant == "mrope":
+            out["positions"] = sds((3, b, s), jnp.int32)
+    else:
+        out["tokens"] = sds((b, s), jnp.int32)
+    return out

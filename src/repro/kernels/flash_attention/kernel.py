@@ -1,0 +1,122 @@
+"""Pallas TPU flash-attention kernel (FA-2 style online softmax).
+
+Tiling: grid (B·H, Sq/bq, Skv/bk), KV innermost; the (m, l, acc) state
+lives in VMEM scratch and persists across the KV grid dimension (TPU grid
+iterates the last axis fastest), so each query tile streams KV tiles
+through VMEM exactly once — HBM traffic is O(S·dh) per head instead of
+O(S²).
+
+The block sizes (bq, bk) are this kernel's **AL-DRAM timing parameters**:
+the conservative `WORST_CASE` config (128, 128) always fits VMEM; larger
+profiles (256–512) harvest the margin on shapes/heads where the working
+set allows — selected per shape-class by core/altune, never blindly
+(DESIGN.md §2).
+
+VMEM working set ≈ (bq·dh + 2·bk·dh + bq·bk + bq·(dh+2)) × 4 B; with
+dh=128, bq=bk=256 ≈ 0.9 MB — comfortably under the ~16 MB/core budget at
+the default, leaving headroom for the compiler's double buffering.
+
+GQA: the KV BlockSpec index map divides the head index by the group size,
+so KV tiles are fetched once per KV head.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, window: int, bq: int, bk: int,
+    nkv: int, sq_valid: int, skv_valid: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)              # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)              # (bk, dh)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                      # (bq, bk)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = (q_pos < sq_valid) & (k_pos < skv_valid)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                            # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.where(s > 0.5 * NEG_INF, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ki == nkv - 1)
+    def _finalize():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_hm(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, window: int = 0,
+    bq: int = 128, bk: int = 128, interpret: bool = False,
+    sq_valid: int | None = None, skv_valid: int | None = None,
+) -> jax.Array:
+    """Head-major flash attention.
+
+    q: (BH, Sq, dh); k/v: (BHk, Skv, dh) where BH = B·H, BHk = B·Hk and
+    the GQA group g = BH // BHk repeats are resolved by the KV index map.
+    Sequences must be pre-padded to block multiples (ops.py does this);
+    ``*_valid`` are the unpadded lengths (pads are masked out).
+    """
+    bh, sq, dh = q.shape
+    bhk, skv, _ = k.shape
+    g = bh // bhk
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+    nq, nkv = sq // bq, skv // bk
+    kernel = functools.partial(
+        _fa_kernel,
+        scale=dh**-0.5, causal=causal, window=window,
+        bq=bq, bk=bk, nkv=nkv,
+        sq_valid=sq_valid or sq, skv_valid=skv_valid or skv,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j, g=g: (b // g, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j, g=g: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

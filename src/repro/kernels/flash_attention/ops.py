@@ -1,0 +1,73 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Handles layout ((B,S,H,dh) ↔ head-major), padding to block multiples, GQA
+flattening, and the AL-DRAM-style block-size configuration: ``FAConfig``
+is a *timing parameter set* — ``WORST_CASE`` always compiles/fits;
+faster validated configs come from core/altune's profile tables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_hm
+
+
+@dataclasses.dataclass(frozen=True)
+class FAConfig:
+    bq: int = 128
+    bk: int = 128
+
+    def vmem_bytes(self, dh: int) -> int:
+        """Estimated VMEM working set (fp32), for altune's cost model."""
+        return 4 * (
+            self.bq * dh + 2 * self.bk * dh + self.bq * self.bk
+            + self.bq * (dh + 2)
+        )
+
+
+#: The JEDEC analogue: conservative blocks that fit VMEM for every dh≤256.
+WORST_CASE = FAConfig(bq=128, bk=128)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "config", "interpret")
+)
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, window: int = 0,
+    config: FAConfig = WORST_CASE, interpret: bool = False,
+) -> jax.Array:
+    """q: (B, Sq, H, dh); k/v: (B, Skv, Hk, dh). Returns (B, Sq, H, dh)."""
+    b, sq, h, dh = q.shape
+    skv, hk = k.shape[1], k.shape[2]
+
+    qm = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dh)
+    km = k.transpose(0, 2, 1, 3).reshape(b * hk, skv, dh)
+    vm = v.transpose(0, 2, 1, 3).reshape(b * hk, skv, dh)
+
+    qm = _pad_to(qm, 1, config.bq)
+    km = _pad_to(km, 1, config.bk)
+    vm = _pad_to(vm, 1, config.bk)
+
+    out = flash_attention_hm(
+        qm, km, vm, causal=causal, window=window,
+        bq=config.bq, bk=config.bk, interpret=interpret,
+        sq_valid=sq, skv_valid=skv,
+    )
+    out = out[:, :sq]
+    return out.reshape(b, h, sq, dh).transpose(0, 2, 1, 3)

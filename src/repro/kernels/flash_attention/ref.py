@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for flash attention (naive O(S²) materialization)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array
+
+NEG_INF = -1e30
+
+
+def naive_attention(
+    q: Array, k: Array, v: Array, *, causal: bool = True, window: int = 0,
+    q_offset: int = 0,
+) -> Array:
+    """q: (B, Sq, H, dh); k/v: (B, Skv, Hk, dh), H = G·Hk. fp32 softmax.
+
+    Returns (B, Sq, H, dh)."""
+    b, sq, h, dh = q.shape
+    skv, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf) * (dh**-0.5)
+    q_pos = jnp.arange(sq) + q_offset
+    k_pos = jnp.arange(skv)
+    dpos = q_pos[:, None] - k_pos[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= dpos >= 0
+    if window > 0:
+        mask &= dpos < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return out.astype(q.dtype)

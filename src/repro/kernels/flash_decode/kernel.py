@@ -1,0 +1,95 @@
+"""Pallas TPU flash-decode kernel: one query token vs a long KV cache.
+
+Decode at 32k+ context is HBM-bound on KV reads (§Roofline: every dense
+decode cell). The kernel streams the cache through VMEM in ``bk``-row
+tiles with an online-softmax accumulator in scratch — the FlashDecoding
+idea adapted to TPU: instead of GPU split-K across SMs with a reduction
+kernel, the (B·H) grid dimension supplies the parallelism and the KV walk
+stays sequential per head with VMEM-resident state (no second pass, no
+partial-results round-trip through HBM).
+
+Timing parameters: ``bk`` (KV tile rows). WORST_CASE 512 ≈ 0.5 MB tile at
+dh=128; larger tiles amortize grid-step overhead when VMEM allows —
+altune's call, as usual.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fd_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+               *, scale: float, bk: int, nkv: int):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # (1, dh)
+    k = k_ref[0].astype(jnp.float32)          # (bk, dh)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                  # (1, bk)
+    pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    s = jnp.where(pos < len_ref[0], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.where(s > 0.5 * NEG_INF, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ki == nkv - 1)
+    def _():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+def flash_decode_hm(
+    q: jax.Array, k: jax.Array, v: jax.Array, length: jax.Array,
+    *, bk: int = 512, interpret: bool = False,
+) -> jax.Array:
+    """q: (BH, 1, dh); k/v: (BH, L, dh); length: (1,) int32 valid rows.
+    L must divide bk (ops.py pads; pads are masked by ``length``)."""
+    bh, _, dh = q.shape
+    l = k.shape[1]
+    assert l % bk == 0, (l, bk)
+    nkv = l // bk
+    kernel = functools.partial(
+        _fd_kernel, scale=dh**-0.5, bk=bk, nkv=nkv
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nkv),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, dh), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, 1, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, q, k, v)

@@ -1,0 +1,50 @@
+"""jit'd wrapper for flash-decode: layout, GQA repeat, padding."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.kernel import flash_decode_hm
+
+
+@dataclasses.dataclass(frozen=True)
+class FDConfig:
+    bk: int = 512
+
+    def vmem_bytes(self, dh: int, in_bytes: int = 2) -> int:
+        return 2 * in_bytes * self.bk * dh + 4 * (dh + 2)
+
+
+WORST_CASE = FDConfig(512)
+CANDIDATES = (WORST_CASE, FDConfig(1024), FDConfig(2048), FDConfig(4096))
+
+
+@functools.partial(jax.jit, static_argnames=("config", "interpret"))
+def flash_decode(
+    q: jax.Array, k: jax.Array, v: jax.Array, length: jax.Array,
+    config: FDConfig = WORST_CASE, interpret: bool = False,
+) -> jax.Array:
+    """q: (B, H, dh); k/v cache: (B, L, Hk, dh); length: () int32.
+    Returns (B, H, dh)."""
+    b, h, dh = q.shape
+    l, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    pad = (-l) % config.bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    km = k.transpose(0, 2, 1, 3).reshape(b * h, l + pad, dh)
+    vm = v.transpose(0, 2, 1, 3).reshape(b * h, l + pad, dh)
+    qm = q.reshape(b * h, 1, dh)
+    out = flash_decode_hm(
+        qm, km, vm, jnp.asarray(length, jnp.int32).reshape(1),
+        bk=config.bk, interpret=interpret,
+    )
+    return out.reshape(b, h, dh)

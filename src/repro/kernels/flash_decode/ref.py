@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+
+import jax.numpy as jnp
+from jax import Array
+
+NEG_INF = -1e30
+
+
+def decode_attention(q: Array, k: Array, v: Array, length: Array | int) -> Array:
+    """q: (B, H, dh); k/v: (B, L, H, dh) (KV already head-repeated);
+    ``length``: number of valid cache slots (≤ L). Returns (B, H, dh)."""
+    s = jnp.einsum("bhd,blhd->bhl", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (q.shape[-1] ** -0.5)
+    idx = jnp.arange(k.shape[1])
+    s = jnp.where((idx < length)[None, None, :], s, NEG_INF)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bhl,blhd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,65 @@
+"""Latency-tuned tiled matmul — the canonical AL-DRAM-style kernel.
+
+The block shape (bm, bn, bk) is the kernel's *timing parameter set*:
+
+* ``WORST_CASE`` (128, 128, 128) is the JEDEC analogue — minimum MXU-aligned
+  tiles whose working set (~192 KB fp32) fits any TPU VMEM with maximal
+  headroom for pipeline double-buffering. Always safe, never fastest.
+* Larger profiles (e.g. 512×512×1024 ≈ 5.2 MB) raise arithmetic intensity
+  per HBM byte — bm·bn·bk/(bm·bk+bk·bn) — exactly the paper's "typical
+  cells have charge slack" story: most shapes/devices can run them, but
+  the one-size-fits-all default cannot assume so.
+* core/altune profiles candidates per (shape-class, device-bin), validates
+  each against ref.py under adversarial data patterns, and persists the
+  table; the runtime selects with the conservative fallback.
+
+Grid (m/bm, n/bn, k/bk), k innermost; fp32 accumulator in VMEM scratch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], y_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_tiled(
+    x: jax.Array, y: jax.Array,
+    *, bm: int = 128, bn: int = 128, bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """(m, k) @ (k, n); dims must divide the block shape (ops.py pads)."""
+    m, k = x.shape
+    _, n = y.shape
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    nk = k // bk
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)

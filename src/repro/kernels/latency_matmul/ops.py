@@ -1,0 +1,66 @@
+"""jit'd wrapper: padding + the AL-DRAM timing-parameter configuration."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.latency_matmul.kernel import matmul_tiled
+
+
+@dataclasses.dataclass(frozen=True)
+class MMConfig:
+    bm: int = 128
+    bn: int = 128
+    bk: int = 128
+
+    def vmem_bytes(self, in_bytes: int = 4) -> int:
+        return (
+            in_bytes * (self.bm * self.bk + self.bk * self.bn)
+            + 4 * self.bm * self.bn
+        )
+
+    def arithmetic_intensity(self, in_bytes: int = 2) -> float:
+        """MXU flops per HBM byte at this tiling."""
+        flops = 2 * self.bm * self.bn * self.bk
+        bytes_moved = in_bytes * (self.bm * self.bk + self.bk * self.bn)
+        return flops / bytes_moved
+
+
+WORST_CASE = MMConfig(128, 128, 128)
+
+#: Candidate profiles altune sweeps (the "reduced timing sets").
+CANDIDATES = (
+    WORST_CASE,
+    MMConfig(256, 256, 256),
+    MMConfig(512, 256, 256),
+    MMConfig(256, 512, 512),
+    MMConfig(512, 512, 512),
+    MMConfig(512, 512, 1024),
+)
+
+
+def _pad(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("config", "interpret"))
+def matmul(
+    x: jax.Array, y: jax.Array, config: MMConfig = WORST_CASE,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = x.shape
+    _, n = y.shape
+    xp = _pad(x, config.bm, config.bk)
+    yp = _pad(y, config.bk, config.bn)
+    out = matmul_tiled(
+        xp, yp, bm=config.bm, bn=config.bn, bk=config.bk, interpret=interpret
+    )
+    return out[:m, :n]

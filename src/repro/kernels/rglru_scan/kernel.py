@@ -1,0 +1,64 @@
+"""Pallas TPU kernel for the RG-LRU linear recurrence h_t = a_t·h_{t−1}+b_t.
+
+TPU adaptation of a GPU-style scan kernel (DESIGN.md §2): instead of a
+warp-level chunked scan, the recurrent state lives in VMEM scratch and the
+grid walks time blocks (innermost axis) while channels ride the VPU lanes —
+the sequential dependence is only along time, so each grid step processes a
+(bd-channel × bs-step) tile with a ``fori_loop`` over the bs steps, reading
+a_t/b_t tiles streamed HBM→VMEM once.
+
+Timing parameters: (bd, bs). WORST_CASE (256, 128) keeps the working set
+(3·bd·bs·4 B ≈ 384 KB) small; larger bs amortizes grid overhead when VMEM
+margin allows (altune decides).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, h_scr, *, bs: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)  # (1, bd)
+
+    a = a_ref[0].astype(jnp.float32)  # (bs, bd)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, carry):
+        h = carry
+        h = a[t][None] * h + b[t][None]
+        o_ref[0, t] = h[0].astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, bs, step, h_scr[...])
+    h_scr[...] = h
+
+
+def rglru_scan_tiled(
+    a: jax.Array, b: jax.Array, h0: jax.Array,
+    *, bd: int = 256, bs: int = 128, interpret: bool = False,
+) -> jax.Array:
+    """a, b: (B, S, D); h0: (B, D). D % bd == 0, S % bs == 0 (ops pads)."""
+    bsz, s, d = a.shape
+    assert d % bd == 0 and s % bs == 0, (d, bd, s, bs)
+    return pl.pallas_call(
+        functools.partial(_rglru_kernel, bs=bs),
+        grid=(bsz, d // bd, s // bs),
+        in_specs=[
+            pl.BlockSpec((1, bs, bd), lambda i, j, t: (i, t, j)),
+            pl.BlockSpec((1, bs, bd), lambda i, j, t: (i, t, j)),
+            pl.BlockSpec((1, bd), lambda i, j, t: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bd), lambda i, j, t: (i, t, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, d), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)

@@ -1,0 +1,44 @@
+"""jit'd wrapper for the RG-LRU scan kernel."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.kernel import rglru_scan_tiled
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanConfig:
+    bd: int = 256
+    bs: int = 128
+
+    def vmem_bytes(self) -> int:
+        return 4 * (3 * self.bd * self.bs + self.bd)
+
+
+WORST_CASE = ScanConfig(256, 128)
+CANDIDATES = (WORST_CASE, ScanConfig(512, 128), ScanConfig(512, 256),
+              ScanConfig(1024, 256))
+
+
+@functools.partial(jax.jit, static_argnames=("config", "interpret"))
+def rglru_scan(
+    a: jax.Array, b: jax.Array, h0: jax.Array,
+    config: ScanConfig = WORST_CASE, interpret: bool = False,
+) -> jax.Array:
+    bsz, s, d = a.shape
+    ps = (-s) % config.bs
+    pd = (-d) % config.bd
+    if ps or pd:
+        # Identity padding: a=1, b=0 keeps the state; pad channels inert.
+        a = jnp.pad(a, ((0, 0), (0, ps), (0, pd)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, ps), (0, pd)))
+        h0 = jnp.pad(h0, ((0, 0), (0, pd)))
+    out = rglru_scan_tiled(
+        a, b, h0, bd=config.bd, bs=config.bs, interpret=interpret
+    )
+    return out[:, :s, :d]

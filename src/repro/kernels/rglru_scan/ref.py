@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the RG-LRU scan: h_t = a_t·h_{t−1} + b_t."""
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+
+def rglru_scan(a: Array, b: Array, h0: Array) -> Array:
+    """a, b: (B, S, D) fp32; h0: (B, D). Returns h: (B, S, D)."""
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)

@@ -1,0 +1,147 @@
+"""Roofline-term extraction from compiled artifacts.
+
+XLA's ``cost_analysis`` counts ``scan``/while bodies ONCE (verified
+empirically — DESIGN.md §6), so whole-step numbers undercount by the trip
+counts. We therefore derive per-step totals compositionally:
+
+  train:  n_micro × [ n_groups × C(group fwd+bwd) + C(edges+embed+head+loss fwd+bwd) ]
+          + C(optimizer update)
+  decode: n_groups × C(group decode) + C(edges+embed+head)
+  prefill: n_groups × C(group fwd) + C(edges+embed+head)
+
+where C(f) = (flops, bytes, collective bytes) of a separately-lowered f
+under the same mesh/policy. Chunked attention / recurrent scans *inside* a
+group body are themselves scans; their trip counts are corrected
+analytically via known chunk counts (``_inner_scan_factor``).
+
+Collective bytes are parsed from the optimized HLO text: the shapes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+results, bucketed per op kind. cost_analysis is per-device (post-SPMD).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(\w+)\[([\d,]*)\][^ ]*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+# Tuple-result collectives: shapes inside the parens.
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of collective ops, per kind."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _TUPLE_RE.search(line)
+        if m:
+            kind = m.group(2)
+            total = sum(
+                _shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(m.group(1))
+            )
+            out[kind] = out.get(kind, 0) + total
+            continue
+        m = _COLL_RE.search(line)
+        if m and m.group(1):
+            kind = m.group(3)
+            out[kind] = out.get(kind, 0) + _shape_bytes(m.group(1), m.group(2))
+    return out
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(
+            self.flops * k, self.bytes * k,
+            {kk: v * k for kk, v in self.coll.items()},
+        )
+
+    def __add__(self, other: "Cost") -> "Cost":
+        coll = dict(self.coll)
+        for k, v in other.coll.items():
+            coll[k] = coll.get(k, 0.0) + v
+        return Cost(self.flops + other.flops, self.bytes + other.bytes, coll)
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+
+def cost_of(fn: Callable, *args, mesh=None, donate=None) -> Tuple[Cost, object]:
+    """Lower+compile ``fn`` on ShapeDtypeStruct args; return (Cost, compiled).
+
+    Per-device numbers (post-SPMD partitioning)."""
+    jitted = jax.jit(fn)
+    ctx = mesh or _NullCtx()
+    with ctx:
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return Cost(
+        flops=float(ca.get("flops", 0.0)),
+        bytes=float(ca.get("bytes accessed", 0.0)),
+        coll={k: float(v) for k, v in coll.items()},
+    ), compiled
+
+
+class _NullCtx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Hardware constants (TPU v5e target — the brief's roofline constants)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~per chip, one direction)
+
+
+def roofline_terms(cost: Cost, n_chips: int = 1) -> Dict[str, float]:
+    """cost is PER-DEVICE (post-SPMD), so terms are per-chip latencies."""
+    t_compute = cost.flops / PEAK_FLOPS
+    t_memory = cost.bytes / HBM_BW
+    t_coll = cost.coll_total / ICI_BW
+    dom = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": dom,
+        "step_lower_bound_s": max(t_compute, t_memory, t_coll),
+    }

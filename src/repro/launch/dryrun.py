@@ -1,0 +1,268 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder host devices form the production meshes
+((16,16) single-pod and (2,16,16) multi-pod); every applicable cell's
+step function must ``.lower().compile()`` under its policy, and we record
+
+  * ``memory_analysis()``   — per-device argument/temp bytes (fits?),
+  * ``cost_analysis()``     — per-device HLO flops/bytes (scan-body-once;
+                              cross-check for launch/analytic.py),
+  * collective ops parsed from the optimized HLO,
+  * the analytic roofline terms (§Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --cell train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+
+Results land in artifacts/dryrun/<mesh>/<arch>__<cell>.json.
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.launch import analytic, costing
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as lm
+from repro.parallel import policies
+from repro.parallel.sharding import param_specs, use_policy
+from repro.data import pipeline
+from repro.train import serve as serving
+from repro.train.step import init_train_state, make_train_step
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _sds(tree, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree, shardings,
+    )
+
+
+def _batch_shardings(cfg, batch_shapes, pol):
+    logical = {}
+    for k, v in batch_shapes.items():
+        if k in ("tokens", "labels"):
+            logical[k] = ("batch", None)
+        elif k == "embeds":
+            logical[k] = ("batch", None, None)
+        elif k == "positions":
+            logical[k] = (None, "batch", None)
+        elif k == "pos":
+            logical[k] = ()
+        else:
+            logical[k] = (None,) * v.ndim
+    return param_specs(logical, batch_shapes, pol)
+
+
+def run_cell(mesh, mesh_name: str, arch: str, cell_name: str) -> dict:
+    cfg = C.get(arch)
+    cell = C.SHAPES[cell_name]
+    t0 = time.time()
+    pol_all = policies.make_policy(
+        mesh, cfg, cell.kind, seq_len=cell.seq_len, global_batch=cell.global_batch
+    )
+    pol = pol_all.sharding
+    tc = pol_all.train
+    key = jax.random.PRNGKey(0)
+
+    if cell.kind == "train":
+        state_shapes = jax.eval_shape(
+            lambda k: init_train_state(k, cfg, tc), key
+        )
+        params_shapes, opt_shapes = state_shapes
+        pspecs = lm.logical_specs(params_shapes, cfg)
+        pshard = param_specs(pspecs, params_shapes, pol)
+        oshard = {
+            "m": param_specs(pspecs, opt_shapes["m"], pol),
+            "v": param_specs(pspecs, opt_shapes["v"], pol),
+            "step": param_specs(None, opt_shapes["step"], pol),
+        }
+        batch_shapes = pipeline.input_specs(cfg, cell.seq_len, cell.global_batch, "train")
+        bshard = _batch_shardings(cfg, batch_shapes, pol)
+        step_fn = make_train_step(cfg, tc)
+        args = (
+            _sds(params_shapes, pshard),
+            _sds(opt_shapes, oshard),
+            _sds(batch_shapes, bshard),
+        )
+    elif cell.kind == "prefill":
+        params_shapes = jax.eval_shape(lambda k: lm.init_params(k, cfg, jnp.bfloat16), key)
+        pspecs = lm.logical_specs(params_shapes, cfg)
+        pshard = param_specs(pspecs, params_shapes, pol)
+        sc = serving.ServeConfig(max_len=cell.seq_len)
+        batch_shapes = pipeline.input_specs(cfg, cell.seq_len, cell.global_batch, "prefill")
+        batch_shapes.pop("labels")
+        bshard = _batch_shardings(cfg, batch_shapes, pol)
+        step_fn = serving.make_prefill_step(cfg, sc)
+        args = (_sds(params_shapes, pshard), _sds(batch_shapes, bshard))
+    else:  # decode
+        params_shapes = jax.eval_shape(lambda k: lm.init_params(k, cfg, jnp.bfloat16), key)
+        pspecs = lm.logical_specs(params_shapes, cfg)
+        pshard = param_specs(pspecs, params_shapes, pol)
+        sc = serving.ServeConfig(max_len=cell.seq_len)
+        cache_shapes = jax.eval_shape(
+            lambda: serving.init_serve_cache(cfg, sc, cell.global_batch)
+        )
+        cspecs = lm.cache_logical_specs(cache_shapes, cfg)
+        cshard = param_specs(cspecs, cache_shapes, pol)
+        toks = jax.ShapeDtypeStruct(
+            (cell.global_batch, 1), jnp.int32,
+            sharding=pol.sharding(("batch", None) if pol.dividable(cell.global_batch, "batch") else (None, None)),
+        )
+        pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=pol.sharding(()))
+        dec = serving.make_decode_step(cfg, sc)
+
+        def step_fn(params, caches, tokens, pos):
+            nxt, logits, caches = dec(params, caches, tokens, pos)
+            return nxt, caches
+
+        args = (_sds(params_shapes, pshard), _sds(cache_shapes, cshard), toks, pos)
+
+    if cell.kind == "train":
+        donate = (0, 1)        # params + opt state round-trip in place
+    elif cell.kind == "decode":
+        donate = (1,)          # caches update in place
+    else:
+        donate = ()
+    with use_policy(pol), mesh:
+        lowered = jax.jit(step_fn, donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    coll = costing.collective_bytes(compiled.as_text())
+
+    flags = analytic.ExecFlags(
+        remat=(cell.kind == "train" and tc.remat),
+        chunk_len=cfg.chunk_len,
+    )
+    roof = analytic.cell_roofline(
+        cfg, arch, cell_name, cell.kind, cell.global_batch, cell.seq_len,
+        pol, tc, flags, chips=mesh.size, mesh_desc=mesh_name,
+    )
+
+    # TPU-accurate per-device memory from the real shardings (the CPU
+    # backend's memory_analysis legalizes bf16 compute to f32 and
+    # duplicates loop saves — DESIGN.md §6).
+    if cell.kind == "train":
+        state_bytes = analytic.tree_device_bytes(
+            params_shapes, pshard
+        ) + analytic.tree_device_bytes(opt_shapes["m"], oshard["m"]) + \
+            analytic.tree_device_bytes(opt_shapes["v"], oshard["v"])
+        amem = analytic.train_memory_model(
+            cfg, cell.global_batch, cell.seq_len, tc, pol, mesh, state_bytes
+        )
+    else:
+        state_bytes = analytic.tree_device_bytes(params_shapes, pshard)
+        cache_bytes = 0
+        if cell.kind == "decode":
+            cache_bytes = analytic.tree_device_bytes(cache_shapes, cshard)
+        amem = analytic.serve_memory_model(
+            cfg, cell.global_batch, cell.seq_len, cell.kind, pol, mesh,
+            state_bytes, cache_bytes,
+        )
+
+    result = {
+        "arch": arch,
+        "cell": cell_name,
+        "mesh": mesh_name,
+        "chips": mesh.size,
+        "ok": True,
+        "t_lower_s": round(t_lower, 2),
+        "t_compile_s": round(t_compile, 2),
+        "policy_notes": list(pol_all.notes),
+        "microbatches": tc.microbatches,
+        "memory": {
+            "argument_bytes_per_device": ma.argument_size_in_bytes,
+            "output_bytes_per_device": ma.output_size_in_bytes,
+            "temp_bytes_per_device": ma.temp_size_in_bytes,
+            "alias_bytes_per_device": ma.alias_size_in_bytes,
+            "total_per_device_gb": round(
+                (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                 + ma.output_size_in_bytes - ma.alias_size_in_bytes) / 2**30, 3,
+            ),
+            "fits_16gb": (
+                ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                + ma.output_size_in_bytes - ma.alias_size_in_bytes
+            ) <= 16 * 2**30,
+        },
+        "hlo_scan_once": {
+            "flops_per_device": ca.get("flops", 0.0),
+            "bytes_per_device": ca.get("bytes accessed", 0.0),
+            "collectives_bytes": coll,
+        },
+        "analytic_memory": amem,
+        "roofline": roof.as_dict(),
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single-pod-16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi-pod-2x16x16", make_production_mesh(multi_pod=True)))
+
+    archs = C.ARCH_IDS if (args.all or args.arch is None) else (args.arch,)
+    n_ok = n_fail = 0
+    for mesh_name, mesh in meshes:
+        outdir = ART / mesh_name
+        outdir.mkdir(parents=True, exist_ok=True)
+        for arch in archs:
+            cells = C.applicable_cells(arch)
+            if args.cell:
+                cells = [c for c in cells if c == args.cell]
+            for cell in cells:
+                tag = f"{arch}__{cell}"
+                try:
+                    res = run_cell(mesh, mesh_name, arch, cell)
+                    n_ok += 1
+                    mem = res["memory"]["total_per_device_gb"]
+                    roof = res["roofline"]
+                    print(
+                        f"[OK]   {mesh_name:18s} {tag:38s} mem/dev={mem:7.2f}GB "
+                        f"bottleneck={roof['bottleneck']:10s} "
+                        f"t=({roof['t_compute']:.2e},{roof['t_memory']:.2e},"
+                        f"{roof['t_collective']:.2e})s "
+                        f"compile={res['t_compile_s']:.1f}s",
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001
+                    n_fail += 1
+                    res = {
+                        "arch": arch, "cell": cell, "mesh": mesh_name, "ok": False,
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                    print(f"[FAIL] {mesh_name:18s} {tag:38s} {type(e).__name__}: {e}",
+                          flush=True)
+                (outdir / f"{tag}.json").write_text(json.dumps(res, indent=1))
+    print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Functions (not module-level constants) so importing never touches jax
+device state. Single pod: 256 chips as (data=16, model=16). Multi-pod: 2
+pods × 256 = 512 chips as (pod=2, data=16, model=16) — the ``pod`` axis
+maps onto the DCN dimension; policies keep only gradient/FSDP traffic on
+it (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for(devices_per_pod: int, n_pods: int = 1, model_parallel: int = 16):
+    """Elastic variant: arbitrary pod count/size (restart after pod loss)."""
+    data = devices_per_pod // model_parallel
+    if n_pods > 1:
+        return jax.make_mesh(
+            (n_pods, data, model_parallel), ("pod", "data", "model"),
+            axis_types=(AxisType.Auto,) * 3,
+        )
+    return jax.make_mesh(
+        (data, model_parallel), ("data", "model"), axis_types=(AxisType.Auto,) * 2
+    )

@@ -1,0 +1,148 @@
+"""End-to-end training driver.
+
+Wires every substrate together: config registry → parallelism policy →
+deterministic data pipeline → jitted microbatched train step → async
+checkpointing → fleet monitor + AL-DRAM adaptive fallback loop.
+
+On real hardware this runs under the production mesh; on this CPU
+container the reduced configs train a real model end-to-end
+(examples/train_smollm.py drives it for a few hundred steps).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+      --reduced --steps 200 --batch 8 --seq 128 [--ckpt-dir /tmp/ckpt]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.core.altune.runtime import AdaptiveExecutor, ConditionBins
+from repro.data.pipeline import DataConfig, batch_for_step
+from repro.ft import checkpoint as ckpt
+from repro.ft.monitor import FleetMonitor
+from repro.optim.adamw import OptConfig
+from repro.parallel import policies
+from repro.parallel.sharding import use_policy
+from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+
+def train(
+    arch: str,
+    steps: int = 200,
+    batch: int = 8,
+    seq: int = 128,
+    reduced: bool = True,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 100,
+    lr: float = 1e-3,
+    microbatches: int = 1,
+    mesh=None,
+    log_every: int = 10,
+):
+    cfg = C.reduced(arch) if reduced else C.get(arch)
+    tc = TrainConfig(
+        microbatches=microbatches,
+        opt=OptConfig(peak_lr=lr, warmup_steps=max(steps // 10, 1),
+                      total_steps=steps),
+    )
+    pol = None
+    if mesh is not None:
+        pol = policies.make_policy(mesh, cfg, "train", seq, batch).sharding
+
+    key = jax.random.PRNGKey(0)
+    params, opt_state = init_train_state(key, cfg, tc)
+    start_step = 0
+    if ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
+        state, start_step = ckpt.restore(
+            ckpt_dir, {"params": params, "opt": opt_state}
+        )
+        params, opt_state = state["params"], state["opt"]
+        print(f"[train] resumed from step {start_step}")
+
+    step_fn = jax.jit(make_train_step(cfg, tc), donate_argnums=(0, 1))
+    dc = DataConfig(seq_len=seq, global_batch=batch)
+    monitor = FleetMonitor()
+    host = f"host{jax.process_index()}"
+    # AL-DRAM loop: healthy bins run the tuned step; sustained slowness or
+    # an error fuse selects the conservative path (here: the same step fn —
+    # the hook is where kernel/config swaps land on real HW).
+    executor = AdaptiveExecutor(
+        configs_by_bin=["tuned", "tuned", "conservative"],
+        worst_case="conservative",
+        bins=ConditionBins(edges=(1.1, 1.3)),
+    )
+
+    pending_ckpt = None
+    losses = []
+    ctx = use_policy(pol)
+    with ctx:
+        for step in range(start_step, steps):
+            t0 = time.perf_counter()
+            data = {k: jnp.asarray(v) for k, v in batch_for_step(cfg, dc, step).items()}
+            params, opt_state, metrics = step_fn(params, opt_state, data)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            monitor.record_step(host, dt)
+            mode = executor.observe(host, monitor.load_of(host))
+
+            if float(metrics["skipped"]) > 0:
+                # Non-finite grads: fuse + restore (paper's error fallback).
+                monitor.record_error(host)
+                executor.report_error(host)
+                if ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
+                    state, _ = ckpt.restore(
+                        ckpt_dir, {"params": params, "opt": opt_state}
+                    )
+                    params, opt_state = state["params"], state["opt"]
+                    print(f"[train] step {step}: non-finite grads — restored")
+                    continue
+
+            losses.append(loss)
+            if step % log_every == 0:
+                print(
+                    f"[train] step {step:5d} loss {loss:8.4f} "
+                    f"gnorm {float(metrics['grad_norm']):8.3f} "
+                    f"lr {float(metrics['lr']):.2e} {dt*1e3:7.1f} ms mode={mode}"
+                )
+            if ckpt_dir and (step + 1) % ckpt_every == 0:
+                if pending_ckpt is not None:
+                    pending_ckpt.result()
+                pending_ckpt = ckpt.save_async(
+                    ckpt_dir, step + 1,
+                    {"params": params, "opt": opt_state},
+                    {"arch": cfg.name, "loss": loss},
+                )
+    if pending_ckpt is not None:
+        pending_ckpt.result()
+    return params, opt_state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+    _, _, losses = train(
+        args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
+        reduced=args.reduced, ckpt_dir=args.ckpt_dir, lr=args.lr,
+        microbatches=args.microbatches,
+    )
+    print(f"final loss: {losses[-1]:.4f} (start {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

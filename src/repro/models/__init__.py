@@ -1,0 +1,11 @@
+"""Model zoo substrate: one generic LM, ten architectures via ModelConfig."""
+
+from repro.models.config import MoEConfig, ModelConfig  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    lm_loss,
+    prefill,
+)

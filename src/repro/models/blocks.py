@@ -1,0 +1,448 @@
+"""Transformer building blocks: RMSNorm, GQA attention, gated FFNs.
+
+Attention comes in three executable forms:
+
+* ``chunked_attention`` — the production full-sequence path (train /
+  prefill): online-softmax over KV chunks via ``lax.scan``, so peak memory
+  is O(S·chunk) instead of O(S²). This is "FlashAttention in pure JAX" —
+  the same tiling the Pallas kernel (kernels/flash_attention.py) uses on
+  TPU; the scan keeps the lowered HLO small for the 512-device dry-run.
+* ``decode_attention`` — one-token step over a (possibly rolling) KV cache.
+* ``kernels.flash_attention.ref.naive_attention`` — the O(S²) oracle used
+  only by tests.
+
+All softmax/accumulation is fp32 regardless of the compute dtype.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.models.config import ModelConfig
+from repro.models.rope import apply_rope
+from repro.parallel.sharding import constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int) -> Dict[str, Array]:
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(params: Dict[str, Array], x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + params["scale"])
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def _init_dense(key: Array, shape: Tuple[int, ...], scale: float, dtype) -> Array:
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_attention(key: Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Array]:
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    scale_in = d**-0.5
+    scale_out = (h * dh) ** -0.5 / (2.0 * cfg.n_layers) ** 0.5
+    p = {
+        "wq": _init_dense(ks[0], (d, h * dh), scale_in, dtype),
+        "wk": _init_dense(ks[1], (d, hk * dh), scale_in, dtype),
+        "wv": _init_dense(ks[2], (d, hk * dh), scale_in, dtype),
+        "wo": _init_dense(ks[3], (h * dh, d), scale_out, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh)
+        p["k_norm"] = init_rmsnorm(dh)
+    return p
+
+
+def _qkv(p, x: Array, cfg: ModelConfig, positions, theta: float):
+    """Project + rope. Returns q (B,S,H,dh), k/v (B,S,Hk,dh)."""
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg, theta)
+    k = apply_rope(k, positions, cfg, theta)
+    return q, k, v
+
+
+def chunked_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    q_offset: Array | int = 0,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 256,
+) -> Array:
+    """Online-softmax attention, scanning KV chunks.
+
+    q: (B, Sq, H, dh); k, v: (B, Skv, Hk, dh) with H = G·Hk (GQA).
+    ``window > 0`` restricts to a sliding causal window.
+    Returns (B, Sq, H, dh).
+    """
+    b, sq, h, dh = q.shape
+    skv, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    chunk = min(chunk, skv)
+    if skv % chunk:  # pad KV to a chunk multiple; pads masked out below
+        pad = chunk - skv % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    skv_p = k.shape[1]
+    nck = skv_p // chunk
+    scale = dh**-0.5
+
+    # GQA via KV repetition to full heads: the head dim then carries the TP
+    # sharding uniformly through every einsum (SPMD-friendly — a G×Hk
+    # reshape would split the sharded axis).
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qh = q.astype(jnp.float32).transpose(0, 2, 1, 3)       # (B,H,Sq,dh)
+    qh = constrain(qh, ("batch", "heads", None, None))
+    kt = k.transpose(0, 2, 1, 3)                            # (B,H,Skv,dh)
+    vt = v.transpose(0, 2, 1, 3)
+    kt = constrain(kt, ("batch", "heads", None, None))
+    vt = constrain(vt, ("batch", "heads", None, None))
+    kc = kt.reshape(b, h, nck, chunk, dh).transpose(2, 0, 1, 3, 4)
+    vc = vt.reshape(b, h, nck, chunk, dh).transpose(2, 0, 1, 3, 4)
+
+    q_pos = jnp.arange(sq, dtype=jnp.int32) + q_offset  # (Sq,)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        ci, k_i, v_i = inputs
+        k_pos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        s = jnp.einsum(
+            "bhqd,bhcd->bhqc", qh, k_i.astype(jnp.float32)
+        ) * scale  # (B,H,Sq,C)
+        dpos = q_pos[:, None] - k_pos[None, :]  # (Sq, C)
+        mask = (k_pos < skv)[None, :]  # KV padding
+        if causal:
+            mask &= dpos >= 0
+        if window > 0:
+            mask &= dpos < window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqc,bhcd->bhqd", p, v_i.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (jnp.arange(nck), kc, vc)
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)
+
+
+def chunked_attention_skip(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    q_offset: int = 0,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 256,
+    static: bool = False,
+) -> Array:
+    """Block-skipping online-softmax attention (§Perf optimization).
+
+    Outer ``lax.scan`` over query chunks; inner ``fori_loop`` over only the
+    KV chunks each query chunk can see (causal upper bound, sliding-window
+    lower bound). Vs :func:`chunked_attention` this (a) halves executed
+    attention FLOPs for causal masks (~window/S of them for local layers),
+    and (b) keeps the (m, l, acc) accumulators at query-chunk size inside
+    the loop instead of carrying S-sized accumulators across every KV step
+    — the dominant HBM-carry term at 32k context.
+
+    Requires Sq % chunk == 0 (production shapes are powers of two; the
+    generic path remains the fallback).
+    """
+    b, sq, h, dh = q.shape
+    skv, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    if sq % chunk or skv % chunk:
+        return chunked_attention(
+            q, k, v, q_offset=q_offset, causal=causal, window=window,
+            chunk=chunk,
+        )
+    nq, nkv = sq // chunk, skv // chunk
+    scale = dh**-0.5
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qh = q.astype(jnp.float32).transpose(0, 2, 1, 3)  # (B,H,Sq,dh)
+    qh = constrain(qh, ("batch", "heads", None, None))
+    kt = constrain(k.transpose(0, 2, 1, 3), ("batch", "heads", None, None))
+    vt = constrain(v.transpose(0, 2, 1, 3), ("batch", "heads", None, None))
+    qc = qh.reshape(b, h, nq, chunk, dh).transpose(2, 0, 1, 3, 4)
+
+    def kv_update(carry, q_blk, q_pos, k_j, v_j, k_pos):
+        m, l, acc = carry
+        s = jnp.einsum("bhqd,bhcd->bhqc", q_blk, k_j) * scale
+        dpos = q_pos[:, None] - k_pos[None, :]
+        mask = jnp.ones_like(dpos, dtype=bool)
+        if causal:
+            mask &= dpos >= 0
+        if window > 0:
+            mask &= dpos < window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        return (
+            m_new,
+            l * corr + p.sum(axis=-1),
+            acc * corr[..., None] + jnp.einsum("bhqc,bhcd->bhqd", p, v_j),
+        )
+
+    def init_carry():
+        return (
+            jnp.full((b, h, chunk), NEG_INF, jnp.float32),
+            jnp.zeros((b, h, chunk), jnp.float32),
+            jnp.zeros((b, h, chunk, dh), jnp.float32),
+        )
+
+    def bounds(qi: int):
+        hi = min((q_offset + (qi + 1) * chunk + chunk - 1) // chunk, nkv) \
+            if causal else nkv
+        lo = max((q_offset + qi * chunk - window + 1) // chunk, 0) \
+            if window > 0 else 0
+        return lo, hi
+
+    if static:
+        # Differentiable form: Python loop over query chunks, each with a
+        # STATIC KV range scanned by lax.scan (reverse-mode works). HLO
+        # grows O(nq) — the training shapes (4k/chunk = 16) keep it small;
+        # long prefill uses the dynamic form below (no grads needed).
+        o_blocks = []
+        for qi in range(nq):
+            lo, hi = bounds(qi)
+            q_pos = q_offset + qi * chunk + jnp.arange(chunk, dtype=jnp.int32)
+            kc = kt[:, :, lo * chunk : hi * chunk].astype(jnp.float32)
+            vc = vt[:, :, lo * chunk : hi * chunk].astype(jnp.float32)
+            kc = kc.reshape(b, h, hi - lo, chunk, dh).transpose(2, 0, 1, 3, 4)
+            vc = vc.reshape(b, h, hi - lo, chunk, dh).transpose(2, 0, 1, 3, 4)
+
+            def body(carry, inp, q_pos=q_pos, lo=lo):
+                j, k_j, v_j = inp
+                k_pos = (lo + j) * chunk + jnp.arange(chunk, dtype=jnp.int32)
+                return kv_update(carry, qc[qi], q_pos, k_j, v_j, k_pos), None
+
+            (m, l, acc), _ = jax.lax.scan(
+                body, init_carry(), (jnp.arange(hi - lo), kc, vc)
+            )
+            o_blocks.append(
+                (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+            )
+        out = jnp.stack(o_blocks, axis=2).reshape(b, h, sq, dh)
+        return out.transpose(0, 2, 1, 3)
+
+    def q_body(_, inputs):
+        qi, q_blk = inputs  # q_blk: (B,H,Cq,dh)
+        q_pos = q_offset + qi * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        hi = jnp.minimum(
+            (q_offset + (qi + 1) * chunk + chunk - 1) // chunk, nkv
+        ) if causal else nkv
+        lo = jnp.maximum(
+            (q_offset + qi * chunk - window + 1) // chunk, 0
+        ) if window > 0 else 0
+
+        def kv_body(j, carry):
+            k_j = jax.lax.dynamic_slice(
+                kt, (0, 0, j * chunk, 0), (b, h, chunk, dh)
+            ).astype(jnp.float32)
+            v_j = jax.lax.dynamic_slice(
+                vt, (0, 0, j * chunk, 0), (b, h, chunk, dh)
+            ).astype(jnp.float32)
+            k_pos = j * chunk + jnp.arange(chunk, dtype=jnp.int32)
+            return kv_update(carry, q_blk, q_pos, k_j, v_j, k_pos)
+
+        m, l, acc = jax.lax.fori_loop(lo, hi, kv_body, init_carry())
+        o_blk = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, o_blk.astype(q.dtype)
+
+    _, o_blocks = jax.lax.scan(q_body, None, (jnp.arange(nq), qc))
+    out = o_blocks.transpose(1, 2, 0, 3, 4).reshape(b, h, sq, dh)
+    return out.transpose(0, 2, 1, 3)
+
+
+def attention_forward(
+    p: Dict[str, Array],
+    x: Array,
+    cfg: ModelConfig,
+    kind: str,
+    positions,
+    cache_len: int = 0,
+):
+    """Full-sequence attention sublayer body (no residual/norm).
+
+    ``cache_len > 0``: additionally return a KVCache of that length
+    (prefill). Local layers store the trailing window at rolling slots."""
+    theta = (
+        cfg.rope_theta_global
+        if (kind == "global" and cfg.rope_theta_global > 0)
+        else cfg.rope_theta
+    )
+    q, k, v = _qkv(p, x, cfg, positions, theta)
+    window = cfg.window if kind == "local" else 0
+    if cfg.attn_impl == "pallas":
+        # TPU hot path: the Pallas FA-2 kernel (interpret-mode on CPU).
+        import jax as _jax
+
+        from repro.kernels.flash_attention.ops import WORST_CASE, flash_attention
+
+        interpret = _jax.default_backend() != "tpu"
+        out = flash_attention(
+            q, k, v, causal=cfg.causal, window=window,
+            config=WORST_CASE, interpret=interpret,
+        )
+    elif cfg.attn_block_skip and (cfg.causal or window > 0):
+        # Training (cache_len == 0) needs reverse-mode → static KV bounds;
+        # prefill uses the dynamic-bounds form (no grads).
+        out = chunked_attention_skip(
+            q, k, v, causal=cfg.causal, window=window, chunk=cfg.chunk_len,
+            static=(cache_len == 0),
+        )
+    else:
+        out = chunked_attention(
+            q, k, v, causal=cfg.causal, window=window, chunk=cfg.chunk_len
+        )
+    b, s = x.shape[:2]
+    y = out.reshape(b, s, cfg.n_heads * cfg.d_head) @ p["wo"]
+    if cache_len == 0:
+        return y
+    length = min(cache_len, cfg.window) if kind == "local" else cache_len
+    buf_k = jnp.zeros((b, length, cfg.n_kv_heads, cfg.d_head), k.dtype)
+    buf_v = jnp.zeros_like(buf_k)
+    if kind == "local" and s > length:
+        tail_idx = jnp.arange(s - length, s) % length
+        buf_k = buf_k.at[:, tail_idx].set(k[:, s - length :])
+        buf_v = buf_v.at[:, tail_idx].set(v[:, s - length :])
+    else:
+        buf_k = jax.lax.dynamic_update_slice(buf_k, k[:, : min(s, length)], (0, 0, 0, 0))
+        buf_v = jax.lax.dynamic_update_slice(buf_v, v[:, : min(s, length)], (0, 0, 0, 0))
+    return y, KVCache(k=buf_k, v=buf_v)
+
+
+# -- decode ------------------------------------------------------------------
+class KVCache(NamedTuple):
+    """Per-layer KV cache. For ``local`` layers the buffer is the window
+    (rolling index, slot = pos % window); for ``global`` it is the maximum
+    context (slot = pos)."""
+
+    k: Array  # (B, L, Hk, dh)
+    v: Array
+
+
+def init_kv_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype) -> KVCache:
+    length = min(max_len, cfg.window) if kind == "local" else max_len
+    shape = (batch, length, cfg.n_kv_heads, cfg.d_head)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def decode_attention(
+    p: Dict[str, Array],
+    x: Array,
+    cache: KVCache,
+    pos: Array,
+    cfg: ModelConfig,
+    kind: str,
+) -> Tuple[Array, KVCache]:
+    """One-token attention step. x: (B, 1, d); pos: scalar int32 (tokens
+    already in the cache). Returns (y (B,1,d), updated cache)."""
+    theta = (
+        cfg.rope_theta_global
+        if (kind == "global" and cfg.rope_theta_global > 0)
+        else cfg.rope_theta
+    )
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.rope_variant == "mrope":
+        positions = jnp.broadcast_to(positions[None], (3, b, 1))
+    q, k1, v1 = _qkv(p, x, cfg, positions, theta)
+
+    length = cache.k.shape[1]
+    slot = pos % length if kind == "local" else pos
+    k_new = jax.lax.dynamic_update_slice(
+        cache.k, k1.astype(cache.k.dtype), (0, slot, 0, 0)
+    )
+    v_new = jax.lax.dynamic_update_slice(
+        cache.v, v1.astype(cache.v.dtype), (0, slot, 0, 0)
+    )
+
+    g = cfg.n_heads // cfg.n_kv_heads
+    k_use, v_use = k_new, v_new
+    if g > 1:  # repeat KV heads so the head dim carries TP uniformly
+        k_use = jnp.repeat(k_new, g, axis=2)
+        v_use = jnp.repeat(v_new, g, axis=2)
+    qh = q.astype(jnp.float32).reshape(b, cfg.n_heads, cfg.d_head)
+    qh = constrain(qh, ("batch", "heads", None))
+    s = jnp.einsum(
+        "bhd,blhd->bhl", qh, k_use.astype(jnp.float32)
+    ) * (cfg.d_head**-0.5)  # (B,H,L)
+
+    idx = jnp.arange(length, dtype=jnp.int32)
+    if kind == "local":
+        # Rolling buffer: valid slots are the last min(pos+1, L) writes.
+        age = (slot - idx) % length
+        valid = age <= jnp.minimum(pos, length - 1)
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhl,blhd->bhd", w, v_use.astype(jnp.float32))
+    out = out.reshape(b, 1, cfg.n_heads * cfg.d_head).astype(x.dtype)
+    return out @ p["wo"], KVCache(k=k_new, v=v_new)
+
+
+# ---------------------------------------------------------------------------
+# Gated FFN (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+def init_ffn(key: Array, cfg: ModelConfig, d_ff: int, dtype=jnp.float32) -> Dict[str, Array]:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    scale_in = d**-0.5
+    scale_out = d_ff**-0.5 / (2.0 * cfg.n_layers) ** 0.5
+    p = {
+        "w_up": _init_dense(ks[1], (d, d_ff), scale_in, dtype),
+        "w_down": _init_dense(ks[2], (d_ff, d), scale_out, dtype),
+    }
+    if cfg.ffn_variant != "gelu":  # gated variants need the third matrix
+        p["w_gate"] = _init_dense(ks[0], (d, d_ff), scale_in, dtype)
+    return p
+
+
+def ffn_forward(p: Dict[str, Array], x: Array, cfg: ModelConfig) -> Array:
+    if cfg.ffn_variant == "gelu":  # classic 2-matrix FFN (BERT/HuBERT)
+        return jax.nn.gelu(x @ p["w_up"], approximate=True) @ p["w_down"]
+    act = jax.nn.silu if cfg.ffn_variant == "swiglu" else (
+        lambda z: jax.nn.gelu(z, approximate=True)
+    )
+    return (act(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]

@@ -1,0 +1,259 @@
+"""LanguageModel: embed → pattern stack → norm → head, + loss and caches.
+
+One generic model serves all ten assigned architectures; the ModelConfig
+decides everything. Modality-stub archs (``embeds_input=True``: qwen2-vl
+patches, hubert frames) feed precomputed embeddings into the same stack.
+
+``logical_specs`` mirrors the parameter tree with logical sharding axes
+(see parallel/sharding.py); ``count_params_analytic`` derives exact (and
+MoE-active) parameter counts from ``jax.eval_shape`` — no allocation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.models import blocks, stack
+from repro.models.config import ModelConfig
+from repro.models.rope import default_positions
+from repro.parallel.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_params(key: Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    k_embed, k_stack, k_head = jax.random.split(key, 3)
+    p: Dict[str, Any] = {
+        "embed": (
+            jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model), jnp.float32)
+            * cfg.d_model**-0.5
+        ).astype(dtype),
+        "stack": stack.init_stack(k_stack, cfg, dtype),
+        "ln_f": blocks.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = blocks._init_dense(
+            k_head, (cfg.d_model, cfg.vocab_size), cfg.d_model**-0.5, dtype
+        )
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward / prefill / decode
+# ---------------------------------------------------------------------------
+def forward(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: Optional[Array] = None,
+    embeds: Optional[Array] = None,
+    positions=None,
+    mode: str = "forward",
+    caches: Optional[Dict] = None,
+    pos: Array | int = 0,
+    cache_len: int = 0,
+    remat: bool = True,
+) -> Tuple[Array, Array, Optional[Dict]]:
+    """Returns (logits, aux_loss, caches_out)."""
+    if embeds is not None:
+        # Match the residual-stream dtype the parameters imply (a bf16
+        # frontend feeding fp32 params would flip the scan carry dtype).
+        x = embeds.astype(params["embed"].dtype)
+        b, s = x.shape[:2]
+    else:
+        x = params["embed"][tokens]
+        b, s = tokens.shape
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    x = constrain(x, ("batch", None, None))
+    if positions is None:
+        offset = pos if mode == "decode" else 0
+        positions = default_positions(cfg, b, s, offset)
+
+    x, aux, caches_out = stack.apply_stack(
+        params["stack"], x, cfg, positions,
+        mode=mode, caches=caches, pos=pos, cache_len=cache_len, remat=remat,
+    )
+    x = blocks.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ head
+    logits = constrain(logits, ("batch", None, "vocab"))
+    return logits, aux, caches_out
+
+
+def prefill(params, cfg, cache_len: int, tokens=None, embeds=None):
+    """Full-sequence forward that also builds serving caches."""
+    return forward(
+        params, cfg, tokens=tokens, embeds=embeds,
+        mode="prefill", cache_len=cache_len, remat=False,
+    )
+
+
+def decode_step(params, cfg, caches: Dict, tokens: Array, pos: Array):
+    """One-token step. tokens: (B, 1) int32; pos: scalar int32 (number of
+    tokens already in the cache). Returns (logits (B,1,V), new caches)."""
+    logits, _, caches_out = forward(
+        params, cfg, tokens=tokens, mode="decode", caches=caches, pos=pos,
+        remat=False,
+    )
+    return logits, caches_out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    return stack.init_stack_cache(cfg, batch, max_len, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+def lm_loss(
+    params: Dict,
+    cfg: ModelConfig,
+    batch: Dict[str, Array],
+    aux_coef: float = 0.01,
+    z_coef: float = 1e-4,
+    remat: bool = True,
+) -> Tuple[Array, Dict[str, Array]]:
+    """Next-token cross entropy (fp32) + MoE aux + z-loss.
+
+    batch: {"tokens" | "embeds", "labels", optional "positions"}; labels
+    < 0 are masked out.
+    """
+    logits, aux, _ = forward(
+        params, cfg,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        positions=batch.get("positions"),
+        remat=remat,
+    )
+    labels = batch["labels"]
+    valid = (labels >= 0).astype(jnp.float32)
+    lab = jnp.maximum(labels, 0)
+
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    # Label pick via masked reduction: unlike take_along_axis, this keeps
+    # the vocab axis sharded (no cross-shard gather of the logits).
+    vocab_iota = jnp.arange(lf.shape[-1], dtype=labels.dtype)
+    picked = jnp.sum(
+        jnp.where(vocab_iota == lab[..., None], lf, 0.0), axis=-1
+    )
+    ce = (lse - picked) * valid
+    n = jnp.maximum(valid.sum(), 1.0)
+    ce_mean = ce.sum() / n
+    z_loss = z_coef * ((lse * valid) ** 2).sum() / n
+    loss = ce_mean + aux_coef * aux + z_loss
+    return loss, {"ce": ce_mean, "aux": aux, "z": z_loss, "tokens": n}
+
+
+# ---------------------------------------------------------------------------
+# Parameter counting (roofline's 6·N·D)
+# ---------------------------------------------------------------------------
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    shapes = jax.eval_shape(
+        lambda k: init_params(k, cfg, jnp.float32), jax.random.PRNGKey(0)
+    )
+    total = 0
+    routed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        size = int(functools.reduce(lambda a, b: a * b, leaf.shape, 1))
+        total += size
+        names = [getattr(k, "key", str(k)) for k in path]
+        # Routed expert weights: under "mix" with a leading n_experts dim
+        # (3-D after removing the group-stack axis).
+        if "mix" in names and names[-1] in ("w_gate", "w_up", "w_down"):
+            if leaf.ndim >= 3 and cfg.moe is not None and leaf.shape[-3] == cfg.moe.n_experts:
+                routed += size
+    if active_only and cfg.moe is not None:
+        total = total - routed + int(routed * cfg.moe.top_k / cfg.moe.n_experts)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Logical sharding specs
+# ---------------------------------------------------------------------------
+_RULES_2D = {
+    "wq": ("fsdp", "heads"), "wk": ("fsdp", "heads"), "wv": ("fsdp", "heads"),
+    "wo": ("heads", "fsdp"),
+    "w_gate": ("fsdp", "ff"), "w_up": ("fsdp", "ff"), "w_down": ("ff", "fsdp"),
+    "router": ("fsdp", None),
+    "w_gates": ("fsdp", None),
+    "w_x": ("fsdp", None),
+    "w_x_branch": ("fsdp", "state"), "w_gate_branch": ("fsdp", "state"),
+    "w_out": ("state", "fsdp"),
+    "conv": (None, "state"),
+    "embed": ("vocab", "fsdp"),
+    "head": ("fsdp", "vocab"),
+}
+_RULES_3D = {
+    "w_gate": ("experts", "fsdp", None),
+    "w_up": ("experts", "fsdp", None),
+    "w_down": ("experts", None, "fsdp"),
+    "r": ("heads", None, None),
+    "w_a": ("heads", None, None), "w_i": ("heads", None, None),
+}
+_RULES_1D = {
+    "lam": ("state",), "b_a": ("state",), "b_i": ("state",), "skip": ("ff",),
+}
+
+
+def _rule_for(name: str, base_ndim: int):
+    if base_ndim >= 3 and name in _RULES_3D:
+        return _RULES_3D[name]
+    if base_ndim == 2 and name in _RULES_2D:
+        return _RULES_2D[name]
+    if base_ndim == 1 and name in _RULES_1D:
+        return _RULES_1D[name]
+    return (None,) * base_ndim  # replicated (norm scales, biases, …)
+
+
+def logical_specs(params_shapes: Dict, cfg: ModelConfig) -> Dict:
+    """Same-structure tree of LogicalSpec tuples. Group-stacked leaves
+    (under stack["groups"]) get a leading None axis."""
+
+    def one(path, leaf):
+        names = [getattr(k, "key", str(k)) for k in path]
+        name = names[-1]
+        in_group = "groups" in names
+        base_ndim = leaf.ndim - (1 if in_group else 0)
+        rule = _rule_for(name, base_ndim)
+        return ((None,) + rule) if in_group else rule
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    return jax.tree_util.tree_unflatten(treedef, [one(p, l) for p, l in flat])
+
+
+#: Decode cache leaves, keyed by (field name, base ndim). KV caches try
+#: kv_heads first; when the kv-head count doesn't divide the TP axis the
+#: head_dim picks it up (physical() assigns each mesh axis at most once).
+_CACHE_RULES = {
+    ("k", 4): ("batch", None, "kv_heads", "head_dim"),
+    ("v", 4): ("batch", None, "kv_heads", "head_dim"),
+    ("c", 4): ("batch", "heads", None, None),   # mLSTM matrix memory
+    ("n", 3): ("batch", "heads", None),
+    ("m", 2): ("batch", "heads"),
+    ("c", 3): ("batch", "heads", None),          # sLSTM scalar state
+    ("n", 3): ("batch", "heads", None),          # noqa: F601 (shared)
+    ("h", 3): ("batch", "heads", None),
+    ("m", 3): ("batch", "heads", None),
+    ("conv", 3): ("batch", None, "state"),
+    ("h", 2): ("batch", "state"),                # RG-LRU state
+}
+
+
+def cache_logical_specs(cache_shapes: Dict, cfg: ModelConfig) -> Dict:
+    def one(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = names[-1]
+        in_group = "groups" in names
+        base_ndim = leaf.ndim - (1 if in_group else 0)
+        rule = _CACHE_RULES.get((name, base_ndim), (None,) * base_ndim)
+        return ((None,) + rule) if in_group else rule
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    return jax.tree_util.tree_unflatten(treedef, [one(p, l) for p, l in flat])

@@ -1,0 +1,207 @@
+"""Mixture-of-Experts channel mixer (DeepSeekMoE-style fine-grained experts).
+
+Design: shared experts + routed top-k with *sort-based, capacity-bounded
+dispatch* — the TPU-idiomatic formulation (static shapes, no ragged ops):
+
+1. router (fp32) → top-k experts per token, renormalized weights;
+2. flatten (token, k) assignments, stable-sort by expert id;
+3. per-expert positions from the sorted prefix; drop beyond capacity
+   ``C = ceil(T·k/E · capacity_factor)`` (dropped tokens keep the shared-
+   expert path and their residual — standard capacity semantics);
+4. scatter token ids into an (E, C) table (`.at[].set(mode="drop")`),
+   gather activations → (E, C, d), one batched einsum per weight matrix
+   (the grouped GEMM), weighted scatter-add back.
+
+Under the production mesh the (E, …) dimension is sharded over the
+``model`` axis (expert parallelism) and capacity rows over ``data``; the
+gather/scatter across the token↔expert resharding is where XLA inserts the
+all-to-all — visible in the dry-run HLO and driven down in §Perf.
+
+Shared experts are fused into a single dense FFN of width
+``n_shared · d_ff_expert`` (mathematically identical to summing them).
+
+The router also returns the standard load-balance auxiliary loss
+(mean-prob × token-fraction per expert, scaled by E).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.models import blocks
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import constrain
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    moe = cfg.moe
+    c = int(n_tokens * moe.top_k / moe.n_experts * moe.capacity_factor)
+    return max(_round_up(c, 128), 128)
+
+
+def init_moe(key: Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    moe = cfg.moe
+    d, f, e = cfg.d_model, moe.d_ff_expert, moe.n_experts
+    ks = jax.random.split(key, 5)
+    scale_in = d**-0.5
+    scale_out = f**-0.5 / (2.0 * cfg.n_layers) ** 0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e), jnp.float32) * scale_in),
+        "w_gate": blocks._init_dense(ks[1], (e, d, f), scale_in, dtype),
+        "w_up": blocks._init_dense(ks[2], (e, d, f), scale_in, dtype),
+        "w_down": blocks._init_dense(ks[3], (e, f, d), scale_out, dtype),
+    }
+    if moe.n_shared > 0:
+        p["shared"] = blocks.init_ffn(ks[4], cfg, moe.n_shared * f, dtype)
+    return p
+
+
+def route(
+    p: Dict, x_flat: Array, cfg: ModelConfig
+) -> Tuple[Array, Array, Array]:
+    """Top-k routing. Returns (weights (T,k) f32, experts (T,k) i32,
+    aux_loss scalar)."""
+    moe = cfg.moe
+    logits = x_flat.astype(jnp.float32) @ p["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, moe.top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # Load-balance aux loss (Switch/GShard): E · Σ_e f_e · P_e.
+    e = moe.n_experts
+    occupancy = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    frac = occupancy / jnp.maximum(occupancy.sum(), 1.0)
+    aux = e * jnp.sum(frac * probs.mean(0))
+    return w, idx, aux
+
+
+def _dispatch_compute_combine(
+    p_router, w_gate, w_up, w_down, x_flat: Array, cfg: ModelConfig,
+    e_lo: int, e_count: int,
+) -> Tuple[Array, Array]:
+    """Capacity-bounded dispatch → grouped GEMM → weighted combine for the
+    expert range [e_lo, e_lo+e_count). Pure local computation (no
+    collectives); returns (y_partial (T, d), aux)."""
+    moe = cfg.moe
+    t, d = x_flat.shape
+    k = moe.top_k
+
+    logits = x_flat.astype(jnp.float32) @ p_router
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    occupancy = jnp.zeros((moe.n_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    frac = occupancy / jnp.maximum(occupancy.sum(), 1.0)
+    aux = moe.n_experts * jnp.sum(frac * probs.mean(0))
+
+    # Keep only assignments to this rank's experts; E_loc is a drop bucket.
+    rel = idx - e_lo
+    in_range = (rel >= 0) & (rel < e_count)
+    e_flat = jnp.where(in_range, rel, e_count).reshape(t * k)
+    tok_flat = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    w_flat = jnp.where(in_range, w, 0.0).reshape(t * k)
+
+    cap = max(_round_up(int(t * k / moe.n_experts * moe.capacity_factor), 8), 8)
+
+    order = jnp.argsort(e_flat)  # stable
+    e_sorted = e_flat[order]
+    tok_sorted = tok_flat[order]
+    w_sorted = w_flat[order]
+    counts = jnp.zeros((e_count + 1,), jnp.int32).at[e_flat].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(t * k, dtype=jnp.int32) - starts[e_sorted]
+    oob = jnp.where((pos_in_e < cap) & (e_sorted < e_count), pos_in_e, cap)
+
+    tok_table = jnp.zeros((e_count, cap), jnp.int32).at[e_sorted, oob].set(
+        tok_sorted, mode="drop"
+    )
+    w_table = jnp.zeros((e_count, cap), jnp.float32).at[e_sorted, oob].set(
+        w_sorted, mode="drop"
+    )
+
+    gathered = x_flat[tok_table]  # (E_loc, C, d) — local gather
+    act = jax.nn.silu if cfg.ffn_variant == "swiglu" else (
+        lambda z: jax.nn.gelu(z, approximate=True)
+    )
+    hidden = act(jnp.einsum("ecd,edf->ecf", gathered, w_gate)) * jnp.einsum(
+        "ecd,edf->ecf", gathered, w_up
+    )
+    out = jnp.einsum("ecf,efd->ecd", hidden, w_down)  # (E_loc, C, d)
+    y = jnp.zeros((t, d), out.dtype).at[tok_table.reshape(-1)].add(
+        out.reshape(-1, d) * w_table.reshape(-1, 1).astype(out.dtype)
+    )
+    return y, aux
+
+
+def moe_forward(p: Dict, x: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
+    """x: (B, S, d) → (y, aux_loss).
+
+    Distribution: activations are replicated across the ``model`` axis (TP
+    convention), so expert parallelism needs **no all-to-all**: each model
+    rank runs dispatch→GEMM→combine for its own expert slice over its local
+    tokens, and the partial outputs are summed with one TP-style psum —
+    the same collective an FFN TP sublayer costs. (A naive pjit gather
+    formulation forces XLA to replicate the token buffer per device —
+    measured 5.25 GB/device for the 1T config vs ~50 MB this way.)
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import current_policy
+
+    moe = cfg.moe
+    b, s, d = x.shape
+    pol = current_policy()
+    ep = (
+        pol is not None
+        and "model" in pol.mesh.axis_names
+        and pol.mesh.shape["model"] > 1
+        and "model" in pol.rules.get("experts", ())
+        and moe.n_experts % pol.mesh.shape["model"] == 0
+    )
+
+    if not ep:
+        y, aux = _dispatch_compute_combine(
+            p["router"], p["w_gate"], p["w_up"], p["w_down"],
+            x.reshape(b * s, d), cfg, 0, moe.n_experts,
+        )
+        combined = y.reshape(b, s, d)
+    else:
+        mesh = pol.mesh
+        msize = mesh.shape["model"]
+        e_loc = moe.n_experts // msize
+        x_spec = pol.physical(("batch", None, None))
+        other = tuple(a for a in mesh.axis_names if a != "model")
+
+        def local_fn(router, wg, wu, wd, x_loc):
+            m = jax.lax.axis_index("model")
+            bl, sl, _ = x_loc.shape
+            y, aux = _dispatch_compute_combine(
+                router, wg, wu, wd, x_loc.reshape(bl * sl, d), cfg,
+                e_lo=m * e_loc, e_count=e_loc,
+            )
+            y = jax.lax.psum(y, "model")
+            aux = jax.lax.pmean(aux, other) if other else aux
+            aux = jax.lax.pmean(aux, "model")  # identical; makes spec P()
+            return y.reshape(bl, sl, d), aux
+
+        combined, aux = jax.shard_map(
+            local_fn, mesh=mesh,
+            in_specs=(
+                P(), P("model", None, None), P("model", None, None),
+                P("model", None, None), x_spec,
+            ),
+            out_specs=(x_spec, P()),
+            check_vma=False,
+        )(p["router"], p["w_gate"], p["w_up"], p["w_down"], x)
+
+    combined = constrain(combined, ("batch", None, None))
+    if moe.n_shared > 0:
+        combined = combined + blocks.ffn_forward(p["shared"], x, cfg)
+    return combined, aux

@@ -1,0 +1,161 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = σ(block_diag(W_a) x_t + b_a)          recurrence gate
+    i_t = σ(block_diag(W_x) x_t + b_x)          input gate
+    a_t = exp(−c · softplus(Λ) · r_t)           per-channel decay ∈ (0,1)
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the affine maps
+(a_t, b_t) — O(log S) depth, shardable over channels (the recurrence is
+elementwise, so the ``state`` channel dim parallelizes over the model axis).
+Decode is the one-step update. Gate matrices are block-diagonal with
+``n_heads`` blocks, as in the RecurrentGemma reference implementation.
+
+Block structure: pre-norm → dual linear branches (recurrent branch: causal
+depthwise conv4 → RG-LRU; gate branch: GeLU) → elementwise product → out
+projection. The channel mixer (FFN) is a separate sublayer (stack.py).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.models import blocks
+from repro.models.config import ModelConfig
+from repro.models.xlstm import _causal_conv
+
+
+class RGLRUCache(NamedTuple):
+    h: Array     # (B, dr) recurrent state (fp32)
+    conv: Array  # (B, W-1, dr) trailing conv inputs
+
+
+def _d_rnn(cfg: ModelConfig) -> int:
+    return cfg.d_model
+
+
+def init_rglru_block(key: Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d, dr = cfg.d_model, _d_rnn(cfg)
+    h = cfg.n_heads
+    drh = dr // h
+    ks = jax.random.split(key, 7)
+    s_in = d**-0.5
+    # Λ init so decays a^c span (0.9, 0.999) as in Griffin.
+    lam = jnp.log(jnp.expm1(-jnp.log(
+        jnp.linspace(0.9, 0.999, dr).astype(jnp.float32)
+    ) / cfg.rglru_c))
+    return {
+        "w_x_branch": blocks._init_dense(ks[0], (d, dr), s_in, dtype),
+        "w_gate_branch": blocks._init_dense(ks[1], (d, dr), s_in, dtype),
+        "conv": blocks._init_dense(ks[2], (cfg.conv_width, dr), 0.2, dtype),
+        "w_a": blocks._init_dense(ks[3], (h, drh, drh), drh**-0.5, jnp.float32),
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_i": blocks._init_dense(ks[4], (h, drh, drh), drh**-0.5, jnp.float32),
+        "b_i": jnp.zeros((dr,), jnp.float32),
+        "lam": lam,
+        "w_out": blocks._init_dense(
+            ks[5], (dr, d), dr**-0.5 / (2.0 * cfg.n_layers) ** 0.5, dtype
+        ),
+    }
+
+
+def _block_diag_linear(x: Array, w: Array, b: Array, n_heads: int) -> Array:
+    """x: (..., dr), w: (H, drh, drh) → (..., dr), fp32."""
+    shape = x.shape
+    drh = w.shape[1]
+    xh = x.astype(jnp.float32).reshape(shape[:-1] + (n_heads, drh))
+    y = jnp.einsum("...hd,hde->...he", xh, w)
+    return y.reshape(shape[:-1] + (n_heads * drh,)) + b
+
+
+def rglru_scan(
+    p: Dict, x: Array, cfg: ModelConfig, h0: Array
+) -> Tuple[Array, Array]:
+    """Associative scan of h_t = a_t h_{t−1} + b_t. x: (B,S,dr) conv output.
+    Returns (h (B,S,dr) fp32→x.dtype, final state (B,dr) fp32)."""
+    r = jax.nn.sigmoid(_block_diag_linear(x, p["w_a"], p["b_a"], cfg.n_heads))
+    i = jax.nn.sigmoid(_block_diag_linear(x, p["w_i"], p["b_i"], cfg.n_heads))
+    log_a = -cfg.rglru_c * jax.nn.softplus(p["lam"]) * r  # (B,S,dr) fp32
+    a = jnp.exp(log_a)
+    # √(1−a²) computed stably from log a.
+    beta = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12))
+    b = beta * (i * x.astype(jnp.float32))
+
+    # Fold the initial state into the first element.
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(prev, curr):
+        a_p, b_p = prev
+        a_c, b_c = curr
+        return a_p * a_c, b_p * a_c + b_c
+
+    a_s, h_s = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h_s.astype(x.dtype), h_s[:, -1]
+
+
+def rglru_step(p: Dict, x1: Array, cfg: ModelConfig, h_prev: Array) -> Tuple[Array, Array]:
+    """One-token update. x1: (B, dr); h_prev: (B, dr) fp32."""
+    r = jax.nn.sigmoid(_block_diag_linear(x1, p["w_a"], p["b_a"], cfg.n_heads))
+    i = jax.nn.sigmoid(_block_diag_linear(x1, p["w_i"], p["b_i"], cfg.n_heads))
+    log_a = -cfg.rglru_c * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12))
+    h_new = a * h_prev + beta * (i * x1.astype(jnp.float32))
+    return h_new.astype(x1.dtype), h_new
+
+
+def rglru_block_forward(
+    p: Dict, x: Array, cfg: ModelConfig,
+    cache: RGLRUCache | None = None, return_cache: bool = False,
+):
+    """Full-sequence forward. x: (B,S,d)."""
+    b, s, _ = x.shape
+    dr = _d_rnn(cfg)
+    xb = x @ p["w_x_branch"]
+    gate = jax.nn.gelu(x @ p["w_gate_branch"], approximate=True)
+    conv_prev = cache.conv if cache is not None else None
+    xc = _causal_conv(xb, p["conv"], conv_prev)
+    h0 = cache.h if cache is not None else jnp.zeros((b, dr), jnp.float32)
+    hseq, h_final = rglru_scan(p, xc, cfg, h0)
+    out = (hseq * gate) @ p["w_out"]
+    if return_cache:
+        new_conv = (
+            jnp.concatenate([conv_prev, xb], axis=1)[:, -(cfg.conv_width - 1):]
+            if conv_prev is not None
+            else xb[:, -(cfg.conv_width - 1):]
+        )
+        pad = cfg.conv_width - 1 - new_conv.shape[1]
+        if pad > 0:
+            new_conv = jnp.pad(new_conv, ((0, 0), (pad, 0), (0, 0)))
+        return out, RGLRUCache(h=h_final, conv=new_conv)
+    return out
+
+
+def rglru_block_step(
+    p: Dict, x1: Array, cfg: ModelConfig, cache: RGLRUCache
+) -> Tuple[Array, RGLRUCache]:
+    """One-token decode. x1: (B, 1, d)."""
+    xb = x1 @ p["w_x_branch"]  # (B,1,dr)
+    gate = jax.nn.gelu(x1 @ p["w_gate_branch"], approximate=True)
+    window = jnp.concatenate(
+        [cache.conv, xb.astype(cache.conv.dtype)], axis=1
+    )  # (B, W, dr)
+    w = p["conv"]
+    xc = sum(window[:, i] * w[i][None] for i in range(w.shape[0]))  # (B,dr)
+    h1, h_new = rglru_step(p, xc, cfg, cache.h)
+    out = (h1[:, None] * gate) @ p["w_out"]
+    return out, RGLRUCache(h=h_new, conv=window[:, 1:])
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> RGLRUCache:
+    dr = _d_rnn(cfg)
+    return RGLRUCache(
+        h=jnp.zeros((batch, dr), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, dr), dtype),
+    )

@@ -1,0 +1,77 @@
+"""Rotary position embeddings: full, half (ChatGLM 2d), M-RoPE (Qwen2-VL).
+
+All functions take ``positions`` of shape (..., S) (or (3, ..., S) for
+M-RoPE's temporal/height/width streams) and rotate the head dimension of
+``x`` with shape (..., S, H, D). Computations in fp32, cast back.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array
+
+from repro.models.config import ModelConfig
+
+
+def _rot_half_pairs(x: Array) -> Array:
+    """(…, 2k) → rotate pairs (x1,x2) → (−x2, x1), interleaved convention."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    return jnp.stack([-x2, x1], axis=-1).reshape(x.shape)
+
+
+def _angles(positions: Array, dim: int, theta: float) -> Array:
+    """(…, S) → (…, S, dim/2) rotation angles."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions.astype(jnp.float32)[..., None] * inv_freq
+
+
+def _apply(x: Array, ang: Array) -> Array:
+    """Rotate (…, S, H, D) by per-(…, S) angles (…, S, D/2)."""
+    cos = jnp.repeat(jnp.cos(ang), 2, axis=-1)[..., None, :]  # (…,S,1,D)
+    sin = jnp.repeat(jnp.sin(ang), 2, axis=-1)[..., None, :]
+    xf = x.astype(jnp.float32)
+    return (xf * cos + _rot_half_pairs(xf) * sin).astype(x.dtype)
+
+
+def apply_rope(x: Array, positions: Array, cfg: ModelConfig, theta: float | None = None) -> Array:
+    """Dispatch on cfg.rope_variant. x: (B, S, H, D); positions: (B, S) or
+    (3, B, S) for mrope."""
+    variant = cfg.rope_variant
+    th = float(theta if theta is not None else cfg.rope_theta)
+    d = x.shape[-1]
+    if variant == "none":
+        return x
+    if variant == "full":
+        return _apply(x, _angles(positions, d, th))
+    if variant == "half":
+        # ChatGLM 2d RoPE: rotate only the first half of the head dim.
+        dh = d // 2
+        rotated = _apply(x[..., :dh], _angles(positions, dh, th))
+        return jnp.concatenate([rotated, x[..., dh:]], axis=-1)
+    if variant == "mrope":
+        # M-RoPE: the D/2 frequency pairs are split into three sections
+        # rotated by temporal / height / width position streams.
+        assert positions.ndim == x.ndim - 1, "mrope needs (3, B, S) positions"
+        sec = cfg.mrope_sections
+        assert sum(sec) == d // 2, (sec, d)
+        ang_full = [
+            _angles(positions[i], d, th) for i in range(3)
+        ]  # each (B, S, D/2)
+        pieces = []
+        start = 0
+        for i, s in enumerate(sec):
+            pieces.append(ang_full[i][..., start : start + s])
+            start += s
+        ang = jnp.concatenate(pieces, axis=-1)
+        return _apply(x, ang)
+    raise ValueError(f"unknown rope variant {variant!r}")
+
+
+def default_positions(cfg: ModelConfig, batch: int, seq: int, offset: Array | int = 0):
+    """Integer position stream(s) for text input: (B, S) or (3, B, S)."""
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.rope_variant == "mrope":
+        return jnp.broadcast_to(pos[None], (3, batch, seq))
+    return pos

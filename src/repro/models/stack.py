@@ -1,0 +1,319 @@
+"""Layer-pattern stacking: scan over repeated groups + unrolled edges.
+
+The stack is ``prefix`` (first_k_dense layers, unrolled) + ``n_groups``
+repetitions of ``layer_pattern`` executed under a single ``jax.lax.scan``
+(parameters stacked over groups, one group per scan step) + ``suffix``
+(pattern remainder, unrolled). The lowered HLO is O(pattern length), not
+O(depth) — essential for compiling 61–80-layer models on a 512-device mesh.
+
+Three execution modes share the layer dispatch:
+  forward  — full sequence, no cache (training).
+  prefill  — full sequence, emits per-layer caches/states (serving).
+  decode   — one token against per-layer caches.
+
+Group bodies are wrapped in ``jax.checkpoint`` (full remat) for training;
+the policy is an argument so §Perf iterations can trade memory for compute.
+
+Aux losses (MoE load-balance) accumulate through the scan carry.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array, ad_checkpoint
+
+from repro.models import blocks, moe, rglru, xlstm
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import constrain
+
+ATTN_KINDS = ("global", "local")
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply
+# ---------------------------------------------------------------------------
+def init_layer(key: Array, cfg: ModelConfig, layer_idx: int, dtype) -> Dict:
+    kind = cfg.mixer_of(layer_idx)
+    ks = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"ln1": blocks.init_rmsnorm(cfg.d_model)}
+    if kind in ATTN_KINDS:
+        p["attn"] = blocks.init_attention(ks[0], cfg, dtype)
+    elif kind == "mlstm":
+        p["mlstm"] = xlstm.init_mlstm_block(ks[0], cfg, dtype)
+        return p  # self-contained block, no separate channel mixer
+    elif kind == "slstm":
+        p["slstm"] = xlstm.init_slstm_block(ks[0], cfg, dtype)
+        return p
+    elif kind == "rglru":
+        p["rglru"] = rglru.init_rglru_block(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if cfg.ffn_variant != "none":
+        p["ln2"] = blocks.init_rmsnorm(cfg.d_model)
+        if cfg.uses_moe(layer_idx):
+            p["mix"] = moe.init_moe(ks[1], cfg, dtype)
+        else:
+            p["mix"] = blocks.init_ffn(ks[1], cfg, cfg.d_ff, dtype)
+    return p
+
+
+def init_layer_cache(
+    cfg: ModelConfig, layer_idx: int, batch: int, max_len: int, dtype
+):
+    kind = cfg.mixer_of(layer_idx)
+    if kind in ATTN_KINDS:
+        return blocks.init_kv_cache(cfg, kind, batch, max_len, dtype)
+    if kind == "mlstm":
+        return xlstm.init_mlstm_cache(cfg, batch, dtype)
+    if kind == "slstm":
+        di = xlstm._d_inner_s(cfg)
+        return xlstm.slstm_zero_state(batch, cfg.n_heads, di // cfg.n_heads)
+    if kind == "rglru":
+        return rglru.init_rglru_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def apply_layer(
+    p: Dict,
+    x: Array,
+    cfg: ModelConfig,
+    kind: str,
+    use_moe: bool,
+    positions,
+    mode: str = "forward",
+    cache=None,
+    pos: Array | int = 0,
+    cache_len: int = 0,
+) -> Tuple[Array, Array, Any]:
+    """Returns (x, aux_loss, new_cache). new_cache is None in forward mode."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = None
+    h = blocks.rmsnorm(p["ln1"], x, cfg.norm_eps)
+
+    if kind in ATTN_KINDS:
+        if mode == "decode":
+            y, new_cache = blocks.decode_attention(p["attn"], h, cache, pos, cfg, kind)
+        elif mode == "prefill":
+            y, new_cache = blocks.attention_forward(
+                p["attn"], h, cfg, kind, positions, cache_len=cache_len
+            )
+        else:
+            y = blocks.attention_forward(p["attn"], h, cfg, kind, positions)
+    elif kind == "mlstm":
+        if mode == "decode":
+            y, new_cache = _mlstm_decode(p["mlstm"], h, cfg, cache)
+        elif mode == "prefill":
+            y, new_cache = xlstm.mlstm_block_forward(
+                p["mlstm"], h, cfg, cache=None, return_cache=True
+            )
+        else:
+            y = xlstm.mlstm_block_forward(p["mlstm"], h, cfg)
+        return x + y, aux, new_cache
+    elif kind == "slstm":
+        if mode == "decode":
+            y, new_cache = xlstm.slstm_block_forward(
+                p["slstm"], h, cfg, state=cache, return_cache=True
+            )
+        elif mode == "prefill":
+            y, new_cache = xlstm.slstm_block_forward(
+                p["slstm"], h, cfg, return_cache=True
+            )
+        else:
+            y = xlstm.slstm_block_forward(p["slstm"], h, cfg)
+        return x + y, aux, new_cache
+    elif kind == "rglru":
+        if mode == "decode":
+            y, new_cache = rglru.rglru_block_step(p["rglru"], h, cfg, cache)
+        elif mode == "prefill":
+            y, new_cache = rglru.rglru_block_forward(
+                p["rglru"], h, cfg, return_cache=True
+            )
+        else:
+            y = rglru.rglru_block_forward(p["rglru"], h, cfg)
+    else:
+        raise ValueError(kind)
+
+    x = x + y
+    x = constrain(x, ("batch", None, None))
+
+    if "mix" in p:
+        h2 = blocks.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if use_moe:
+            y2, aux = moe.moe_forward(p["mix"], h2, cfg)
+        else:
+            y2 = blocks.ffn_forward(p["mix"], h2, cfg)
+        x = x + y2
+        x = constrain(x, ("batch", None, None))
+    return x, aux, new_cache
+
+
+def _mlstm_decode(p, h, cfg, cache):
+    """One-token mLSTM via the sequential step."""
+    b = h.shape[0]
+    di, nh = xlstm._d_inner_m(cfg), cfg.n_heads
+    dh = di // nh
+    up = h @ p["w_up"]
+    xm, gate = jnp.split(up, 2, axis=-1)  # (B,1,di)
+    window = jnp.concatenate(
+        [cache.conv, xm.astype(cache.conv.dtype)], axis=1
+    )  # (B,W,di)
+    w = p["conv"]
+    xc = jax.nn.silu(sum(window[:, i] * w[i][None] for i in range(w.shape[0])))
+    q = (xc @ p["wq"]).reshape(b, nh, dh)
+    k = (xc @ p["wk"]).reshape(b, nh, dh) * (dh**-0.5)
+    v = (xm[:, 0] @ p["wv"]).reshape(b, nh, dh)
+    gates = xc.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]
+    i_log, f_raw = jnp.split(gates, 2, axis=-1)
+    f_log = jax.nn.log_sigmoid(f_raw)
+    state, hv = xlstm.mlstm_step(cache.state, q, k, v, i_log, f_log)
+    hflat = hv.reshape(b, 1, di).astype(h.dtype) + p["skip"] * xc[:, None]
+    out = (hflat * jax.nn.silu(gate)) @ p["w_down"]
+    return out, xlstm.MLSTMCache(state=state, conv=window[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# Stack init
+# ---------------------------------------------------------------------------
+def init_stack(key: Array, cfg: ModelConfig, dtype) -> Dict:
+    keys = jax.random.split(key, cfg.n_layers)
+    prefix = [init_layer(keys[i], cfg, i, dtype) for i in range(cfg.n_prefix)]
+    suffix_start = cfg.n_prefix + cfg.n_groups * cfg.pattern_len
+    suffix = [
+        init_layer(keys[i], cfg, i, dtype)
+        for i in range(suffix_start, cfg.n_layers)
+    ]
+    groups: Dict[str, Any] = {}
+    for pos_idx in range(cfg.pattern_len):
+        per_group = [
+            init_layer(keys[cfg.n_prefix + g * cfg.pattern_len + pos_idx], cfg,
+                       cfg.n_prefix + g * cfg.pattern_len + pos_idx, dtype)
+            for g in range(cfg.n_groups)
+        ]
+        groups[f"pos{pos_idx}"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *per_group
+        ) if cfg.n_groups > 1 else jax.tree.map(
+            lambda x: x[None], per_group[0]
+        )
+    return {"prefix": prefix, "groups": groups, "suffix": suffix}
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    def one(i):
+        return init_layer_cache(cfg, i, batch, max_len, dtype)
+
+    prefix = [one(i) for i in range(cfg.n_prefix)]
+    suffix_start = cfg.n_prefix + cfg.n_groups * cfg.pattern_len
+    suffix = [one(i) for i in range(suffix_start, cfg.n_layers)]
+    groups = {}
+    for pos_idx in range(cfg.pattern_len):
+        per_group = [
+            one(cfg.n_prefix + g * cfg.pattern_len + pos_idx)
+            for g in range(cfg.n_groups)
+        ]
+        groups[f"pos{pos_idx}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_group) \
+            if cfg.n_groups > 1 else jax.tree.map(lambda x: x[None], per_group[0])
+    return {"prefix": prefix, "groups": groups, "suffix": suffix}
+
+
+# ---------------------------------------------------------------------------
+# Stack apply
+# ---------------------------------------------------------------------------
+def apply_stack(
+    params: Dict,
+    x: Array,
+    cfg: ModelConfig,
+    positions,
+    mode: str = "forward",
+    caches: Optional[Dict] = None,
+    pos: Array | int = 0,
+    cache_len: int = 0,
+    remat: bool = True,
+) -> Tuple[Array, Array, Optional[Dict]]:
+    """Run the full stack. Returns (x, total_aux, new_caches|None)."""
+    total_aux = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {"prefix": [], "groups": None, "suffix": []}
+
+    def run_edge(p_list, c_list, x, aux, idx0, out_list):
+        for j, p in enumerate(p_list):
+            i = idx0 + j
+            kind = cfg.mixer_of(i)
+            c = c_list[j] if c_list is not None else None
+            x, a, nc = apply_layer(
+                p, x, cfg, kind, cfg.uses_moe(i), positions,
+                mode=mode, cache=c, pos=pos, cache_len=cache_len,
+            )
+            aux = aux + a
+            out_list.append(nc)
+        return x, aux
+
+    x, total_aux = run_edge(
+        params["prefix"],
+        caches["prefix"] if caches else None,
+        x, total_aux, 0, new_caches["prefix"],
+    )
+
+    if cfg.n_groups > 0:
+        first_group_layer = cfg.n_prefix
+
+        def group_body(carry, xs):
+            xg, aux = carry
+            gp, gc = xs
+            ncs = {}
+            for pos_idx, kind in enumerate(cfg.layer_pattern):
+                li = first_group_layer + pos_idx  # moe-ness is group-invariant
+                c = gc[f"pos{pos_idx}"] if gc is not None else None
+                xg, a, nc = apply_layer(
+                    gp[f"pos{pos_idx}"], xg, cfg, kind, cfg.uses_moe(li),
+                    positions, mode=mode, cache=c, pos=pos, cache_len=cache_len,
+                )
+                aux = aux + a
+                ncs[f"pos{pos_idx}"] = nc
+            return (xg, aux), (ncs if mode != "forward" else None)
+
+        if mode == "forward" and remat == "offload":
+            # Host-offloaded boundary saves: the scan carry is the only
+            # residual, and it is parked in pinned host memory — frees
+            # n_groups × microbatch-residual bytes of HBM, the lever that
+            # lets trillion-scale configs cut their microbatch count
+            # (EXPERIMENTS.md §Perf, kimi iteration 3).
+            pol = jax.checkpoint_policies.save_and_offload_only_these_names(
+                names_which_can_be_saved=[],
+                names_which_can_be_offloaded=["stack_carry"],
+                offload_src="device", offload_dst="pinned_host",
+            )
+
+            def named_body(carry, xs):
+                xg, aux = carry
+                xg = ad_checkpoint.checkpoint_name(xg, "stack_carry")
+                return group_body((xg, aux), xs)
+
+            body = jax.checkpoint(named_body, policy=pol)
+        elif mode == "forward" and remat:
+            body = jax.checkpoint(group_body)
+        else:
+            body = group_body
+        if caches is None:
+            def body_noc(carry, gp):
+                return body(carry, (gp, None))
+
+            (x, total_aux), group_caches = jax.lax.scan(
+                body_noc, (x, total_aux), params["groups"]
+            )
+        else:
+            (x, total_aux), group_caches = jax.lax.scan(
+                body, (x, total_aux), (params["groups"], caches["groups"])
+            )
+        new_caches["groups"] = group_caches
+
+    suffix_start = cfg.n_prefix + cfg.n_groups * cfg.pattern_len
+    x, total_aux = run_edge(
+        params["suffix"],
+        caches["suffix"] if caches else None,
+        x, total_aux, suffix_start, new_caches["suffix"],
+    )
+
+    return x, total_aux, (new_caches if mode != "forward" else None)

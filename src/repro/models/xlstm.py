@@ -1,0 +1,316 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and sequential sLSTM.
+
+mLSTM (matrix memory, exponential gating — arXiv:2405.04517):
+
+    C_t = f_t·C_{t−1} + i_t·k_t v_tᵀ      n_t = f_t·n_{t−1} + i_t·k_t
+    h_t = o_t ⊙ (C_tᵀ q_t) / max(|n_tᵀ q_t|, exp(−m_t))
+
+computed here in the *chunkwise* form: the sequence is split into chunks of
+``cfg.chunk_len``; within a chunk the quadratic (attention-like) form with
+log-space gate decays, between chunks a carried (C, n, m) state — O(S·L)
+memory, exact (up to fp) equivalence with the sequential recurrence, which
+``tests/test_xlstm.py`` asserts against a step-by-step reference.
+
+sLSTM (scalar memory, recurrent R per head) is inherently sequential →
+``lax.scan`` over time with the standard exponential-gate stabilizer m_t.
+
+Block wrappers follow the xLSTM paper: the mLSTM block is a gated
+up/down-projection sandwich (pf=2) with a causal conv4 front; the sLSTM
+block is followed by a gated MLP (pf=4/3). ``d_ff = 0`` in the arch config:
+these blocks own their projections.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.models import blocks
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM core
+# ---------------------------------------------------------------------------
+class MLSTMState(NamedTuple):
+    c: Array  # (B, H, dh, dh) matrix memory
+    n: Array  # (B, H, dh)     normalizer
+    m: Array  # (B, H)         log-space stabilizer
+
+
+def mlstm_zero_state(b: int, h: int, dh: int) -> MLSTMState:
+    return MLSTMState(
+        c=jnp.zeros((b, h, dh, dh), jnp.float32),
+        n=jnp.zeros((b, h, dh), jnp.float32),
+        m=jnp.full((b, h), -jnp.inf, jnp.float32),
+    )
+
+
+def mlstm_step(
+    state: MLSTMState, q: Array, k: Array, v: Array, i_log: Array, f_log: Array
+) -> Tuple[MLSTMState, Array]:
+    """Sequential reference step (also the decode path). q/k/v: (B,H,dh);
+    i_log/f_log: (B,H) log input gate / log forget gate."""
+    c, n, m = state
+    m_new = jnp.maximum(f_log + m, i_log)
+    f_s = jnp.exp(f_log + m - m_new)[..., None]
+    i_s = jnp.exp(i_log - m_new)[..., None]
+    c_new = f_s[..., None] * c + (i_s * k)[..., :, None] * v[..., None, :]
+    n_new = f_s * n + i_s * k
+    num = jnp.einsum("bhde,bhd->bhe", c_new, q)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q))
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return MLSTMState(c_new, n_new, m_new), h
+
+
+def mlstm_chunked(
+    q: Array, k: Array, v: Array, i_log: Array, f_log: Array,
+    state: MLSTMState, chunk: int
+) -> Tuple[Array, MLSTMState]:
+    """Chunkwise-parallel mLSTM. q/k/v: (B,S,H,dh) — k pre-scaled by caller;
+    gates (B,S,H). Returns (h (B,S,H,dh), final state)."""
+    b, s, h, dh = q.shape
+    chunk = min(chunk, s)
+    s_orig = s
+    if s % chunk:
+        # Pad with identity gates: f=1 (log 0) keeps the state, i=0
+        # (log −inf) adds nothing; padded outputs are sliced off below.
+        pad = chunk - s % chunk
+        zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(z, zpad) for z in (q, k, v))
+        i_log = jnp.pad(i_log, ((0, 0), (0, pad), (0, 0)), constant_values=NEG_INF)
+        f_log = jnp.pad(f_log, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+
+    def to_chunks(x, extra: int):
+        x = jnp.moveaxis(x, 2, 1)  # (B,H,S,...)
+        shape = (b, h, nc, chunk) + x.shape[3:]
+        return jnp.moveaxis(x.reshape(shape), 2, 0)  # (nc,B,H,L,...)
+
+    qc, kc, vc = to_chunks(q, 1), to_chunks(k, 1), to_chunks(v, 1)
+    ic, fc = to_chunks(i_log[..., None], 0)[..., 0], to_chunks(f_log[..., None], 0)[..., 0]
+
+    def body(carry: MLSTMState, xs):
+        c_prev, n_prev, m_prev = carry
+        qi, ki, vi, ii, fi = xs  # (B,H,L,dh) / (B,H,L)
+        qi32, ki32, vi32 = (z.astype(jnp.float32) for z in (qi, ki, vi))
+        bcum = jnp.cumsum(fi, axis=-1)  # inclusive Σ log f
+        total_f = bcum[..., -1]
+
+        # Intra-chunk log decay matrix: D[i,j] = b_i − b_j + log i_j, j ≤ i.
+        log_d = bcum[..., :, None] - bcum[..., None, :] + ii[..., None, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        log_d = jnp.where(tri, log_d, NEG_INF)
+
+        # Inter-chunk contribution decays by b_i from the carried state.
+        inter_log = bcum + m_prev[..., None]  # (B,H,L)
+        m_row = jnp.maximum(log_d.max(-1), inter_log)
+
+        d = jnp.exp(log_d - m_row[..., None])
+        scores = jnp.einsum("bhld,bhmd->bhlm", qi32, ki32) * d
+        inter_w = jnp.exp(inter_log - m_row)[..., None]  # (B,H,L,1)
+
+        num = jnp.einsum("bhlm,bhmd->bhld", scores, vi32) + inter_w * jnp.einsum(
+            "bhde,bhld->bhle", c_prev, qi32
+        )
+        den = jnp.abs(
+            scores.sum(-1) + inter_w[..., 0] * jnp.einsum("bhd,bhld->bhl", n_prev, qi32)
+        )
+        hi = num / jnp.maximum(den, jnp.exp(-m_row))[..., None]
+
+        # State update to end of chunk.
+        upd_log = total_f[..., None] - bcum + ii  # (B,H,L)
+        m_new = jnp.maximum(total_f + m_prev, upd_log.max(-1))
+        carry_w = jnp.exp(total_f + m_prev - m_new)
+        upd_w = jnp.exp(upd_log - m_new[..., None])
+        c_new = carry_w[..., None, None] * c_prev + jnp.einsum(
+            "bhld,bhle,bhl->bhde", ki32, vi32, upd_w
+        )
+        n_new = carry_w[..., None] * n_prev + jnp.einsum("bhld,bhl->bhd", ki32, upd_w)
+        return MLSTMState(c_new, n_new, m_new), hi
+
+    final, hs = jax.lax.scan(body, state, (qc, kc, vc, ic, fc))
+    h_out = jnp.moveaxis(jnp.moveaxis(hs, 0, 2), 1, 3)  # → (B, nc, L, H, dh)
+    h_out = h_out.reshape(b, s, h, dh)[:, :s_orig]
+    return h_out.astype(q.dtype), final
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (pf=2 up/down sandwich, conv4, per-head gates)
+# ---------------------------------------------------------------------------
+class MLSTMCache(NamedTuple):
+    state: MLSTMState
+    conv: Array  # (B, conv_width-1, d_inner) trailing inputs
+
+
+def _d_inner_m(cfg: ModelConfig) -> int:
+    return int(cfg.d_model * cfg.mlstm_proj_factor)
+
+
+def init_mlstm_block(key: Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d, di = cfg.d_model, _d_inner_m(cfg)
+    h = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    s_in, s_i = d**-0.5, di**-0.5
+    return {
+        "w_up": blocks._init_dense(ks[0], (d, 2 * di), s_in, dtype),
+        "conv": blocks._init_dense(ks[1], (cfg.conv_width, di), 0.2, dtype),
+        "wq": blocks._init_dense(ks[2], (di, di), s_i, dtype),
+        "wk": blocks._init_dense(ks[3], (di, di), s_i, dtype),
+        "wv": blocks._init_dense(ks[4], (di, di), s_i, dtype),
+        "w_gates": jax.random.normal(ks[5], (di, 2 * h), jnp.float32) * s_i,
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((h,), jnp.float32), 3.0 + jnp.arange(h, dtype=jnp.float32) / h]
+        ),
+        "skip": jnp.ones((di,), dtype),
+        "w_down": blocks._init_dense(
+            ks[6], (di, d), s_i / (2.0 * cfg.n_layers) ** 0.5, dtype
+        ),
+    }
+
+
+def _causal_conv(x: Array, w: Array, prev: Array | None = None) -> Array:
+    """Depthwise causal conv. x: (B,S,di), w: (W,di); prev: (B,W-1,di)."""
+    width = w.shape[0]
+    pad = prev if prev is not None else jnp.zeros(
+        (x.shape[0], width - 1, x.shape[2]), x.dtype
+    )
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(width)
+    )
+    return out
+
+
+def mlstm_block_forward(
+    p: Dict, x: Array, cfg: ModelConfig,
+    cache: MLSTMCache | None = None, return_cache: bool = False,
+):
+    b, s, d = x.shape
+    di, h = _d_inner_m(cfg), cfg.n_heads
+    dh = di // h
+    up = x @ p["w_up"]
+    xm, gate = jnp.split(up, 2, axis=-1)
+    conv_prev = cache.conv if cache is not None else None
+    xc = jax.nn.silu(_causal_conv(xm, p["conv"], conv_prev))
+
+    q = (xc @ p["wq"]).reshape(b, s, h, dh)
+    k = (xc @ p["wk"]).reshape(b, s, h, dh) * (dh**-0.5)
+    v = (xm @ p["wv"]).reshape(b, s, h, dh)
+    gates = xc.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]  # (B,S,2H)
+    i_log, f_raw = jnp.split(gates, 2, axis=-1)
+    f_log = jax.nn.log_sigmoid(f_raw)
+
+    state = cache.state if cache is not None else mlstm_zero_state(b, h, dh)
+    hseq, final = mlstm_chunked(q, k, v, i_log, f_log, state, cfg.chunk_len)
+    hflat = hseq.reshape(b, s, di) + p["skip"] * xc
+    out = (hflat * jax.nn.silu(gate)) @ p["w_down"]
+    if return_cache:
+        new_conv = (
+            jnp.concatenate([conv_prev, xm], axis=1)[:, -(cfg.conv_width - 1):]
+            if conv_prev is not None
+            else xm[:, -(cfg.conv_width - 1):]
+        )
+        # Left-pad if the sequence was shorter than the conv window.
+        pad = cfg.conv_width - 1 - new_conv.shape[1]
+        if pad > 0:
+            new_conv = jnp.pad(new_conv, ((0, 0), (pad, 0), (0, 0)))
+        return out, MLSTMCache(state=final, conv=new_conv)
+    return out
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype) -> MLSTMCache:
+    di, h = _d_inner_m(cfg), cfg.n_heads
+    return MLSTMCache(
+        state=mlstm_zero_state(batch, h, di // h),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, di), dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+class SLSTMState(NamedTuple):
+    c: Array  # (B, H, dh)
+    n: Array
+    h: Array
+    m: Array  # (B, H, dh) stabilizer
+
+
+def _d_inner_s(cfg: ModelConfig) -> int:
+    return cfg.d_model
+
+
+def init_slstm_block(key: Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d = _d_inner_s(cfg)
+    h = cfg.n_heads
+    dh = d // h
+    dff = int(cfg.d_model * cfg.slstm_proj_factor)
+    ks = jax.random.split(key, 5)
+    s_in = d**-0.5
+    return {
+        "w_x": blocks._init_dense(ks[0], (d, 4 * d), s_in, dtype),
+        "r": blocks._init_dense(ks[1], (h, dh, 4 * dh), dh**-0.5, dtype),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "gn": blocks.init_rmsnorm(d),
+        "w_up": blocks._init_dense(ks[2], (d, 2 * dff), s_in, dtype),
+        "w_down": blocks._init_dense(
+            ks[3], (dff, d), dff**-0.5 / (2.0 * cfg.n_layers) ** 0.5, dtype
+        ),
+    }
+
+
+def slstm_zero_state(b: int, h: int, dh: int) -> SLSTMState:
+    z = jnp.zeros((b, h, dh), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((b, h, dh), -jnp.inf, jnp.float32))
+
+
+def slstm_scan(
+    p: Dict, x: Array, cfg: ModelConfig, state: SLSTMState
+) -> Tuple[Array, SLSTMState]:
+    """x: (B,S,d) pre-activation inputs. Sequential lax.scan over time."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    zx = (x @ p["w_x"] + p["b"]).astype(jnp.float32)  # (B,S,4d)
+    zx = jnp.moveaxis(zx.reshape(b, s, 4, h, dh), 1, 0)  # (S,B,4,H,dh)
+
+    r = p["r"].astype(jnp.float32)
+
+    def step(st: SLSTMState, z_t):
+        rec = jnp.einsum("bhd,hde->bhe", st.h, r).reshape(b, h, 4, dh)
+        rec = jnp.moveaxis(rec, 2, 1)  # (B,4,H,dh)
+        zi, zf, zz, zo = [z_t[:, i] + rec[:, i] for i in range(4)]
+        m_new = jnp.maximum(zf + st.m, zi)
+        i_s = jnp.exp(zi - m_new)
+        f_s = jnp.exp(zf + st.m - m_new)
+        c_new = f_s * st.c + i_s * jnp.tanh(zz)
+        n_new = f_s * st.n + i_s
+        h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1.0)
+        return SLSTMState(c_new, n_new, h_new, m_new), h_new
+
+    final, hs = jax.lax.scan(step, state, zx)
+    out = jnp.moveaxis(hs, 0, 1).reshape(b, s, d)
+    return out.astype(x.dtype), final
+
+
+def slstm_block_forward(
+    p: Dict, x: Array, cfg: ModelConfig,
+    state: SLSTMState | None = None, return_cache: bool = False,
+):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    st = state if state is not None else slstm_zero_state(b, h, d // h)
+    y, final = slstm_scan(p, x, cfg, st)
+    y = blocks.rmsnorm(p["gn"], y, cfg.norm_eps)
+    up_gate, up = jnp.split(y @ p["w_up"], 2, axis=-1)
+    out = (jax.nn.gelu(up_gate, approximate=True) * up) @ p["w_down"]
+    if return_cache:
+        return out, final
+    return out

@@ -1,0 +1,95 @@
+"""AdamW with global-norm clipping, warmup+cosine schedule, and
+configurable optimizer-state dtype (bf16 states for the 1T-param arch —
+DESIGN.md §5). Functional: state is a pytree mirroring params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 2000
+    total_steps: int = 100_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"  # "bfloat16" for the trillion-param arch
+
+
+def schedule(cfg: OptConfig, step: Array) -> Array:
+    """Linear warmup → cosine decay to min_lr_ratio·peak."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    t = jnp.clip(
+        (s - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.peak_lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params, cfg: OptConfig) -> Dict:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def _decayable(path) -> bool:
+    """No weight decay on norms/biases/gates (1-D leaves)."""
+    return True  # decided per-leaf by ndim below
+
+
+def apply_updates(
+    params, grads, state: Dict, cfg: OptConfig
+) -> Tuple[Dict, Dict, Dict[str, Array]]:
+    """One AdamW step. Returns (params, state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+        u = (m32 / c1) / (jnp.sqrt(v32 / c2) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * u
+        return p_new.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return (
+        new_params,
+        {"m": new_m, "v": new_v, "step": step},
+        {"grad_norm": gnorm, "lr": lr, "clip_scale": scale},
+    )

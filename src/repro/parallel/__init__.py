@@ -1,0 +1,11 @@
+"""Distribution: logical-axis sharding policies over the (pod, data, model)
+production mesh."""
+
+from repro.parallel.sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    ShardingPolicy,
+    constrain,
+    current_policy,
+    param_specs,
+    use_policy,
+)

@@ -1,0 +1,144 @@
+"""Logical-axis sharding: models annotate, policies map to mesh axes.
+
+Model code never mentions mesh axes. It calls ``constrain(x, ("batch",
+"seq", None))`` with *logical* names; the active :class:`ShardingPolicy`
+(installed by the launcher via ``use_policy``) maps logical names to
+physical mesh axes of the (pod, data, model) production mesh and applies
+``jax.lax.with_sharding_constraint``. With no active policy (unit tests,
+single-device smoke runs) ``constrain`` is a no-op, so the same model code
+runs everywhere.
+
+Parameter shardings are produced by :func:`param_specs` from the logical
+spec tree that ``models.model.init_params``'s ``logical_specs`` mirror
+provides.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LogicalAxis = Optional[str]
+LogicalSpec = Tuple[LogicalAxis, ...]
+
+#: Default logical → mesh-axis table ("fsdp" resolves to the data axis;
+#: "dp" to (pod, data) batch sharding; entries absent → replicated).
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),       # activation batch
+    "seq": (),                      # sequence (SP policies override)
+    "heads": ("model",),            # attention heads (TP)
+    "kv_heads": ("model",),         # KV heads when divisible (TP)
+    "ff": ("model",),               # FFN hidden (TP)
+    "d_model": (),                  # residual stream dim
+    "vocab": ("model",),            # embedding/vocab (TP)
+    "experts": ("model",),          # MoE experts (EP)
+    "expert_cap": ("data",),        # MoE capacity rows
+    "fsdp": ("data",),              # ZeRO-3 parameter shard axis
+    "state": ("model",),            # recurrent state channels
+    "head_dim": ("model",),         # KV-cache fallback when kv_heads < TP
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """A resolved logical→physical mapping for a specific mesh."""
+
+    mesh: Mesh
+    rules: Dict[str, Tuple[str, ...]]
+
+    def physical(self, spec: LogicalSpec) -> P:
+        axes = []
+        used = set()
+        for name in spec:
+            if name is None:
+                axes.append(None)
+                continue
+            phys = tuple(
+                a for a in self.rules.get(name, ())
+                if a in self.mesh.axis_names and a not in used
+            )
+            used.update(phys)
+            if len(phys) == 0:
+                axes.append(None)
+            elif len(phys) == 1:
+                axes.append(phys[0])
+            else:
+                axes.append(phys)
+        return P(*axes)
+
+    def sharding(self, spec: LogicalSpec) -> NamedSharding:
+        return NamedSharding(self.mesh, self.physical(spec))
+
+    def dividable(self, dim: int, name: LogicalAxis) -> bool:
+        """Can a dimension of this size be sharded under this rule?"""
+        if name is None:
+            return True
+        size = 1
+        for a in self.rules.get(name, ()):
+            if a in self.mesh.axis_names:
+                size *= self.mesh.shape[a]
+        return dim % size == 0
+
+
+_tls = threading.local()
+
+
+def current_policy() -> Optional[ShardingPolicy]:
+    return getattr(_tls, "policy", None)
+
+
+@contextlib.contextmanager
+def use_policy(policy: Optional[ShardingPolicy]):
+    prev = current_policy()
+    _tls.policy = policy
+    try:
+        yield policy
+    finally:
+        _tls.policy = prev
+
+
+def constrain(x: jax.Array, spec: LogicalSpec) -> jax.Array:
+    """Apply a logical sharding constraint if a policy is active.
+
+    Logical axes whose size does not divide the mapped mesh axes degrade to
+    replicated (small models on big meshes must still compile — the AL-DRAM
+    "worst-case always works" posture).
+    """
+    pol = current_policy()
+    if pol is None:
+        return x
+    fixed = tuple(
+        name if pol.dividable(x.shape[i], name) else None
+        for i, name in enumerate(spec)
+    )
+    return jax.lax.with_sharding_constraint(x, pol.sharding(fixed))
+
+
+def _is_spec_leaf(x) -> bool:
+    return x is None or (
+        isinstance(x, tuple) and all(e is None or isinstance(e, str) for e in x)
+    )
+
+
+def param_specs(specs_tree, shaped_tree, policy: ShardingPolicy):
+    """Zip a pytree of LogicalSpec tuples with same-structure shaped leaves
+    (arrays or ShapeDtypeStructs) into NamedShardings, degrading
+    non-dividable axes to replicated."""
+
+    def one(spec, shaped):
+        if spec is None:
+            return NamedSharding(policy.mesh, P())
+        shape = shaped.shape
+        assert len(spec) == len(shape), (spec, shape)
+        fixed = tuple(
+            name if policy.dividable(shape[i], name) else None
+            for i, name in enumerate(spec)
+        )
+        return policy.sharding(fixed)
+
+    return jax.tree.map(one, specs_tree, shaped_tree, is_leaf=_is_spec_leaf)

@@ -1,0 +1,59 @@
+"""Serving steps: batched prefill and single-token decode.
+
+``make_prefill_step`` / ``make_decode_step`` return pure functions for
+``jax.jit`` under a mesh. The decode step is the unit the ``decode_32k``
+and ``long_500k`` dry-run cells lower: one new token against a KV/state
+cache of the cell's sequence length.
+
+Sampling is greedy/temperature on fp32 logits; serving drivers loop the
+decode step (examples/serve_smollm.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.models import model as lm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 4096
+    temperature: float = 0.0  # 0 → greedy
+    cache_dtype: str = "bfloat16"
+
+
+def make_prefill_step(cfg: ModelConfig, sc: ServeConfig):
+    def prefill_step(params, batch: Dict[str, Array]):
+        logits, _, caches = lm.prefill(
+            params, cfg, cache_len=sc.max_len,
+            tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+        )
+        return logits[:, -1], caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, sc: ServeConfig):
+    def decode_step(params, caches, tokens: Array, pos: Array, key: Optional[Array] = None):
+        """tokens: (B, 1) int32; pos: scalar int32. Returns
+        (next_token (B, 1), logits (B, V), caches)."""
+        logits, caches = lm.decode_step(params, cfg, caches, tokens, pos)
+        lf = logits[:, -1].astype(jnp.float32)
+        if sc.temperature > 0.0 and key is not None:
+            nxt = jax.random.categorical(key, lf / sc.temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(lf, axis=-1)
+        return nxt[:, None].astype(jnp.int32), lf, caches
+
+    return decode_step
+
+
+def init_serve_cache(cfg: ModelConfig, sc: ServeConfig, batch: int):
+    return lm.init_cache(cfg, batch, sc.max_len, jnp.dtype(sc.cache_dtype))

@@ -1,0 +1,139 @@
+"""Training step: microbatched gradient accumulation + remat + AdamW.
+
+``make_train_step(model_cfg, train_cfg)`` returns a pure function
+``step(params, opt_state, batch) → (params, opt_state, metrics)`` suitable
+for ``jax.jit`` under a mesh. The global batch's leading dim is split into
+``train_cfg.microbatches`` accumulation steps executed under ``lax.scan``
+(grads accumulate in fp32); the layer stack applies full remat per layer
+group. Non-finite-gradient protection (the AL-DRAM error fuse): if the
+global grad norm is not finite, the update is skipped entirely and the
+``skipped`` metric is set — the runtime monitor (ft/monitor.py) reacts by
+falling back to the conservative execution config and/or restoring.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.models import model as lm
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.optim import compress as gradcomp
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    remat: bool = True
+    aux_coef: float = 0.01
+    z_coef: float = 1e-4
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    accum_dtype: str = "float32"  # grad-accumulation buffer (bf16 at 1T scale)
+    remat_offload: bool = False   # park boundary saves in pinned host memory
+    compress_grads: bool = False
+    opt: adamw.OptConfig = dataclasses.field(default_factory=adamw.OptConfig)
+
+
+def _split_micro(batch: Dict[str, Array], n: int) -> Dict[str, Array]:
+    def f(x):
+        b = x.shape[0] if x.ndim >= 1 else None
+        if x.ndim >= 2 and b is not None and b % n == 0:
+            return x.reshape((n, b // n) + x.shape[1:])
+        if x.ndim == 3 and x.shape[0] == 3:  # mrope positions (3, B, S)
+            return x.reshape((3, n, x.shape[1] // n) + x.shape[2:]).swapaxes(0, 1)
+        raise ValueError(f"batch leaf shape {x.shape} not splittable by {n}")
+
+    return jax.tree.map(f, batch)
+
+
+def make_loss_fn(cfg: ModelConfig, tc: TrainConfig):
+    remat = "offload" if (tc.remat and tc.remat_offload) else tc.remat
+
+    def loss_fn(params, micro_batch):
+        loss, metrics = lm.lm_loss(
+            params, cfg, micro_batch,
+            aux_coef=tc.aux_coef, z_coef=tc.z_coef, remat=remat,
+        )
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    loss_fn = make_loss_fn(cfg, tc)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        compute = jnp.dtype(tc.compute_dtype)
+        cparams = jax.tree.map(
+            lambda p: p.astype(compute) if p.dtype == jnp.float32 and p.ndim >= 2 else p,
+            params,
+        )
+
+        accum = jnp.dtype(tc.accum_dtype)
+        if tc.microbatches > 1:
+            micro = _split_micro(batch, tc.microbatches)
+
+            def body(acc, mb):
+                (loss, metrics), grads = grad_fn(cparams, mb)
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(
+                    lambda a, g: a + g.astype(accum), acc_g, grads
+                )
+                return (acc_g, acc_l + loss), metrics
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, accum), params)
+            (gsum, lsum), _ = jax.lax.scan(body, (zero_g, jnp.zeros(())), micro)
+            # Keep accum dtype — apply_updates upcasts per-leaf (transient).
+            grads = jax.tree.map(lambda g: g / tc.microbatches, gsum)
+            loss = lsum / tc.microbatches
+        else:
+            (loss, _), grads = grad_fn(cparams, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        if tc.compress_grads:
+            grads, err = gradcomp.compress_with_feedback(
+                grads, opt_state["grad_err"]
+            )
+
+        gnorm = adamw.global_norm(grads)
+        finite = jnp.isfinite(gnorm)
+        new_params, new_opt, opt_metrics = adamw.apply_updates(
+            params, grads, {k: opt_state[k] for k in ("m", "v", "step")}, tc.opt
+        )
+        # Error fuse: skip the update entirely on non-finite gradients.
+        new_params = jax.tree.map(
+            lambda new, old: jnp.where(finite, new, old), new_params, params
+        )
+        new_opt = jax.tree.map(
+            lambda new, old: jnp.where(finite, new, old),
+            new_opt,
+            {k: opt_state[k] for k in ("m", "v", "step")},
+        )
+        if tc.compress_grads:
+            new_opt = dict(new_opt, grad_err=err)
+
+        metrics = {
+            "loss": loss,
+            "grad_norm": gnorm,
+            "skipped": (~finite).astype(jnp.float32),
+            **opt_metrics,
+        }
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig, tc: TrainConfig):
+    params = lm.init_params(key, cfg, jnp.dtype(tc.param_dtype))
+    opt_state = adamw.init_opt_state(params, tc.opt)
+    if tc.compress_grads:
+        opt_state["grad_err"] = gradcomp.init_error_state(params)
+    return params, opt_state

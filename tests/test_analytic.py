@@ -1,0 +1,98 @@
+"""Roofline-model validation: analytic FLOPs vs compiled HLO, plus
+hypothesis properties of the cost models."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from benchmarks.crossval import one_layer_flops
+from repro.core import altune
+from repro.kernels.latency_matmul.ops import MMConfig
+
+
+@pytest.mark.parametrize("arch,layer", [
+    ("llama3.2-3b", 0),
+    ("deepseek-moe-16b", 2),
+    ("recurrentgemma-9b", 0),
+    ("xlstm-125m", 0),
+])
+def test_analytic_flops_match_hlo(arch, layer):
+    hlo, ana, kind = one_layer_flops(arch, layer)
+    assert 0.85 <= ana / hlo <= 1.15, (arch, kind, ana / hlo)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.sampled_from([128, 256, 512]),
+    st.sampled_from([128, 256, 512]),
+    st.sampled_from([128, 256, 512, 1024]),
+    st.integers(3, 6).map(lambda e: 2**e * 128),  # m = 1024..8192
+)
+def test_matmul_costmodel_properties(bm, bn, bk, m):
+    cfg = MMConfig(bm, bn, bk)
+    est = altune.matmul_estimate(m, m, m, cfg)
+    if not est.feasible:
+        assert cfg.vmem_bytes() > 0
+        return
+    # Latency is at least the pure compute and pure memory bounds.
+    assert est.t_seconds >= est.flops / altune.costmodel.PEAK_FLOPS
+    assert est.t_seconds >= est.hbm_bytes / altune.costmodel.HBM_BW
+    # Bigger tiles never increase HBM traffic for the same problem.
+    est_small = altune.matmul_estimate(m, m, m, MMConfig(128, 128, 128))
+    if est_small.feasible:
+        assert est.hbm_bytes <= est_small.hbm_bytes + 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from([1024, 4096, 16384]), st.sampled_from([64, 128]))
+def test_flash_costmodel_causal_halves_flops(s, dh):
+    from repro.kernels.flash_attention.ops import FAConfig
+
+    cfg = FAConfig(128, 128)
+    causal = altune.flash_estimate(1, s, s, 8, 8, dh, cfg, causal=True)
+    full = altune.flash_estimate(1, s, s, 8, 8, dh, cfg, causal=False)
+    assert causal.flops == pytest.approx(full.flops / 2)
+
+
+def test_attn_stream_bytes_skip_beats_generic():
+    """The §Perf hypothesis, as an invariant: for long sequences the
+    block-skip path always moves fewer bytes than the generic path."""
+    import repro.configs as C
+    from repro.launch.analytic import ExecFlags, _attn_stream_bytes
+
+    for arch in ("smollm-135m", "gemma3-4b", "qwen2-vl-72b"):
+        cfg = C.get(arch)
+        for s in (8192, 32768):
+            gen = _attn_stream_bytes(cfg, "global", 4, s, s, ExecFlags())
+            skip = _attn_stream_bytes(
+                cfg, "global", 4, s, s, ExecFlags(causal_block_skip=True)
+            )
+            assert skip < gen, (arch, s, skip, gen)
+
+
+def test_train_vs_skip_gradients_match():
+    """Block-skip attention is a pure execution-parameter change: the
+    training gradients must be (numerically) identical."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    import repro.configs as C
+    from repro.models import model as lm
+
+    cfg = C.reduced("llama3.2-3b")
+    cfg_skip = dataclasses.replace(cfg, attn_block_skip=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 65), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def loss(c):
+        return lambda p: lm.lm_loss(p, c, batch)[0]
+
+    g1 = jax.grad(loss(cfg))(params)
+    g2 = jax.grad(loss(cfg_skip))(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)

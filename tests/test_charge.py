@@ -1,0 +1,107 @@
+"""Unit + hypothesis property tests for the cell charge model."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+
+from repro.core import charge, dimm
+from repro.core.charge import CellParams, DEFAULT_CONSTANTS as C
+from repro.core.timing import JEDEC_DDR3_1600, TimingParams
+
+
+def cell(r=1.2, c=0.705, leak=0.95):
+    return CellParams(r=jnp.asarray(r), c=jnp.asarray(c), leak=jnp.asarray(leak))
+
+
+def test_constants_validate():
+    C.validate()
+
+
+def test_worst_case_anchored_to_jedec():
+    wc = dimm.worst_case_cell()
+    # The corner cell at 85 °C needs exactly the JEDEC timings.
+    assert bool(charge.read_ok(wc, JEDEC_DDR3_1600, 85.0))
+    assert bool(charge.write_ok(wc, JEDEC_DDR3_1600, 85.0))
+    assert float(charge.min_trcd(wc, 85.0)) == pytest.approx(
+        JEDEC_DDR3_1600.trcd, rel=1e-4)
+    assert float(charge.min_tras(wc, 85.0)) == pytest.approx(
+        JEDEC_DDR3_1600.tras, rel=1e-4)
+    assert float(charge.min_twr(wc, 85.0)) == pytest.approx(
+        JEDEC_DDR3_1600.twr, rel=1e-4)
+    assert float(charge.min_trp(wc, 85.0)) == pytest.approx(
+        JEDEC_DDR3_1600.trp, rel=1e-4)
+
+
+def test_worst_case_has_no_margin():
+    wc = dimm.worst_case_cell()
+    reduced = JEDEC_DDR3_1600.reduced({"trcd": 0.05})
+    assert not bool(charge.read_ok(wc, reduced, 85.0))
+    reduced_w = JEDEC_DDR3_1600.reduced({"twr": 0.05})
+    assert not bool(charge.write_ok(wc, reduced_w, 85.0))
+
+
+cells_st = st.builds(
+    cell,
+    r=st.floats(1.0, 1.449),
+    c=st.floats(0.7005, 0.74),
+    leak=st.floats(0.8, 0.999),
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(cells_st, st.floats(30.0, 85.0))
+def test_min_timings_never_exceed_jedec(cl, temp):
+    assert float(charge.min_trcd(cl, temp)) <= JEDEC_DDR3_1600.trcd + 1e-3
+    assert float(charge.min_tras(cl, temp)) <= JEDEC_DDR3_1600.tras + 1e-3
+    assert float(charge.min_twr(cl, temp)) <= JEDEC_DDR3_1600.twr + 1e-3
+    assert float(charge.min_trp(cl, temp)) <= JEDEC_DDR3_1600.trp + 1e-3
+
+
+@settings(max_examples=50, deadline=None)
+@given(cells_st, st.floats(30.0, 75.0))
+def test_cooler_is_never_slower(cl, temp):
+    for fn in (charge.min_trcd, charge.min_tras, charge.min_twr):
+        assert float(fn(cl, temp)) <= float(fn(cl, temp + 10.0)) + 1e-4
+
+
+@settings(max_examples=50, deadline=None)
+@given(cells_st, st.floats(30.0, 85.0))
+def test_min_timing_is_safe_and_tight(cl, temp):
+    """The analytic minimum passes the forward predicate; one cycle less
+    than the quantized minimum fails at least one phase (profiler grid
+    correctness)."""
+    t = TimingParams(
+        trcd=float(charge.min_trcd(cl, temp)),
+        tras=float(charge.min_tras(cl, temp)),
+        twr=float(charge.min_twr(cl, temp)),
+        trp=float(charge.min_trp(cl, temp)),
+    )
+    assert bool(charge.read_ok(cl, t, temp))
+    shaved = TimingParams(t.trcd * 0.985, t.tras, t.twr, t.trp)
+    assert not bool(charge.read_ok(cl, shaved, temp))
+
+
+@settings(max_examples=30, deadline=None)
+@given(cells_st, st.floats(30.0, 85.0))
+def test_restore_target_bounds(cl, temp):
+    v = float(charge.restore_target(cl, temp))
+    assert C.v_restore_start < v <= C.v_full + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(cells_st)
+def test_retention_monotone_in_temperature(cl):
+    r55 = float(charge.retention(cl, 55.0))
+    r85 = float(charge.retention(cl, 85.0))
+    assert 0.0 < r85 < r55 <= 1.0
+
+
+def test_population_within_corners():
+    cells, vidx = dimm.sample_population(jax.random.PRNGKey(0))
+    assert float(cells.r.max()) <= C.r_max
+    assert float(cells.c.min()) >= C.c_min
+    assert float(cells.leak.max()) <= 1.0
+    assert cells.r.shape == (115,)
+    assert int(vidx.max()) == 2

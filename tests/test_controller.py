@@ -1,0 +1,73 @@
+"""AL-DRAM controller: binning, hysteresis, fuse, persistence."""
+
+import jax
+
+from repro.core import dimm
+from repro.core.controller import ALDRAMController, DimmTimingTable
+from repro.core.timing import JEDEC_DDR3_1600
+
+
+def small_table():
+    cells, _ = dimm.sample_population(jax.random.PRNGKey(0))
+    sub = type(cells)(r=cells.r[:4], c=cells.c[:4], leak=cells.leak[:4])
+    return DimmTimingTable.profile(sub, temp_bins=(55.0, 70.0, 85.0))
+
+
+def test_profile_table_monotone_in_temperature():
+    table = small_table()
+    for per_dimm in table.sets:
+        for cold, warm in zip(per_dimm, per_dimm[1:]):
+            for p in ("trcd", "tras", "twr", "trp"):
+                assert getattr(cold, p) <= getattr(warm, p) + 1e-6
+
+
+def test_lookup_beyond_bins_is_jedec():
+    table = small_table()
+    assert table.lookup(0, 90.0) == JEDEC_DDR3_1600
+
+
+def test_json_roundtrip():
+    table = small_table()
+    again = DimmTimingTable.from_json(table.to_json())
+    assert again.temp_bins == table.temp_bins
+    assert again.sets[0][0] == table.sets[0][0]
+
+
+def test_hotter_switches_immediately_cooler_needs_hysteresis():
+    table = small_table()
+    ctl = ALDRAMController(table, guard_band_c=5.0, hysteresis_steps=3)
+    ctl.observe(0, 40.0)  # start: most conservative bin
+    # Warm-up to the coolest bin takes sustained calm readings.
+    for _ in range(12):
+        ctl.observe(0, 40.0)
+    cool_bin = ctl.bin_of(0)
+    fast = ctl.current(0)
+    # A single hot reading degrades instantly.
+    ctl.observe(0, 78.0)
+    assert ctl.bin_of(0) > cool_bin
+    slow = ctl.current(0)
+    assert slow.tras >= fast.tras
+    # One cool reading is NOT enough to come back.
+    ctl.observe(0, 40.0)
+    assert ctl.bin_of(0) > cool_bin
+
+
+def test_error_fuses_to_jedec_permanently():
+    table = small_table()
+    ctl = ALDRAMController(table)
+    ctl.report_error(2)
+    assert ctl.current(2) == JEDEC_DDR3_1600
+    for _ in range(20):
+        ctl.observe(2, 30.0)
+    assert ctl.current(2) == JEDEC_DDR3_1600
+    assert ctl.fallback_count == 1
+
+
+def test_guard_band_is_conservative():
+    table = small_table()
+    loose = ALDRAMController(table, guard_band_c=0.0)
+    tight = ALDRAMController(table, guard_band_c=10.0)
+    for _ in range(12):
+        loose.observe(0, 52.0)
+        tight.observe(0, 52.0)
+    assert tight.current(0).tras >= loose.current(0).tras

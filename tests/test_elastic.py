@@ -1,0 +1,83 @@
+"""Elastic restore across mesh shapes + host-offload remat mode.
+
+The elastic test runs in a subprocess with 8 host devices: train state is
+checkpointed under a (4,2) mesh and restored under (2,4) and (8,1) meshes
+— the pod-loss restart path (DESIGN.md §5).
+"""
+
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.data.pipeline import DataConfig, batch_for_step
+from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_remat_offload_trains():
+    """The host-offload remat mode must be numerically identical to plain
+    remat (it only changes WHERE the boundary saves live)."""
+    cfg = C.reduced("llama3.2-3b")
+    dc = DataConfig(seq_len=32, global_batch=4)
+    losses = {}
+    for offload in (False, True):
+        tc = TrainConfig(microbatches=2, remat_offload=offload)
+        params, opt = init_train_state(jax.random.PRNGKey(0), cfg, tc)
+        step = jax.jit(make_train_step(cfg, tc))
+        for i in range(3):
+            batch = {k: jnp.asarray(v) for k, v in batch_for_step(cfg, dc, i).items()}
+            params, opt, m = step(params, opt, batch)
+        losses[offload] = float(m["loss"])
+    assert abs(losses[False] - losses[True]) < 1e-4, losses
+
+
+def test_elastic_restore_across_meshes(tmp_path):
+    script = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+
+        import repro.configs as C
+        from repro.ft import checkpoint as ckpt
+        from repro.models import model as lm
+        from repro.parallel.sharding import param_specs, ShardingPolicy, DEFAULT_RULES
+
+        cfg = C.reduced("smollm-135m")
+        params = lm.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+
+        def shardings(shape):
+            mesh = jax.make_mesh(shape, ("data", "model"),
+                                 axis_types=(AxisType.Auto,) * 2)
+            pol = ShardingPolicy(mesh=mesh, rules=dict(DEFAULT_RULES))
+            specs = lm.logical_specs(params, cfg)
+            return param_specs(specs, params, pol)
+
+        # Save under a (4,2) mesh placement.
+        p42 = jax.device_put(params, shardings((4, 2)))
+        ckpt.save(r"{tmp_path}", 1, {{"params": p42}})
+
+        # Restore under two different meshes (pod-loss restart shapes).
+        for shape in ((2, 4), (8, 1)):
+            restored, _ = ckpt.restore(
+                r"{tmp_path}", {{"params": params}},
+                shardings={{"params": shardings(shape)}},
+            )
+            for a, b in zip(jax.tree.leaves(params),
+                            jax.tree.leaves(restored["params"])):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print("ELASTIC_OK")
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, timeout=300,
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root"},
+    )
+    assert "ELASTIC_OK" in out.stdout, out.stdout[-1500:] + out.stderr[-1500:]

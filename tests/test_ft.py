@@ -1,0 +1,155 @@
+"""Fault tolerance: checkpoint roundtrip/CRC/async/prune, monitor, altune."""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core import altune
+from repro.core.altune.runtime import AdaptiveExecutor, ConditionBins
+from repro.ft import checkpoint as ckpt
+from repro.ft.monitor import FleetMonitor
+from repro.models import model as lm
+
+
+@pytest.fixture()
+def state():
+    cfg = C.reduced("smollm-135m")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    return {"params": params, "step_scalar": jnp.asarray(3, jnp.int32)}
+
+
+def test_roundtrip(tmp_path, state):
+    ckpt.save(tmp_path, 11, state)
+    restored, step = ckpt.restore(tmp_path, state)
+    assert step == 11
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_and_latest(tmp_path, state):
+    ckpt.save_async(tmp_path, 1, state).result()
+    ckpt.save_async(tmp_path, 2, state).result()
+    assert ckpt.latest_step(tmp_path) == 2
+
+
+def test_crc_detects_corruption(tmp_path, state):
+    path = ckpt.save(tmp_path, 5, state)
+    man = json.loads((path / "manifest.json").read_text())
+    fname = next(iter(man["files"].values()))["file"]
+    arr = np.load(path / fname)
+    arr.flat[0] = arr.flat[0] + 1
+    np.save(path / fname, arr)
+    with pytest.raises(IOError):
+        ckpt.restore(tmp_path, state)
+
+
+def test_prune_keeps_recent(tmp_path, state):
+    for s in range(6):
+        ckpt.save(tmp_path, s, state, keep=3)
+    dirs = sorted(p.name for p in pathlib.Path(tmp_path).iterdir())
+    assert len(dirs) == 3 and dirs[-1] == "step_0000000005"
+
+
+def test_shape_mismatch_rejected(tmp_path, state):
+    ckpt.save(tmp_path, 1, state)
+    bad = dict(state, step_scalar=jnp.zeros((2,), jnp.int32))
+    with pytest.raises((ValueError, KeyError)):
+        ckpt.restore(tmp_path, bad)
+
+
+def test_monitor_straggler_and_plan():
+    mon = FleetMonitor(patience=3)
+    for _ in range(6):
+        for h in ("a", "b", "c", "d"):
+            mon.record_step(h, 2.0 if h == "d" else 1.0)
+    assert mon.stragglers() == ["d"]
+    assert mon.load_of("d") > 1.5
+    mon.record_error("b")
+    plan = mon.plan(now=0.0)
+    assert "b" in plan["restore"] and "d" in plan["degrade"]
+
+
+def test_adaptive_executor_hysteresis_and_fuse():
+    ex = AdaptiveExecutor(["fast", "mid", "slow"], "worst",
+                          bins=ConditionBins(edges=(1.1, 1.3)),
+                          hysteresis_steps=2)
+    # Starts in the most conservative bin of the table.
+    assert ex.current("u") == "slow"
+    # Calm readings walk it up one bin at a time.
+    for _ in range(10):
+        ex.observe("u", 1.0)
+    assert ex.current("u") == "fast"
+    # One hot reading degrades instantly (beyond the last edge → worst).
+    ex.observe("u", 2.0)
+    assert ex.current("u") == "slow"
+    ex2 = AdaptiveExecutor(["fast"], "worst")
+    ex2.report_error("u")
+    for _ in range(10):
+        ex2.observe("u", 0.5)
+    assert ex2.current("u") == "worst"  # fused forever
+
+
+def test_altune_profile_select_and_margin():
+    from repro.kernels.latency_matmul import ref
+    from repro.kernels.latency_matmul.ops import MMConfig, matmul
+
+    res = altune.profile_kernel(
+        "mm",
+        run_fn=lambda x, y, cfg: matmul(x, y, cfg, interpret=True),
+        ref_fn=ref.matmul,
+        make_inputs=lambda a: (a, a),
+        estimate_fn=lambda cfg: altune.matmul_estimate(1024, 1024, 1024, cfg),
+        candidates=(MMConfig(128, 128, 128), MMConfig(256, 256, 256)),
+        worst_case=MMConfig(128, 128, 128),
+        input_shape=(256, 256),
+        rtol=1e-3,
+    )
+    assert all(e.validated for e in res.entries)
+    assert res.select() == MMConfig(256, 256, 256)
+    assert res.margin() > 0.0
+
+
+def test_altune_infeasible_config_never_selected():
+    from repro.kernels.latency_matmul.ops import MMConfig
+
+    est = altune.matmul_estimate(4096, 4096, 4096, MMConfig(4096, 4096, 4096))
+    assert not est.feasible
+
+
+def test_timing_table_roundtrip(tmp_path):
+    from repro.kernels.latency_matmul.ops import MMConfig
+
+    t = altune.TimingTable()
+    t.put("mm", "1024x1024", "v5e", "default", MMConfig(256, 256, 256), 0.4)
+    t.save(tmp_path / "t.json")
+    t2 = altune.TimingTable.load(tmp_path / "t.json")
+    got = t2.get("mm", "1024x1024", "v5e")
+    assert got is not None and got["config"]["bm"] == 256
+
+
+def test_steptuner_never_worse_than_baseline():
+    """The auto-tuner's AL-DRAM guarantee: selection ≥ baseline, always."""
+    import os
+    import subprocess
+    import sys
+    import pathlib
+
+    root = pathlib.Path(__file__).resolve().parents[1]
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.steptuner_bench"],
+        capture_output=True, text=True, timeout=420,
+        env={"PYTHONPATH": str(root / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root",
+             **{k: v for k, v in os.environ.items() if k.startswith("JAX")}},
+        cwd=root,
+    )
+    assert out.returncode == 0, out.stderr[-1500:]
+    speedups = [float(l.split(",")[1]) for l in out.stdout.splitlines()
+                if "/speedup" in l]
+    assert len(speedups) == 10
+    assert all(s >= 1.0 - 1e-6 for s in speedups), speedups

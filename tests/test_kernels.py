@@ -1,0 +1,97 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.flash_attention.ops import FAConfig, flash_attention
+from repro.kernels.latency_matmul import ref as mm_ref
+from repro.kernels.latency_matmul.ops import MMConfig, matmul
+from repro.kernels.rglru_scan import ref as sc_ref
+from repro.kernels.rglru_scan.ops import ScanConfig, rglru_scan
+
+
+def _close(out, ref, rtol, atol=1e-5):
+    out = np.asarray(out, np.float32)
+    ref = np.asarray(ref, np.float32)
+    assert float(np.max(np.abs(out - ref))) <= rtol * float(
+        np.max(np.abs(ref))) + atol, float(np.max(np.abs(out - ref)))
+
+
+@pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 1e-5), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize(
+    "b,sq,skv,h,hk,dh,causal,window",
+    [
+        (2, 128, 128, 4, 4, 64, True, 0),
+        (1, 256, 256, 4, 2, 64, True, 0),      # GQA
+        (2, 192, 192, 2, 1, 128, True, 64),    # MQA + sliding window
+        (1, 128, 320, 4, 4, 64, False, 0),     # bidirectional, cross-len
+        (1, 100, 100, 2, 2, 64, True, 0),      # ragged (padding path)
+    ],
+)
+def test_flash_attention_sweep(b, sq, skv, h, hk, dh, causal, window, dtype, rtol):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, sq, h, dh), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, skv, hk, dh), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, skv, hk, dh), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          config=FAConfig(64, 64), interpret=True)
+    ref = fa_ref.naive_attention(q, k, v, causal=causal, window=window)
+    _close(out, ref, rtol)
+
+
+@pytest.mark.parametrize("config", [MMConfig(128, 128, 128), MMConfig(256, 128, 256)])
+@pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 1e-5), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("m,k,n", [(256, 256, 256), (300, 200, 130), (128, 512, 64)])
+def test_matmul_sweep(m, k, n, dtype, rtol, config):
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (m, k), jnp.float32).astype(dtype)
+    y = jax.random.normal(jax.random.fold_in(key, 1), (k, n), jnp.float32).astype(dtype)
+    out = matmul(x, y, config, interpret=True)
+    _close(out, mm_ref.matmul(x, y), rtol)
+
+
+@pytest.mark.parametrize("config", [ScanConfig(256, 64), ScanConfig(128, 32)])
+@pytest.mark.parametrize("b,s,d", [(2, 128, 256), (1, 100, 300), (3, 64, 128)])
+def test_rglru_scan_sweep(b, s, d, config):
+    key = jax.random.PRNGKey(2)
+    ka, kb, kh = jax.random.split(key, 3)
+    a = jax.random.uniform(ka, (b, s, d), jnp.float32, 0.8, 0.999)
+    bb = jax.random.normal(kb, (b, s, d), jnp.float32) * 0.2
+    h0 = jax.random.normal(kh, (b, d), jnp.float32)
+    out = rglru_scan(a, bb, h0, config, interpret=True)
+    _close(out, sc_ref.rglru_scan(a, bb, h0), 1e-5)
+
+
+def test_vmem_estimates_monotone():
+    assert FAConfig(256, 256).vmem_bytes(128) > FAConfig(128, 128).vmem_bytes(128)
+    assert MMConfig(512, 512, 512).vmem_bytes() > MMConfig(128, 128, 128).vmem_bytes()
+    assert MMConfig(512, 512, 1024).arithmetic_intensity() > \
+        MMConfig(128, 128, 128).arithmetic_intensity()
+
+
+@pytest.mark.parametrize("config_bk", [256, 512])
+@pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 1e-5), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("b,l,h,hk,dh,length", [
+    (2, 1024, 4, 2, 64, 1000),
+    (1, 1536, 8, 1, 128, 1536),
+    (3, 700, 2, 2, 64, 512),
+])
+def test_flash_decode_sweep(b, l, h, hk, dh, length, dtype, rtol, config_bk):
+    from repro.kernels.flash_decode import ref as fd_ref
+    from repro.kernels.flash_decode.ops import FDConfig, flash_decode
+
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, dh), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, l, hk, dh), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, l, hk, dh), jnp.float32).astype(dtype)
+    out = flash_decode(q, k, v, length, FDConfig(bk=config_bk), interpret=True)
+    g = h // hk
+    r = fd_ref.decode_attention(
+        q, jnp.repeat(k, g, axis=2), jnp.repeat(v, g, axis=2), length
+    )
+    _close(out, r, rtol)

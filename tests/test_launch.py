@@ -1,0 +1,52 @@
+"""Launcher integration: the dry-run entrypoint runs end-to-end in a
+subprocess (its own XLA device-count env), and the training driver
+checkpoints + restarts."""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell_subprocess(tmp_path):
+    env = {"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"}
+    import os
+
+    env.update({k: v for k, v in os.environ.items() if k not in env})
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "smollm-135m", "--cell", "decode_32k", "--mesh", "single"],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=420,
+    )
+    assert "[OK]" in out.stdout, out.stdout[-2000:] + out.stderr[-2000:]
+    art = ROOT / "artifacts/dryrun/single-pod-16x16/smollm-135m__decode_32k.json"
+    r = json.loads(art.read_text())
+    assert r["ok"] and r["chips"] == 256
+
+
+def test_train_driver_checkpoint_restart(tmp_path):
+    from repro.launch.train import train
+
+    _, _, losses1 = train(
+        "smollm-135m", steps=6, batch=4, seq=32,
+        ckpt_dir=str(tmp_path), ckpt_every=3, log_every=100,
+    )
+    # Restart: resumes from step 6 checkpoint and continues.
+    _, _, losses2 = train(
+        "smollm-135m", steps=9, batch=4, seq=32,
+        ckpt_dir=str(tmp_path), ckpt_every=3, log_every=100,
+    )
+    assert len(losses2) == 3  # only steps 6..8 ran
+
+
+def test_serve_driver_runs():
+    from repro.launch.serve import serve
+
+    ids = serve("smollm-135m", batch=2, prompt_len=16, gen=4)
+    assert ids.shape == (2, 4)

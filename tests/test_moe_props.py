@@ -1,0 +1,69 @@
+"""MoE dispatch properties (hypothesis)."""
+
+import dataclasses
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+import repro.configs as C
+from repro.models import moe
+
+
+def _cfg(top_k=2, n_experts=8, cf=8.0):
+    base = C.reduced("deepseek-moe-16b")
+    return dataclasses.replace(
+        base, moe=dataclasses.replace(
+            base.moe, top_k=top_k, n_experts=n_experts, capacity_factor=cf
+        )
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from([1, 2, 4]))
+def test_route_weights_normalized(seed, top_k):
+    cfg = _cfg(top_k=top_k)
+    key = jax.random.PRNGKey(seed)
+    p = moe.init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (16, cfg.d_model))
+    w, idx, aux = moe.route(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+    assert int(idx.min()) >= 0 and int(idx.max()) < cfg.moe.n_experts
+    assert float(aux) >= 1.0 - 1e-5  # E·Σ f·P ≥ 1 (equality at uniform)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 100))
+def test_capacity_drop_only_reduces_norm(seed):
+    """Dropping tokens at capacity can only remove expert contributions;
+    with the shared path removed, the tight-capacity output per token is
+    either equal to the ample-capacity one or closer to zero."""
+    base = _cfg(cf=8.0)
+    tight = _cfg(cf=0.25)
+    key = jax.random.PRNGKey(seed)
+    p = moe.init_moe(key, dataclasses.replace(
+        base, moe=dataclasses.replace(base.moe, n_shared=0)), jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, 32, base.d_model)) * 0.3
+    cfg_a = dataclasses.replace(base, moe=dataclasses.replace(base.moe, n_shared=0))
+    cfg_t = dataclasses.replace(tight, moe=dataclasses.replace(tight.moe, n_shared=0))
+    y_a, _ = moe.moe_forward(p, x, cfg_a)
+    y_t, _ = moe.moe_forward(p, x, cfg_t)
+    na = jnp.linalg.norm(y_a.reshape(32, -1), axis=-1)
+    nt = jnp.linalg.norm(y_t.reshape(32, -1), axis=-1)
+    assert float((nt <= na + 1e-4).mean()) == 1.0
+
+
+def test_aux_loss_prefers_balance():
+    cfg = _cfg(n_experts=4, top_k=1)
+    e = cfg.moe.n_experts
+    # Perfectly balanced hard assignment → aux ≈ 1; collapsed → aux ≈ E.
+    probs_bal = jnp.eye(e).repeat(4, axis=0)
+    probs_col = jnp.zeros((16, e)).at[:, 0].set(1.0)
+    for probs, expect in ((probs_bal, 1.0), (probs_col, float(e))):
+        idx = probs.argmax(-1)
+        occupancy = jnp.zeros((e,)).at[idx].add(1.0)
+        frac = occupancy / occupancy.sum()
+        aux = e * jnp.sum(frac * probs.mean(0))
+        assert abs(float(aux) - expect) < 1e-5

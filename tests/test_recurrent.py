@@ -1,0 +1,93 @@
+"""Recurrent-core equivalence: chunkwise/assoc-scan vs sequential steps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.models import rglru, xlstm
+
+
+def test_mlstm_chunked_equals_sequential():
+    key = jax.random.PRNGKey(0)
+    b, s, h, dh = 2, 48, 2, 16
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, h, dh)) * dh**-0.5
+    v = jax.random.normal(ks[2], (b, s, h, dh))
+    i_log = jax.random.normal(ks[3], (b, s, h)) * 0.5
+    f_log = jax.nn.log_sigmoid(jax.random.normal(ks[4], (b, s, h)) + 2.0)
+
+    state = xlstm.mlstm_zero_state(b, h, dh)
+    out_c, final_c = xlstm.mlstm_chunked(q, k, v, i_log, f_log, state, chunk=16)
+
+    st = xlstm.mlstm_zero_state(b, h, dh)
+    outs = []
+    for t in range(s):
+        st, ht = xlstm.mlstm_step(
+            st, q[:, t], k[:, t], v[:, t], i_log[:, t], f_log[:, t]
+        )
+        outs.append(ht)
+    out_s = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_s),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(final_c.n), np.asarray(st.n),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_mlstm_chunked_ragged_padding():
+    key = jax.random.PRNGKey(1)
+    b, s, h, dh = 1, 21, 2, 8  # not a chunk multiple
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, h, dh)) * dh**-0.5
+    v = jax.random.normal(ks[2], (b, s, h, dh))
+    i_log = jax.random.normal(ks[3], (b, s, h)) * 0.5
+    f_log = jax.nn.log_sigmoid(jax.random.normal(ks[4], (b, s, h)) + 2.0)
+    state = xlstm.mlstm_zero_state(b, h, dh)
+    out8, fin8 = xlstm.mlstm_chunked(q, k, v, i_log, f_log, state, chunk=8)
+    out_all, fin_all = xlstm.mlstm_chunked(q, k, v, i_log, f_log, state, chunk=21)
+    np.testing.assert_allclose(np.asarray(out8), np.asarray(out_all),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(fin8.c), np.asarray(fin_all.c),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_rglru_assoc_scan_equals_steps():
+    cfg = C.reduced("recurrentgemma-9b")
+    p = rglru.init_rglru_block(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s = 2, 19
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model)) * 0.3
+    h0 = jnp.zeros((b, cfg.d_model), jnp.float32)
+    hs, hfin = rglru.rglru_scan(p, x, cfg, h0)
+    h = h0
+    for t in range(s):
+        _, h = rglru.rglru_step(p, x[:, t], cfg, h)
+    np.testing.assert_allclose(np.asarray(hfin), np.asarray(h),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hs[:, -1].astype(jnp.float32)),
+                               np.asarray(h), rtol=1e-3, atol=1e-4)
+
+
+def test_rglru_block_prefill_then_step_continuity():
+    cfg = C.reduced("recurrentgemma-9b")
+    p = rglru.init_rglru_block(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s = 1, 12
+    x = jax.random.normal(jax.random.PRNGKey(2), (b, s + 1, cfg.d_model)) * 0.3
+    full = rglru.rglru_block_forward(p, x, cfg)
+    _, cache = rglru.rglru_block_forward(p, x[:, :s], cfg, return_cache=True)
+    step_out, _ = rglru.rglru_block_step(p, x[:, s : s + 1], cfg, cache)
+    np.testing.assert_allclose(
+        np.asarray(step_out[:, 0]), np.asarray(full[:, s]), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_decay_in_unit_interval():
+    cfg = C.reduced("recurrentgemma-9b")
+    p = rglru.init_rglru_block(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 8, cfg.d_model))
+    r = jax.nn.sigmoid(rglru._block_diag_linear(
+        x @ p["w_x_branch"], p["w_a"], p["b_a"], cfg.n_heads))
+    log_a = -cfg.rglru_c * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    assert float(a.min()) > 0.0 and float(a.max()) < 1.0

@@ -1,0 +1,89 @@
+"""End-to-end behaviour tests: the paper's claims, reproduced.
+
+Regression gates against the HPCA'15 numbers (DESIGN.md §1 table); the
+calibrated model must stay within tolerance of every reported aggregate.
+"""
+
+import jax
+import pytest
+
+from repro.core import dimm, perfmodel, profiler
+
+TOL = 0.035  # absolute tolerance on reduction fractions
+
+
+@pytest.fixture(scope="module")
+def population():
+    cells, vidx = dimm.sample_population(jax.random.PRNGKey(0))
+    return cells
+
+
+@pytest.mark.parametrize(
+    "temp,param,paper",
+    [
+        (85.0, "trcd", 0.156), (85.0, "tras", 0.204),
+        (85.0, "twr", 0.206), (85.0, "trp", 0.285),
+        (55.0, "trcd", 0.173), (55.0, "tras", 0.377),
+        (55.0, "twr", 0.548), (55.0, "trp", 0.352),
+    ],
+)
+def test_fig2_per_param_reductions(population, temp, param, paper):
+    s = profiler.fig2_summary(population, temp)
+    assert abs(s[f"{param}_reduction"] - paper) < TOL
+
+
+@pytest.mark.parametrize(
+    "temp,kind,paper",
+    [(85.0, "read", 0.211), (85.0, "write", 0.344),
+     (55.0, "read", 0.327), (55.0, "write", 0.551)],
+)
+def test_fig2_latency_sums(population, temp, kind, paper):
+    s = profiler.fig2_summary(population, temp)
+    assert abs(s[f"{kind}_reduction"] - paper) < TOL
+
+
+def test_fig3_multicore_aggregates():
+    r = perfmodel.speedup_report(perfmodel.MULTI_CORE)
+    assert abs(r["intensive_geomean"] - 0.140) < 0.02
+    assert abs(r["nonintensive_geomean"] - 0.029) < 0.01
+    assert abs(r["all_geomean"] - 0.105) < 0.02
+    assert r["stream_max"] <= 0.205 + 0.02
+
+
+def test_fig3_multicore_exceeds_singlecore():
+    multi = perfmodel.speedup_report(perfmodel.MULTI_CORE)
+    single = perfmodel.speedup_report(perfmodel.SINGLE_CORE)
+    # Paper: higher memory pressure ⇒ larger AL-DRAM benefit.
+    assert multi["intensive_geomean"] > single["intensive_geomean"]
+    assert multi["all_geomean"] > single["all_geomean"]
+
+
+def test_intensive_exceeds_nonintensive():
+    r = perfmodel.speedup_report(perfmodel.MULTI_CORE)
+    assert r["intensive_geomean"] > r["nonintensive_geomean"] * 3
+
+
+def test_temperature_monotonicity(population):
+    cold = profiler.fig2_summary(population, 45.0)
+    warm = profiler.fig2_summary(population, 75.0)
+    for k in ("trcd", "tras", "twr", "trp"):
+        assert cold[f"{k}_reduction"] >= warm[f"{k}_reduction"] - 1e-6
+
+
+def test_repeatability_above_95pct(population):
+    r = profiler.repeatability(jax.random.PRNGKey(1), population, 55.0)
+    assert r["repeat_fraction"] > 0.95
+
+
+def test_refresh_interval_effect(population):
+    # Paper §1.7: more frequent refresh ⇒ more latency reduction.
+    r64 = profiler.profile_individual(population, 55.0, window_s=64e-3)
+    r16 = profiler.profile_individual(population, 55.0, window_s=16e-3)
+    assert r16.mean_reductions()["tras"] >= r64.mean_reductions()["tras"] - 1e-6
+
+
+def test_multi_param_interdependence(population):
+    # Paper §1.7: reducing tRAS shrinks the next access's tRCD slack.
+    ind = profiler.profile_individual(population, 55.0).mean_reductions()
+    joint = profiler.profile_joint(population, 55.0).mean_reductions()
+    assert joint["trcd"] < ind["trcd"]

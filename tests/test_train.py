@@ -1,0 +1,97 @@
+"""Training-step properties: microbatch equivalence, learning, error fuse."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.data.pipeline import DataConfig, batch_for_step
+from repro.optim.adamw import OptConfig, schedule
+from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+
+def _cfg():
+    return C.reduced("smollm-135m")
+
+
+def test_microbatch_equivalence():
+    """micro=1 and micro=4 must produce (nearly) identical updates —
+    gradient accumulation is a pure reorganization of the same math."""
+    cfg = _cfg()
+    key = jax.random.PRNGKey(0)
+    batch = {
+        "tokens": jax.random.randint(key, (8, 32), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (8, 32), 0, cfg.vocab_size),
+    }
+    results = []
+    for micro in (1, 4):
+        tc = TrainConfig(microbatches=micro, opt=OptConfig(peak_lr=1e-3))
+        params, opt = init_train_state(jax.random.PRNGKey(1), cfg, tc)
+        step = jax.jit(make_train_step(cfg, tc))
+        params, opt, m = step(params, opt, batch)
+        results.append((params, float(m["loss"])))
+    p1, l1 = results[0]
+    p4, l4 = results[1]
+    assert abs(l1 - l4) < 5e-3
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=2e-5)
+
+
+def test_loss_decreases():
+    cfg = _cfg()
+    tc = TrainConfig(opt=OptConfig(peak_lr=2e-3, warmup_steps=5, total_steps=60))
+    params, opt = init_train_state(jax.random.PRNGKey(0), cfg, tc)
+    step = jax.jit(make_train_step(cfg, tc))
+    dc = DataConfig(seq_len=64, global_batch=8)
+    losses = []
+    for i in range(40):
+        batch = {k: jnp.asarray(v) for k, v in batch_for_step(cfg, dc, i).items()}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
+
+
+def test_nonfinite_grads_skip_update():
+    cfg = _cfg()
+    tc = TrainConfig()
+    params, opt = init_train_state(jax.random.PRNGKey(0), cfg, tc)
+    step = jax.jit(make_train_step(cfg, tc))
+    bad = {
+        "tokens": jnp.zeros((2, 16), jnp.int32),
+        "labels": jnp.zeros((2, 16), jnp.int32),
+    }
+    # Poison the params to force a NaN loss → non-finite grads.
+    poisoned = jax.tree.map(lambda p: p, params)
+    poisoned["embed"] = poisoned["embed"].at[0, 0].set(jnp.nan)
+    new_params, new_opt, m = step(poisoned, opt, bad)
+    assert float(m["skipped"]) == 1.0
+    # Parameters unchanged (the AL-DRAM fuse skipped the update).
+    for a, b in zip(jax.tree.leaves(new_params), jax.tree.leaves(poisoned)):
+        arr_a, arr_b = np.asarray(a), np.asarray(b)
+        np.testing.assert_array_equal(
+            arr_a[np.isfinite(arr_a)], arr_b[np.isfinite(arr_b)]
+        )
+
+
+def test_schedule_shape():
+    oc = OptConfig(peak_lr=1e-3, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    lrs = [float(schedule(oc, jnp.asarray(s))) for s in (0, 5, 10, 50, 100)]
+    assert lrs[0] < lrs[1] < lrs[2]           # warmup rises
+    assert lrs[2] == max(lrs)                 # peak at end of warmup
+    assert lrs[-1] >= 0.1 * 1e-3 - 1e-9       # floor
+
+
+def test_data_pipeline_deterministic_and_shifted():
+    cfg = _cfg()
+    dc = DataConfig(seq_len=32, global_batch=4, seed=3)
+    b1 = batch_for_step(cfg, dc, 5)
+    b2 = batch_for_step(cfg, dc, 5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = batch_for_step(cfg, dc, 6)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # labels are next-token shifted: verify with the raw stream
+    from repro.data.pipeline import synth_tokens
+    tok = synth_tokens(cfg, dc, 5)
+    np.testing.assert_array_equal(b1["tokens"], tok[:, :-1])
+    np.testing.assert_array_equal(b1["labels"], tok[:, 1:])
