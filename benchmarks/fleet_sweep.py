@@ -1,0 +1,171 @@
+"""Fleet-scale characterization: 1,000+ synthetic DIMMs in one jitted sweep.
+
+Reproduces the paper's Fig. 2 / §1.5 population study — per-parameter
+min/mean/max timing reductions across a module population per temperature —
+at fleet scale, and measures the wall-clock speedup of the batched engine
+(:mod:`repro.core.fleet`) over the seed's per-DIMM Python loop.
+
+  PYTHONPATH=src python benchmarks/fleet_sweep.py            # 1,152 DIMMs
+  PYTHONPATH=src python benchmarks/fleet_sweep.py --tiny     # CI smoke run
+
+The loop baseline is timed on ``--baseline-dimms`` modules (default 24) and
+extrapolated linearly to the full fleet — running the seed pipeline on the
+whole fleet would take minutes-to-hours, which is the point. Pass
+``--full-baseline`` to actually loop over every module.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import fleet, perfmodel, profiler
+from repro.core.timing import PARAM_NAMES
+
+#: Paper §1.5 headline band at 55 °C: per-parameter average reductions
+#: range from 17.3 % (tRCD) to 54.8 % (tWR).
+PAPER_55C_MIN = 0.173
+PAPER_55C_MAX = 0.548
+
+
+def run(
+    n_dimms: int = 1152,
+    temps_c=(45.0, 55.0, 85.0),
+    patterns=(1.0, 1.03, 1.08),
+    baseline_dimms: int = 24,
+    full_baseline: bool = False,
+    seed: int = 0,
+    verbose: bool = True,
+):
+    key = jax.random.PRNGKey(seed)
+    fl = fleet.synthesize(key, n_dimms)
+    grid_points = n_dimms * len(temps_c) * len(patterns)
+
+    # -- batched engine: compile once, then time the steady-state sweep ----
+    res = fleet.sweep(fl, temps_c, patterns)
+    jax.block_until_ready(res.read)
+    t0 = time.perf_counter()
+    res = fleet.sweep(fl, temps_c, patterns)
+    jax.block_until_ready(res.read)
+    t_fleet = time.perf_counter() - t0
+
+    # -- loop baseline: the seed's per-DIMM per-point execution model ------
+    n_base = n_dimms if full_baseline else min(baseline_dimms, n_dimms)
+    sub = fl.take(slice(0, n_base))
+    t0 = time.perf_counter()
+    base_res = fleet.sweep_loop_baseline(sub, temps_c, patterns)
+    t_loop_measured = time.perf_counter() - t0
+    t_loop = t_loop_measured * (n_dimms / n_base)
+    speedup = t_loop / t_fleet
+
+    # -- equivalence on the measured subset --------------------------------
+    idx = slice(0, n_base)
+    err = max(
+        float(np.abs(np.asarray(res.read[:, :, idx]) - np.asarray(base_res.read)).max()),
+        float(np.abs(np.asarray(res.write[:, :, idx]) - np.asarray(base_res.write)).max()),
+        float(np.abs(np.asarray(res.joint[:, :, idx]) - np.asarray(base_res.joint)).max()),
+    )
+
+    rows = [
+        ("fleet/n_dimms", float(n_dimms), ""),
+        ("fleet/grid_points", float(grid_points), ""),
+        ("fleet/sweep_seconds", t_fleet, ""),
+        ("fleet/loop_seconds_extrapolated", t_loop, ""),
+        ("fleet/speedup_vs_loop", speedup, ">=10"),
+        ("fleet/max_abs_error_vs_loop_ns", err, "<=1e-5"),
+    ]
+
+    summary = res.summary()
+    for t, per_param in sorted(summary.items()):
+        for p in PARAM_NAMES:
+            mn, mean, mx = per_param[p]
+            ref = ""
+            if t == 55.0:
+                ref = f"paper band {PAPER_55C_MIN:.3f}..{PAPER_55C_MAX:.3f}"
+            rows.append((f"fleet/{t:g}C/{p}_reduction_mean", mean, ref))
+            rows.append((f"fleet/{t:g}C/{p}_reduction_min", mn, ""))
+            rows.append((f"fleet/{t:g}C/{p}_reduction_max", mx, ""))
+
+    # -- per-DIMM performance yield (Fig. 3 at fleet scale) ----------------
+    p_worst = res.worst_pattern_idx()
+    ti = list(temps_c).index(55.0) if 55.0 in temps_c else 0
+    t_label = f"{temps_c[ti]:g}C"
+    sp = perfmodel.fleet_speedups(res.joint[ti, p_worst])
+    rows.append((f"fleet/{t_label}/perf_speedup_mean", float(sp.mean() - 1.0), ""))
+    rows.append((f"fleet/{t_label}/perf_speedup_min", float(sp.min() - 1.0), ""))
+    rows.append((f"fleet/{t_label}/perf_speedup_max", float(sp.max() - 1.0), ""))
+
+    if verbose:
+        print(f"# fleet: {n_dimms} DIMMs x {len(temps_c)} temps x "
+              f"{len(patterns)} patterns = {grid_points} grid points")
+        print(f"# batched sweep: {t_fleet*1e3:.1f} ms | loop baseline: "
+              f"{t_loop_measured:.2f} s for {n_base} DIMMs -> "
+              f"{t_loop:.1f} s extrapolated | speedup {speedup:,.0f}x")
+        print(f"# max |fleet - loop| = {err:.2e} ns")
+        for t, per_param in sorted(summary.items()):
+            cells = ", ".join(
+                f"{p} {per_param[p][0]*100:.1f}/{per_param[p][1]*100:.1f}/"
+                f"{per_param[p][2]*100:.1f}%" for p in PARAM_NAMES
+            )
+            print(f"# {t:g} C min/mean/max: {cells}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-dimms", type=int, default=None,
+                    help="fleet size (default 1152)")
+    ap.add_argument("--temps", type=str, default=None,
+                    help="comma-separated temperatures in C (default 45,55,85)")
+    ap.add_argument("--patterns", type=str, default=None,
+                    help="comma-separated data-pattern margin factors "
+                         "(default 1.0,1.03,1.08)")
+    ap.add_argument("--baseline-dimms", type=int, default=None,
+                    help="modules to actually time in the loop baseline "
+                         "(default 24)")
+    ap.add_argument("--full-baseline", action="store_true",
+                    help="loop over every module instead of extrapolating")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: 48 DIMMs, 3 temps, worst pattern only")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.tiny:
+        conflicts = [name for name, val in (
+            ("--n-dimms", args.n_dimms), ("--temps", args.temps),
+            ("--patterns", args.patterns),
+            ("--baseline-dimms", args.baseline_dimms),
+        ) if val is not None]
+        if args.full_baseline:
+            conflicts.append("--full-baseline")
+        if conflicts:
+            ap.error(f"--tiny fixes the configuration; remove {', '.join(conflicts)}")
+        rows = run(n_dimms=48, temps_c=(45.0, 55.0, 85.0), patterns=(1.0,),
+                   baseline_dimms=8, seed=args.seed)
+    else:
+        n_dimms = 1152 if args.n_dimms is None else args.n_dimms
+        if n_dimms < 1:
+            ap.error("--n-dimms must be >= 1")
+        temps = tuple(float(t) for t in (args.temps or "45,55,85").split(",")
+                      if t.strip())
+        pats = tuple(float(p) for p in (args.patterns or "1.0,1.03,1.08").split(",")
+                     if p.strip())
+        if not temps or not pats:
+            ap.error("--temps/--patterns need at least one value")
+        rows = run(
+            n_dimms=n_dimms,
+            temps_c=temps,
+            patterns=pats,
+            baseline_dimms=24 if args.baseline_dimms is None else args.baseline_dimms,
+            full_baseline=args.full_baseline,
+            seed=args.seed,
+        )
+    for name, value, ref in rows:
+        print(f"{name},{value:.6g},{ref}")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,12 +21,15 @@ def main() -> None:
         crossval,
         fig2_profiling,
         fig3_performance,
+        fleet_sweep,
         paper_extras,
         roofline,
     )
 
     sections = [
         ("fig2 (115-DIMM profiling)", fig2_profiling.run),
+        ("fleet sweep (batched characterization)",
+         lambda: fleet_sweep.run(n_dimms=256, baseline_dimms=8, verbose=False)),
         ("fig3 (real-system performance)", fig3_performance.run),
         ("paper extras (§1.7)", paper_extras.run),
         ("roofline (dry-run cells)", roofline.run),

@@ -5,6 +5,8 @@ DRAM layer (faithful reproduction):
   charge      — cell charge ↔ latency model (paper §1.3)
   dimm        — 115-DIMM process-variation population
   profiler    — FPGA-platform analogue: minimal-safe-timing search
+  fleet       — struct-of-arrays fleet characterization engine: the whole
+                (DIMM × temperature × pattern) study as one jitted sweep
   controller  — adaptive per-(DIMM, temperature) timing selection + fallback
   perfmodel   — real-system performance evaluation analogue (Fig. 3)
 
@@ -20,3 +22,4 @@ from repro.core.charge import (  # noqa: F401
 )
 from repro.core.dimm import sample_population, worst_case_cell  # noqa: F401
 from repro.core.controller import ALDRAMController, DimmTimingTable  # noqa: F401
+from repro.core.fleet import Fleet, SweepResult  # noqa: F401

@@ -39,6 +39,36 @@ class TimingTable:
                 return self.entries[key]
         return None
 
+    # -- fleet consumption --------------------------------------------------
+    @classmethod
+    def from_fleet(
+        cls,
+        result,
+        vendor=None,
+        kernel: str = "dram_timing",
+    ) -> "TimingTable":
+        """Ingest a :class:`repro.core.fleet.SweepResult` as controller
+        registers: one entry per (DIMM, temperature-bin), device-binned by
+        vendor, margin = mean fractional reduction vs JEDEC.
+
+        This is the TPU-embodiment mirror of
+        ``DimmTimingTable.from_fleet`` — the same fleet sweep feeds both the
+        DRAM controller and the altune runtime without re-profiling."""
+        from repro.core.timing import PARAM_NAMES
+
+        vendors = [int(v) for v in vendor.tolist()] if vendor is not None else None
+        table = cls()
+        for _b, t, i, timings, margin in result.table_entries():
+            table.put(
+                kernel,
+                f"dimm{i:05d}",
+                f"vendor{vendors[i] if vendors else 0}",
+                f"T{t:g}",
+                dict(zip(PARAM_NAMES, timings)),
+                margin,
+            )
+        return table
+
     # -- persistence --------------------------------------------------------
     def save(self, path: str | pathlib.Path) -> None:
         obj = {

@@ -44,7 +44,12 @@ paper's large 85 °C tRP reduction alongside its mild 55 °C growth in a
 log-RC model (documented deviation).
 
 All functions are pure jnp and vectorized over arbitrary leading axes of the
-cell-parameter arrays, so a 115-DIMM population profiles in one call.
+cell-parameter arrays, so a 115-DIMM population profiles in one call — and,
+because ``temp_c`` and the data-pattern factor may themselves be tracers,
+the fleet engine (:mod:`repro.core.fleet`) vmaps the same functions over an
+entire (DIMM × temperature × pattern) characterization grid in one jitted
+sweep. Keep it that way: no Python branches on array values, no dict/list
+construction keyed by traced quantities inside these functions.
 """
 
 from __future__ import annotations
@@ -214,6 +219,15 @@ def drive_factor(
 def quality_index(cell: CellParams, consts: ChargeModelConstants = DEFAULT_CONSTANTS) -> Array:
     """Peripheral quality q ∈ [0, 1]: 0 = JEDEC corner, 1 = best silicon."""
     return (consts.r_max - cell.r) / (consts.r_max - 1.0)
+
+
+def apply_pattern(cell: CellParams, pattern: Array | float) -> CellParams:
+    """Fold a data-pattern margin factor into the effective cell parameters.
+
+    The pattern factor scales the effective sense margin through the cell
+    capacitance (coupling noise eats into dv0). ``pattern`` may be a tracer,
+    so the fleet engine can vmap over a pattern axis."""
+    return CellParams(r=cell.r, c=cell.c * pattern, leak=cell.leak)
 
 
 # ---------------------------------------------------------------------------

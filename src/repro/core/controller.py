@@ -23,11 +23,9 @@ import dataclasses
 import json
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax.numpy as jnp
-
-from repro.core import charge, profiler
+from repro.core import charge
 from repro.core.charge import CellParams, ChargeModelConstants, DEFAULT_CONSTANTS
-from repro.core.timing import JEDEC_DDR3_1600, PARAM_NAMES, TimingParams
+from repro.core.timing import JEDEC_DDR3_1600, TimingParams
 
 #: Temperature bins (°C upper edges) for which timing sets are profiled.
 #: 85 °C is the standard's qualification point; the paper evaluates 55 °C.
@@ -62,21 +60,48 @@ class DimmTimingTable:
     ) -> "DimmTimingTable":
         """Boot-time profiling: minimal safe timings per DIMM per bin.
 
-        Uses the worst-case data pattern and takes the elementwise max over
-        read- and write-mode requirements, so one set per bin is safe for
-        both access types (what a real controller programs).
-        """
-        n = cells.r.shape[0]
-        sets: List[List[TimingParams]] = [[] for _ in range(n)]
-        for t in temp_bins:
-            read = profiler.profile_individual(cells, t, window_s, consts)
-            write = profiler.profile_write_mode(cells, t, window_s, consts)
-            merged = {
-                p: jnp.maximum(read.timings[p], write.timings[p]) for p in PARAM_NAMES
-            }
-            for i in range(n):
-                sets[i].append(TimingParams(**{p: float(merged[p][i]) for p in PARAM_NAMES}))
-        return cls(temp_bins=tuple(temp_bins), sets=sets)
+        Runs the fleet engine once over all bins (a single jitted
+        (DIMM × temperature) sweep at the worst-case data pattern) and takes
+        the elementwise max over read- and write-mode requirements, so one
+        set per bin is safe for both access types (what a real controller
+        programs)."""
+        from repro.core import fleet as fleet_mod
+
+        result = fleet_mod.sweep(
+            cells, temps_c=tuple(temp_bins), patterns=(1.0,),
+            window_s=window_s, consts=consts,
+        )
+        return cls.from_fleet(result, temp_bins=temp_bins)
+
+    @classmethod
+    def from_fleet(
+        cls, result, temp_bins: Optional[Sequence[float]] = None
+    ) -> "DimmTimingTable":
+        """Build the per-(DIMM, temperature-bin) table straight from a
+        :class:`repro.core.fleet.SweepResult` — no re-profiling.
+
+        The sweep's temperature grid becomes the bin edges; each entry is
+        the read/write-merged requirement at the worst-case pattern. Pass
+        ``temp_bins`` to override the sweep's record of them; by default the
+        sweep's exact caller-provided temperatures are used (never the
+        float32 grid, which would perturb edges like 40.1 and make
+        ``lookup`` at that exact temperature miss its own bin)."""
+        if temp_bins is None:
+            temp_bins = result.bin_edges()
+        else:
+            temp_bins = tuple(float(t) for t in temp_bins)
+            if len(temp_bins) != result.read.shape[0]:
+                raise ValueError(
+                    f"{len(temp_bins)} temp_bins for a "
+                    f"{result.read.shape[0]}-temperature sweep"
+                )
+        n = result.read.shape[2]
+        sets: List[List[TimingParams]] = [
+            [JEDEC_DDR3_1600] * len(temp_bins) for _ in range(n)
+        ]
+        for b, _t, i, timings, _margin in result.table_entries():
+            sets[i][b] = TimingParams(*timings)
+        return cls(temp_bins=temp_bins, sets=sets)
 
     def lookup(self, dimm: int, temp_c: float) -> TimingParams:
         """Timing set for the smallest bin covering ``temp_c`` (guard-banded

@@ -1,0 +1,300 @@
+"""Fleet-scale DIMM characterization engine.
+
+The paper's core artifact is a *population study*: 115 DIMMs characterized
+across temperatures and data patterns to find per-module timing margins
+(§1.5, Fig. 2). The seed pipeline ran one ``profile_*`` call per
+(temperature, pattern) point with Python-level dict plumbing between them;
+at fleet scale (thousands of modules, the ROADMAP's production target) that
+Python loop dominates wall-clock. This module batches the whole study into
+**one jitted computation**:
+
+* A fleet is a **struct-of-arrays pytree** (:class:`Fleet`): per-DIMM cell
+  RC multiplier ``r``, worst-cell capacitance ``c``, leakage ``leak``
+  (together a :class:`~repro.core.charge.CellParams`) plus a vendor index.
+  SoA — one contiguous array per physical quantity, never a list of per-DIMM
+  objects — is what lets a single vectorized predicate evaluation cover the
+  entire population, and it is the layout every downstream consumer
+  (controller tables, perf model, benchmarks) now reads directly.
+* :func:`sweep` runs the read-mode, write-mode and joint profilers over the
+  full (DIMM × temperature × data-pattern) grid as one ``jax.vmap``-batched,
+  ``jax.jit``-compiled call built on the *pure* stacked-array functions of
+  :mod:`repro.core.profiler` (``individual_min_timings`` & friends). No
+  Python loop over modules, temperatures or patterns; no per-call dict
+  rebuilding inside the traced region.
+* :class:`SweepResult` holds the dense outputs — ``read`` / ``write`` /
+  ``joint`` timing stacks of shape ``(n_temps, n_patterns, n_dimms, 4)``
+  (last axis in ``PARAM_NAMES`` order) — with reduction / merge / summary
+  helpers. ``merged_timings`` (elementwise max of read and write
+  requirements at the worst pattern) is exactly what a controller programs,
+  and :meth:`~SweepResult.to_table` hands it to
+  :class:`repro.core.controller.DimmTimingTable` without re-profiling.
+
+Scaling note: grid-search cost is O(n_dimms · n_temps · n_patterns ·
+Σ grid sizes) fused into a handful of XLA kernels; 1,000+ modules × 5
+temperatures × 7 patterns characterizes in well under a second on CPU
+(see ``benchmarks/fleet_sweep.py`` for measured speedups vs the loop).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core import charge, dimm, profiler
+from repro.core.charge import CellParams, ChargeModelConstants, DEFAULT_CONSTANTS
+from repro.core.timing import PARAM_NAMES
+
+#: Default characterization temperatures (°C): the paper's operating points
+#: plus the JEDEC qualification corner.
+DEFAULT_TEMPS_C: Tuple[float, ...] = (45.0, 55.0, 65.0, 75.0, 85.0)
+
+#: Default data-pattern margin factors (worst-case first — the guarantee
+#: pattern), mirroring :data:`repro.core.profiler.PATTERNS`.
+DEFAULT_PATTERNS: Tuple[float, ...] = (1.0, 1.02, 1.03, 1.08)
+
+
+class Fleet(NamedTuple):
+    """A DIMM population in struct-of-arrays layout (a jax pytree).
+
+    Every field is an array whose leading axis is the DIMM axis; there is
+    deliberately no per-DIMM Python object anywhere."""
+
+    cells: CellParams   # leaves shaped (n_dimms,)
+    vendor: Array       # (n_dimms,) int32 vendor index
+
+    @property
+    def n_dimms(self) -> int:
+        return int(self.cells.r.shape[0])
+
+    def take(self, idx: Array | slice) -> "Fleet":
+        """Sub-fleet selection (same SoA layout, every leaf)."""
+        return jax.tree.map(lambda a: a[idx], self)
+
+
+def synthesize(
+    key: jax.Array,
+    n_dimms: int,
+    vendors: Sequence[dimm.VendorModel] = dimm.VENDORS,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Fleet:
+    """Sample a synthetic fleet of ``n_dimms`` modules.
+
+    Scales the paper's 115-module vendor split (40/40/35 from three
+    manufacturers) proportionally to any population size."""
+    base = dimm.VENDOR_SPLIT
+    total = sum(base)
+    split = [n_dimms * b // total for b in base]
+    split[0] += n_dimms - sum(split)
+    cells, vidx = dimm.sample_population(
+        key, n_dimms=n_dimms, vendors=vendors, split=split, consts=consts
+    )
+    return Fleet(cells=cells, vendor=vidx)
+
+
+def from_population(cells: CellParams, vendor: Array | None = None) -> Fleet:
+    """Wrap an existing sampled population as a fleet."""
+    if vendor is None:
+        vendor = jnp.zeros(cells.r.shape, jnp.int32)
+    return Fleet(cells=cells, vendor=vendor)
+
+
+class SweepResult(NamedTuple):
+    """Dense characterization output over the (temp × pattern × DIMM) grid.
+
+    Timing stacks are ns, cycle-quantized, last axis ordered as
+    ``PARAM_NAMES`` = (trcd, tras, twr, trp)."""
+
+    temps_c: Array      # (T,)
+    patterns: Array     # (P,)
+    read: Array         # (T, P, N, 4) read-mode individual minima
+    write: Array        # (T, P, N, 4) write-mode minima (tras = JEDEC)
+    joint: Array        # (T, P, N, 4) simultaneous-reduction minima
+    #: The caller's exact Python temperatures. ``temps_c`` is float32, which
+    #: perturbs values like 40.1 — bin edges and summary keys must come from
+    #: here so controller lookups at the swept temperature hit their bin.
+    temps_exact: Tuple[float, ...] = ()
+
+    def bin_edges(self) -> Tuple[float, ...]:
+        if self.temps_exact:
+            return self.temps_exact
+        return tuple(float(t) for t in self.temps_c.tolist())
+
+    # -- reductions ---------------------------------------------------------
+    @property
+    def read_reductions(self) -> Array:
+        return profiler.stack_reductions(self.read)
+
+    @property
+    def write_reductions(self) -> Array:
+        return profiler.stack_reductions(self.write)
+
+    @property
+    def joint_reductions(self) -> Array:
+        return profiler.stack_reductions(self.joint)
+
+    # -- controller-facing views -------------------------------------------
+    def worst_pattern_idx(self) -> int:
+        """Index of the guarantee pattern (smallest margin factor)."""
+        return int(jnp.argmin(self.patterns))
+
+    def merged_timings(self) -> Array:
+        """(T, N, 4) elementwise max of read/write requirements at the
+        worst-case pattern — the set a controller programs per temp bin.
+
+        Refuses to build controller-facing output from a sweep that never
+        tested the guarantee pattern (margin factor 1.0): timings profiled
+        only under benign patterns are not safe to program."""
+        p = self.worst_pattern_idx()
+        worst = float(self.patterns[p])
+        if worst > 1.0:
+            raise ValueError(
+                f"sweep lacks the worst-case guarantee pattern: min margin "
+                f"factor is {worst} (> 1.0); re-sweep with pattern 1.0 "
+                "before programming controller tables"
+            )
+        return jnp.maximum(self.read[:, p], self.write[:, p])
+
+    def table_entries(self):
+        """Iterate ``(bin_idx, temp_c, dimm_idx, [trcd, tras, twr, trp],
+        margin)`` over the merged read/write requirements at the worst
+        pattern; ``margin`` is the mean fractional reduction vs JEDEC.
+
+        The single ingestion point for table consumers
+        (``DimmTimingTable.from_fleet``, altune ``TimingTable.from_fleet``):
+        one host transfer, one definition of the programmed set and of the
+        reduction-vs-JEDEC convention (``profiler.stack_reductions``)."""
+        merged = self.merged_timings()
+        grid = merged.tolist()
+        margins = profiler.stack_reductions(merged).mean(axis=-1).tolist()
+        for b, t in enumerate(self.bin_edges()):
+            for i, timings in enumerate(grid[b]):
+                yield b, t, i, timings, margins[b][i]
+
+    def to_table(self):
+        """Build a :class:`repro.core.controller.DimmTimingTable` directly
+        from the sweep (no re-profiling)."""
+        from repro.core.controller import DimmTimingTable
+
+        return DimmTimingTable.from_fleet(self)
+
+    # -- paper-style aggregates --------------------------------------------
+    def summary(self) -> Dict[float, Dict[str, Tuple[float, float, float]]]:
+        """Fig. 2 / Table-style aggregate: per temperature, per parameter
+        (min, mean, max) fractional reduction across the fleet at the
+        worst-case pattern (tWR taken from the write test, like the paper's
+        headline numbers)."""
+        p = self.worst_pattern_idx()
+        red = self.read_reductions[:, p]          # (T, N, 4)
+        wred = self.write_reductions[:, p]
+        out: Dict[float, Dict[str, Tuple[float, float, float]]] = {}
+        for ti, t in enumerate(self.bin_edges()):
+            per_param = {}
+            for pi, name in enumerate(PARAM_NAMES):
+                col = wred[ti, :, pi] if name == "twr" else red[ti, :, pi]
+                per_param[name] = (
+                    float(col.min()), float(col.mean()), float(col.max())
+                )
+            out[float(t)] = per_param
+        return out
+
+
+@partial(jax.jit, static_argnames=("window_s", "consts"))
+def _sweep_grid(
+    cells: CellParams,
+    temps_c: Array,
+    patterns: Array,
+    window_s: float,
+    consts: ChargeModelConstants,
+) -> Tuple[Array, Array, Array]:
+    """The whole characterization study as one traced computation."""
+
+    def at_point(t: Array, p: Array) -> Tuple[Array, Array, Array]:
+        read = profiler.individual_min_timings(cells, t, p, window_s, consts)
+        write = profiler.write_mode_min_timings(cells, t, p, window_s, consts)
+        joint = profiler.joint_min_timings(
+            cells, t, 1.0, window_s, consts
+        )
+        # Joint mode is pattern-independent in the model but broadcast over
+        # the pattern axis so all three stacks share one dense shape.
+        return read, write, joint
+
+    over_patterns = jax.vmap(at_point, in_axes=(None, 0))
+    over_grid = jax.vmap(over_patterns, in_axes=(0, None))
+    return over_grid(temps_c, patterns)
+
+
+def sweep(
+    fleet: Fleet | CellParams,
+    temps_c: Sequence[float] = DEFAULT_TEMPS_C,
+    patterns: Sequence[float] = DEFAULT_PATTERNS,
+    window_s: float = charge.REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> SweepResult:
+    """Characterize a whole fleet in one jitted (vmap × vmap) call.
+
+    Equivalent to — and tested against — looping
+    ``profiler.profile_individual`` / ``profile_write_mode`` /
+    ``profile_joint`` over every (temperature, pattern) point, but with the
+    entire grid fused into one XLA computation.
+    """
+    cells = fleet.cells if isinstance(fleet, Fleet) else fleet
+    t = jnp.asarray(temps_c, jnp.float32)
+    p = jnp.asarray(patterns, jnp.float32)
+    read, write, joint = _sweep_grid(cells, t, p, float(window_s), consts)
+    return SweepResult(
+        temps_c=t, patterns=p, read=read, write=write, joint=joint,
+        temps_exact=tuple(float(x) for x in temps_c),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Loop baseline (measurement reference only — what the seed pipeline did)
+# ---------------------------------------------------------------------------
+def sweep_loop_baseline(
+    fleet: Fleet | CellParams,
+    temps_c: Sequence[float] = DEFAULT_TEMPS_C,
+    patterns: Sequence[float] = DEFAULT_PATTERNS,
+    window_s: float = charge.REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> SweepResult:
+    """Per-DIMM Python-loop characterization: one ``profile_*`` call per
+    (DIMM, temperature, pattern) point, results reassembled from dicts.
+
+    This is the seed's execution model, kept as the wall-clock baseline for
+    ``benchmarks/fleet_sweep.py`` and the equivalence tests. O(N·T·P)
+    Python dispatches — do not use it for real fleets."""
+    cells = fleet.cells if isinstance(fleet, Fleet) else fleet
+    n = int(cells.r.shape[0])
+    read, write, joint = [], [], []
+    for t in temps_c:
+        rt, wt, jt = [], [], []
+        for p in patterns:
+            rd, wd, jd = [], [], []
+            for i in range(n):
+                one = CellParams(
+                    r=cells.r[i : i + 1], c=cells.c[i : i + 1], leak=cells.leak[i : i + 1]
+                )
+                r = profiler.profile_individual(one, t, window_s, consts, pattern=p)
+                w = profiler.profile_write_mode(one, t, window_s, consts, pattern=p)
+                j = profiler.profile_joint(one, t, window_s, consts)
+                rd.append([float(r.timings[q][0]) for q in PARAM_NAMES])
+                wd.append([float(w.timings[q][0]) for q in PARAM_NAMES])
+                jd.append([float(j.timings[q][0]) for q in PARAM_NAMES])
+            rt.append(rd)
+            wt.append(wd)
+            jt.append(jd)
+        read.append(rt)
+        write.append(wt)
+        joint.append(jt)
+    return SweepResult(
+        temps_c=jnp.asarray(temps_c, jnp.float32),
+        patterns=jnp.asarray(patterns, jnp.float32),
+        read=jnp.asarray(read, jnp.float32),
+        write=jnp.asarray(write, jnp.float32),
+        joint=jnp.asarray(joint, jnp.float32),
+        temps_exact=tuple(float(x) for x in temps_c),
+    )

@@ -33,9 +33,12 @@ paper's aggregates — +14.0 % memory-intensive, +2.9 % non-intensive,
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Tuple
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import Array
 
 from repro.core.timing import JEDEC_DDR3_1600, TBURST_NS, TCL_NS, TimingParams
@@ -123,12 +126,17 @@ SINGLE_CORE = SystemConfig(n_cores=1)
 MULTI_CORE = SystemConfig(n_cores=4)
 
 
-def _fields(ws: Tuple[Workload, ...]) -> Dict[str, Array]:
+# Cached per workload tuple, as HOST numpy arrays: they are rebuilt once
+# instead of on every evaluate() call, and — unlike jnp arrays — caching
+# them is safe when the first call happens inside a jit trace (a cached
+# jnp.array would be a leaked tracer there).
+@functools.lru_cache(maxsize=8)
+def _fields(ws: Tuple[Workload, ...]) -> Dict[str, "np.ndarray"]:
     return {
-        "mpki": jnp.array([w.mpki for w in ws], jnp.float32),
-        "row_hit": jnp.array([w.row_hit for w in ws], jnp.float32),
-        "write_frac": jnp.array([w.write_frac for w in ws], jnp.float32),
-        "mlp": jnp.array([w.mlp for w in ws], jnp.float32),
+        "mpki": np.array([w.mpki for w in ws], np.float32),
+        "row_hit": np.array([w.row_hit for w in ws], np.float32),
+        "write_frac": np.array([w.write_frac for w in ws], np.float32),
+        "mlp": np.array([w.mlp for w in ws], np.float32),
     }
 
 
@@ -228,6 +236,50 @@ def speedup_report(
         "stream_max": float(cat("stream").max()) - 1.0,
         "best": float(speedup.max()) - 1.0,
     }
+
+
+# ---------------------------------------------------------------------------
+# Fleet path: vmapped evaluation of per-DIMM timing stacks
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("cfg", "workloads"))
+def _ipc_stack(flat: Array, cfg: SystemConfig, workloads: Tuple[Workload, ...]) -> Array:
+    def one(ts: Array) -> Array:
+        t = TimingParams(ts[0], ts[1], ts[2], ts[3])
+        return evaluate(t, cfg, workloads)["ipc"]
+
+    return jax.vmap(one)(flat)
+
+
+def evaluate_stack(
+    timings: Array,
+    cfg: SystemConfig,
+    workloads: Tuple[Workload, ...] = WORKLOADS,
+) -> Array:
+    """IPC for a ``(..., 4)`` timing stack (``PARAM_NAMES`` order, ns).
+
+    Jitted and vmapped over all leading axes — the fleet engine feeds the
+    ``(n_temps, n_patterns, n_dimms, 4)`` sweep output straight in (eager
+    dispatch of the unrolled bisection loop is ~300× slower). Returns IPC
+    with shape ``(..., n_workloads)``.
+    """
+    timings = jnp.asarray(timings, jnp.float32)
+    ipc = _ipc_stack(timings.reshape(-1, 4), cfg, workloads)
+    return ipc.reshape(*timings.shape[:-1], ipc.shape[-1])
+
+
+def fleet_speedups(
+    timings: Array,
+    cfg: SystemConfig = MULTI_CORE,
+    workloads: Tuple[Workload, ...] = WORKLOADS,
+) -> Array:
+    """Per-entry geometric-mean speedup over JEDEC for a ``(..., 4)`` stack.
+
+    This is the per-DIMM "what do I gain from adapting this module" number
+    of the paper's Fig. 3, computed for a whole fleet in one call."""
+    jedec = jnp.asarray([list(JEDEC_DDR3_1600)], jnp.float32)
+    base = evaluate_stack(jedec, cfg, workloads)[0]
+    ipc = evaluate_stack(timings, cfg, workloads)
+    return jnp.exp(jnp.log(ipc / base).mean(axis=-1))
 
 
 def per_workload_speedups(

@@ -19,6 +19,15 @@ Data patterns: the paper tests worst-case patterns (coupling noise). A
 pattern factor ≤ 1 scales the effective sense margin; ``PATTERNS`` includes
 the worst (1.0, which the safety guarantee is stated against) and benign
 ones, used by the repeatability analysis.
+
+**Layering** (fleet refactor): the grid searches live in three *pure* array
+functions — :func:`individual_min_timings`, :func:`write_mode_min_timings`,
+:func:`joint_min_timings` — that map ``(cells, temp_c, pattern)`` to a
+``(..., n_dimms, 4)`` timing stack (last axis ordered as ``PARAM_NAMES``)
+with no Python data structures in the traced path. ``profile_*`` are thin
+dict-building wrappers kept for the single-(temp, pattern) API; the fleet
+engine (:mod:`repro.core.fleet`) vmaps the pure functions over the whole
+(DIMM × temperature × pattern) grid in one jitted call.
 """
 
 from __future__ import annotations
@@ -91,16 +100,29 @@ def _min_safe_on_grid(ok_at: Callable[[Array], Array], grid: Array) -> Array:
     return grid[idx]
 
 
-def profile_individual(
+# ---------------------------------------------------------------------------
+# Pure array core (vmappable / jittable — what the fleet engine batches)
+# ---------------------------------------------------------------------------
+#: JEDEC baseline as a (4,) vector in ``PARAM_NAMES`` order.
+JEDEC_VEC: Tuple[float, float, float, float] = tuple(
+    getattr(JEDEC_DDR3_1600, p) for p in PARAM_NAMES
+)
+
+
+def individual_min_timings(
     cells: CellParams,
-    temp_c: float,
+    temp_c: Array | float,
+    pattern: Array | float = 1.0,
     window_s: float = charge.REFRESH_WINDOW_S,
     consts: ChargeModelConstants = DEFAULT_CONSTANTS,
-    pattern: float = 1.0,
-) -> ProfileResult:
-    """Per-parameter minimal safe timings, others held at JEDEC (§1.5)."""
-    # Pattern factor scales the cell's effective sense margin.
-    eff = CellParams(r=cells.r, c=cells.c * pattern, leak=cells.leak)
+) -> Array:
+    """Per-parameter minimal safe timings, others held at JEDEC (§1.5).
+
+    Pure: returns a ``(n_dimms, 4)`` stack (``PARAM_NAMES`` order, ns,
+    cycle-quantized). ``temp_c`` / ``pattern`` may be tracers — the fleet
+    engine vmaps this over the (temperature × pattern) grid.
+    """
+    eff = charge.apply_pattern(cells, pattern)
     base = JEDEC_DDR3_1600
 
     def ok_trcd(t: Array) -> Array:
@@ -124,22 +146,21 @@ def profile_individual(
         )
 
     searchers = {"trcd": ok_trcd, "tras": ok_tras, "twr": ok_twr, "trp": ok_trp}
-    timings = {p: _min_safe_on_grid(fn, _grid(p)) for p, fn in searchers.items()}
-    reductions = {
-        p: 1.0 - timings[p] / getattr(base, p) for p in PARAM_NAMES
-    }
-    return ProfileResult(timings, reductions, temp_c, window_s)
+    return jnp.stack(
+        [_min_safe_on_grid(searchers[p], _grid(p)) for p in PARAM_NAMES], axis=-1
+    )
 
 
-def profile_write_mode(
+def write_mode_min_timings(
     cells: CellParams,
-    temp_c: float,
+    temp_c: Array | float,
+    pattern: Array | float = 1.0,
     window_s: float = charge.REFRESH_WINDOW_S,
     consts: ChargeModelConstants = DEFAULT_CONSTANTS,
-    pattern: float = 1.0,
-) -> ProfileResult:
-    """Write-test minimal timings for {tRCD, tWR, tRP} (Fig. 2b)."""
-    eff = CellParams(r=cells.r, c=cells.c * pattern, leak=cells.leak)
+) -> Array:
+    """Write-test minimal timings for {tRCD, tWR, tRP} (Fig. 2b), tRAS held
+    at JEDEC. Pure; returns ``(n_dimms, 4)``."""
+    eff = charge.apply_pattern(cells, pattern)
     base = JEDEC_DDR3_1600
 
     def ok(param: str) -> Callable[[Array], Array]:
@@ -150,13 +171,79 @@ def profile_write_mode(
 
         return f
 
-    names = ("trcd", "twr", "trp")
-    timings = {p: _min_safe_on_grid(ok(p), _grid(p)) for p in names}
-    timings["tras"] = jnp.broadcast_to(
-        jnp.asarray(base.tras, jnp.float32), cells.r.shape
+    cols = {p: _min_safe_on_grid(ok(p), _grid(p)) for p in ("trcd", "twr", "trp")}
+    cols["tras"] = jnp.broadcast_to(jnp.asarray(base.tras, jnp.float32), cells.r.shape)
+    return jnp.stack([cols[p] for p in PARAM_NAMES], axis=-1)
+
+
+def joint_min_timings(
+    cells: CellParams,
+    temp_c: Array | float,
+    restore_scale: Array | float = 1.0,
+    window_s: float = charge.REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Array:
+    """Simultaneous-reduction minimal timings (§1.7). Pure; ``(n_dimms, 4)``.
+
+    First reduce tRAS (restore target scaled by ``restore_scale`` ≥ 1 of the
+    minimal target: 1.0 = maximally reduced restore), then derive tRCD/tRP
+    *given* the reduced restored voltage."""
+    v_tgt_min = charge.restore_target(cells, temp_c, window_s, consts)
+    v_tgt = jnp.clip(v_tgt_min * restore_scale, v_tgt_min, consts.v_full)
+
+    tras = charge.min_tras(cells, temp_c, window_s, consts, v_tgt=v_tgt)
+    twr = charge.min_twr(cells, temp_c, window_s, consts, v_tgt=v_tgt)
+    trcd = charge.min_trcd(cells, temp_c, v_restored=v_tgt, window_s=window_s, consts=consts)
+    trp = charge.min_trp(cells, temp_c, window_s, consts)
+
+    tck = TCK_DDR3_1600_NS
+    raw = jnp.stack(
+        [jnp.broadcast_to(t, cells.r.shape) for t in (trcd, tras, twr, trp)], axis=-1
     )
-    reductions = {p: 1.0 - timings[p] / getattr(base, p) for p in PARAM_NAMES}
-    return ProfileResult(timings, reductions, temp_c, window_s)
+    jedec = jnp.asarray(JEDEC_VEC, jnp.float32)
+    return jnp.minimum(jnp.ceil(raw / tck) * tck, jedec)
+
+
+def stack_reductions(timings: Array) -> Array:
+    """Fractional reduction vs JEDEC for a ``(..., 4)`` timing stack."""
+    return 1.0 - timings / jnp.asarray(JEDEC_VEC, jnp.float32)
+
+
+def _unstack(timings: Array) -> Dict[str, Array]:
+    return {p: timings[..., i] for i, p in enumerate(PARAM_NAMES)}
+
+
+def _result(timings: Array, temp_c: float, window_s: float) -> ProfileResult:
+    return ProfileResult(
+        _unstack(timings), _unstack(stack_reductions(timings)), temp_c, window_s
+    )
+
+
+# ---------------------------------------------------------------------------
+# Single-(temperature, pattern) wrappers (the original §1.5 API)
+# ---------------------------------------------------------------------------
+def profile_individual(
+    cells: CellParams,
+    temp_c: float,
+    window_s: float = charge.REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+    pattern: float = 1.0,
+) -> ProfileResult:
+    """Per-parameter minimal safe timings, others held at JEDEC (§1.5)."""
+    t = individual_min_timings(cells, temp_c, pattern, window_s, consts)
+    return _result(t, temp_c, window_s)
+
+
+def profile_write_mode(
+    cells: CellParams,
+    temp_c: float,
+    window_s: float = charge.REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+    pattern: float = 1.0,
+) -> ProfileResult:
+    """Write-test minimal timings for {tRCD, tWR, tRP} (Fig. 2b)."""
+    t = write_mode_min_timings(cells, temp_c, pattern, window_s, consts)
+    return _result(t, temp_c, window_s)
 
 
 def profile_joint(
@@ -168,32 +255,12 @@ def profile_joint(
 ) -> ProfileResult:
     """Simultaneous reduction (§1.7 interdependence).
 
-    First reduce tRAS (restore target scaled by ``restore_scale`` ≥ 1 of the
-    minimal target: 1.0 = maximally reduced restore), then profile
-    tRCD/tRP *given* the reduced restored voltage. With ``restore_scale``
-    = 1 the next access sees exactly the floor charge and tRCD/tRP have no
-    slack left — the paper's observation in its sharpest form.
+    With ``restore_scale`` = 1 the next access sees exactly the floor charge
+    and tRCD/tRP have no slack left — the paper's observation in its
+    sharpest form.
     """
-    v_tgt_min = charge.restore_target(cells, temp_c, window_s, consts)
-    v_tgt = jnp.clip(v_tgt_min * restore_scale, v_tgt_min, consts.v_full)
-
-    tras = charge.min_tras(cells, temp_c, window_s, consts, v_tgt=v_tgt)
-    twr = charge.min_twr(cells, temp_c, window_s, consts, v_tgt=v_tgt)
-    trcd = charge.min_trcd(cells, temp_c, v_restored=v_tgt, window_s=window_s, consts=consts)
-    trp = charge.min_trp(cells, temp_c, window_s, consts)
-
-    tck = TCK_DDR3_1600_NS
-    q = lambda t, p: jnp.minimum(  # noqa: E731
-        jnp.ceil(t / tck) * tck, getattr(JEDEC_DDR3_1600, p)
-    )
-    timings = {
-        "trcd": q(trcd, "trcd"),
-        "tras": q(tras, "tras"),
-        "twr": q(twr, "twr"),
-        "trp": q(trp, "trp"),
-    }
-    reductions = {p: 1.0 - timings[p] / getattr(JEDEC_DDR3_1600, p) for p in PARAM_NAMES}
-    return ProfileResult(timings, reductions, temp_c, window_s)
+    t = joint_min_timings(cells, temp_c, restore_scale, window_s, consts)
+    return _result(t, temp_c, window_s)
 
 
 # ---------------------------------------------------------------------------

@@ -96,14 +96,10 @@ VARIANTS = {
 
 
 def _make_mesh(mesh_name: str, pods: int):
-    import jax
-    from jax.sharding import AxisType
-
-    from repro.launch.mesh import make_production_mesh
+    from repro.launch.mesh import auto_mesh, make_production_mesh
 
     if pods > 2:
-        return jax.make_mesh((pods, 16, 16), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
+        return auto_mesh((pods, 16, 16), ("pod", "data", "model"))
     return make_production_mesh(multi_pod=mesh_name.startswith("multi"))
 
 

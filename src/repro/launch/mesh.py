@@ -10,23 +10,33 @@ it (DESIGN.md §5).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 requires explicit Auto axis types for with-sharding use
+    from jax.sharding import AxisType
+
+    def _axis_kwargs(n_axes: int):
+        return {"axis_types": (AxisType.Auto,) * n_axes}
+except ImportError:  # jax < 0.5: every mesh axis is Auto, no kwarg exists
+    AxisType = None
+
+    def _axis_kwargs(n_axes: int):
+        return {}
+
+
+def auto_mesh(shape, axes):
+    """``jax.make_mesh`` with all-Auto axis types on any jax version."""
+    return jax.make_mesh(tuple(shape), tuple(axes), **_axis_kwargs(len(axes)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return auto_mesh(shape, axes)
 
 
 def make_mesh_for(devices_per_pod: int, n_pods: int = 1, model_parallel: int = 16):
     """Elastic variant: arbitrary pod count/size (restart after pod loss)."""
     data = devices_per_pod // model_parallel
     if n_pods > 1:
-        return jax.make_mesh(
-            (n_pods, data, model_parallel), ("pod", "data", "model"),
-            axis_types=(AxisType.Auto,) * 3,
-        )
-    return jax.make_mesh(
-        (data, model_parallel), ("data", "model"), axis_types=(AxisType.Auto,) * 2
-    )
+        return auto_mesh((n_pods, data, model_parallel), ("pod", "data", "model"))
+    return auto_mesh((data, model_parallel), ("data", "model"))

@@ -1,9 +1,8 @@
 """Roofline-model validation: analytic FLOPs vs compiled HLO, plus
 hypothesis properties of the cost models."""
 
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from benchmarks.crossval import one_layer_flops
 from repro.core import altune
@@ -70,6 +69,7 @@ def test_attn_stream_bytes_skip_beats_generic():
             assert skip < gen, (arch, s, skip, gen)
 
 
+@pytest.mark.slow
 def test_train_vs_skip_gradients_match():
     """Block-skip attention is a pure execution-parameter change: the
     training gradients must be (numerically) identical."""

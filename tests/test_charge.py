@@ -1,10 +1,9 @@
 """Unit + hypothesis property tests for the cell charge model."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core import charge, dimm
 from repro.core.charge import CellParams, DEFAULT_CONSTANTS as C

@@ -12,6 +12,7 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
+import pytest
 
 import repro.configs as C
 from repro.data.pipeline import DataConfig, batch_for_step
@@ -20,6 +21,7 @@ from repro.train.step import TrainConfig, init_train_state, make_train_step
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
+@pytest.mark.slow
 def test_remat_offload_trains():
     """The host-offload remat mode must be numerically identical to plain
     remat (it only changes WHERE the boundary saves live)."""
@@ -37,15 +39,17 @@ def test_remat_offload_trains():
     assert abs(losses[False] - losses[True]) < 1e-4, losses
 
 
+@pytest.mark.slow
 def test_elastic_restore_across_meshes(tmp_path):
     script = textwrap.dedent(f"""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+        from jax.sharding import NamedSharding, PartitionSpec as P
 
         import repro.configs as C
         from repro.ft import checkpoint as ckpt
+        from repro.launch.mesh import auto_mesh
         from repro.models import model as lm
         from repro.parallel.sharding import param_specs, ShardingPolicy, DEFAULT_RULES
 
@@ -53,8 +57,7 @@ def test_elastic_restore_across_meshes(tmp_path):
         params = lm.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
 
         def shardings(shape):
-            mesh = jax.make_mesh(shape, ("data", "model"),
-                                 axis_types=(AxisType.Auto,) * 2)
+            mesh = auto_mesh(shape, ("data", "model"))
             pol = ShardingPolicy(mesh=mesh, rules=dict(DEFAULT_RULES))
             specs = lm.logical_specs(params, cfg)
             return param_specs(specs, params, pol)

@@ -132,6 +132,7 @@ def test_timing_table_roundtrip(tmp_path):
     assert got is not None and got["config"]["bm"] == 256
 
 
+@pytest.mark.slow
 def test_steptuner_never_worse_than_baseline():
     """The auto-tuner's AL-DRAM guarantee: selection ≥ baseline, always."""
     import os

@@ -2,11 +2,10 @@
 
 import dataclasses
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 import repro.configs as C
 from repro.models import moe

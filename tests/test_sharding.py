@@ -19,9 +19,9 @@ from repro.parallel.sharding import (
 
 
 def _mesh_1d():
-    return jax.make_mesh(
-        (1,), ("model",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    from repro.launch.mesh import auto_mesh
+
+    return auto_mesh((1,), ("model",))
 
 
 @pytest.mark.parametrize("arch", C.ARCH_IDS)

@@ -1,0 +1,86 @@
+"""TimingParams.quantize controller-correctness invariants.
+
+A real memory controller programs integer clock cycles; ``quantize`` must
+therefore be (a) idempotent, (b) monotone, and (c) never round *below* the
+requested timing — rounding down would program an unsafe latency. These are
+the invariants every table/controller path relies on.
+"""
+
+import math
+
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core.timing import PARAM_NAMES, TCK_DDR3_1600_NS, TimingParams
+
+TCKS = (0.75, 1.0, TCK_DDR3_1600_NS, 2.5)
+
+
+def _params(trcd, tras, twr, trp):
+    return TimingParams(trcd=trcd, tras=tras, twr=twr, trp=trp)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic grid (always runs, hypothesis or not)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("tck", TCKS)
+@pytest.mark.parametrize("base", [0.1, 1.2499999, 1.25, 13.75, 34.999, 100.0])
+def test_quantize_grid_invariants(base, tck):
+    t = _params(base, base * 2.0, base * 1.1, base * 0.9)
+    q = t.quantize(tck)
+    for p in PARAM_NAMES:
+        v, qv = getattr(t, p), getattr(q, p)
+        assert qv >= v - 1e-6              # never below the input
+        assert qv - v < tck + 1e-6         # ...but within one cycle of it
+        cycles = qv / tck
+        assert abs(cycles - round(cycles)) < 1e-6  # integer cycles
+    assert q.quantize(tck) == q            # idempotent
+
+
+@pytest.mark.parametrize("tck", TCKS)
+def test_quantize_monotone_pairs(tck):
+    lo = _params(1.0, 10.0, 5.0, 2.0)
+    hi = _params(1.3, 11.1, 5.0, 2.6)
+    qlo, qhi = lo.quantize(tck), hi.quantize(tck)
+    for p in PARAM_NAMES:
+        assert getattr(qlo, p) <= getattr(qhi, p)
+
+
+# ---------------------------------------------------------------------------
+# Property-based (hypothesis; skipped when the real library is missing)
+# ---------------------------------------------------------------------------
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed"
+)
+
+timing_st = st.builds(
+    _params,
+    trcd=st.floats(0.01, 50.0),
+    tras=st.floats(0.01, 120.0),
+    twr=st.floats(0.01, 50.0),
+    trp=st.floats(0.01, 50.0),
+)
+
+
+@needs_hypothesis
+@settings(max_examples=200, deadline=None)
+@given(timing_st, st.sampled_from(TCKS))
+def test_quantize_properties(t, tck):
+    q = t.quantize(tck)
+    for p in PARAM_NAMES:
+        v, qv = getattr(t, p), getattr(q, p)
+        assert qv >= v - 1e-6
+        assert qv - v < tck + 1e-6
+        cycles = qv / tck
+        assert math.isclose(cycles, round(cycles), abs_tol=1e-6)
+    assert q.quantize(tck) == q
+
+
+@needs_hypothesis
+@settings(max_examples=200, deadline=None)
+@given(timing_st, st.floats(0.0, 3.0), st.sampled_from(TCKS))
+def test_quantize_monotone(t, bump, tck):
+    bigger = _params(t.trcd + bump, t.tras + bump, t.twr + bump, t.trp + bump)
+    q, qb = t.quantize(tck), bigger.quantize(tck)
+    for p in PARAM_NAMES:
+        assert getattr(q, p) <= getattr(qb, p)

@@ -45,7 +45,9 @@ def test_loss_decreases():
     step = jax.jit(make_train_step(cfg, tc))
     dc = DataConfig(seq_len=64, global_batch=8)
     losses = []
-    for i in range(40):
+    # 12 steps: the loss has dropped well over 2 nats by then, 4x the
+    # threshold.
+    for i in range(12):
         batch = {k: jnp.asarray(v) for k, v in batch_for_step(cfg, dc, i).items()}
         params, opt, m = step(params, opt, batch)
         losses.append(float(m["loss"]))
