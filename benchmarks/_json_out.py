@@ -1,0 +1,35 @@
+"""Shared benchmark-artifact writer.
+
+Benchmarks print ``name,value,reference`` CSV for humans; CI additionally
+persists the same rows as JSON (``--json out.json``) and uploads them as
+build artifacts, so the perf trajectory (sweep speedup, replay speedup,
+realized reductions) is comparable across PRs.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, Sequence, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def write_rows_json(
+    path: str | pathlib.Path,
+    benchmark: str,
+    rows: Sequence[Row],
+    meta: Dict[str, object] | None = None,
+) -> None:
+    """Persist benchmark rows as ``{benchmark, meta, rows:{name: {value,
+    reference}}}`` — one stable JSON schema for every benchmark artifact."""
+    payload = {
+        "benchmark": benchmark,
+        "meta": dict(meta or {}),
+        "rows": {
+            name: {"value": value, "reference": ref} for name, value, ref in rows
+        },
+    }
+    out = pathlib.Path(path)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(payload, indent=1, sort_keys=True))

@@ -25,6 +25,11 @@ import numpy as np
 from repro.core import fleet, perfmodel, profiler
 from repro.core.timing import PARAM_NAMES
 
+try:
+    from benchmarks._json_out import write_rows_json
+except ImportError:  # direct-script execution: benchmarks/ is sys.path[0]
+    from _json_out import write_rows_json
+
 #: Paper §1.5 headline band at 55 °C: per-parameter average reductions
 #: range from 17.3 % (tRCD) to 54.8 % (tWR).
 PAPER_55C_MIN = 0.173
@@ -130,6 +135,8 @@ def main() -> None:
                     help="loop over every module instead of extrapolating")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: 48 DIMMs, 3 temps, worst pattern only")
+    ap.add_argument("--json", type=str, default=None,
+                    help="also write rows to this JSON artifact path")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -165,6 +172,9 @@ def main() -> None:
         )
     for name, value, ref in rows:
         print(f"{name},{value:.6g},{ref}")
+    if args.json:
+        write_rows_json(args.json, "fleet_sweep", rows,
+                        meta={"tiny": args.tiny, "seed": args.seed})
 
 
 if __name__ == "__main__":

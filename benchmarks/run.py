@@ -24,12 +24,16 @@ def main() -> None:
         fleet_sweep,
         paper_extras,
         roofline,
+        trace_eval,
     )
 
     sections = [
         ("fig2 (115-DIMM profiling)", fig2_profiling.run),
         ("fleet sweep (batched characterization)",
          lambda: fleet_sweep.run(n_dimms=256, baseline_dimms=8, verbose=False)),
+        ("trace eval (controller replay)",
+         lambda: trace_eval.run(n_dimms=128, n_steps=1000, baseline_dimms=8,
+                                baseline_steps=100, verbose=False)),
         ("fig3 (real-system performance)", fig3_performance.run),
         ("paper extras (§1.7)", paper_extras.run),
         ("roofline (dry-run cells)", roofline.run),

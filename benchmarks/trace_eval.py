@@ -1,0 +1,205 @@
+"""Trace-driven controller evaluation: a fleet-day in one jitted scan.
+
+The ROADMAP's open item, closed: feed the AL-DRAM controller recorded
+temperature traces (:mod:`repro.core.traces` scenarios) and score the
+*realized* latency reductions, switching activity and performance gain
+against the paper's claims (14 % average speedup, <0.1 °C/s drift, zero
+errors). The controller is the pure scan state machine of
+:mod:`repro.core.controller` — a 1,000-DIMM × 10,000-step day is ONE
+compiled ``lax.scan`` — and the measured baseline is the per-observation
+``ALDRAMController.observe`` Python loop it replaced.
+
+  PYTHONPATH=src python benchmarks/trace_eval.py             # 1,000 × 10,000
+  PYTHONPATH=src python benchmarks/trace_eval.py --tiny      # CI smoke run
+  PYTHONPATH=src python benchmarks/trace_eval.py --scenario hvac_failure
+
+The loop baseline is timed on a ``--baseline-dimms`` × ``--baseline-steps``
+sub-grid (default 24 × 500) and extrapolated linearly to the full grid —
+running 10⁷ Python observe calls would take tens of minutes, which is the
+point. Equivalence with the scan is asserted bit-exactly on that sub-grid
+(the run fails hard on divergence); the speedup is reported, not gated —
+wall-clock on shared CI boxes is too noisy to assert.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import controller, fleet, perfmodel, traces
+
+try:
+    from benchmarks._json_out import write_rows_json
+except ImportError:  # direct-script execution: benchmarks/ is sys.path[0]
+    from _json_out import write_rows_json
+
+
+def run(
+    n_dimms: int = 1000,
+    n_steps: int = 10_000,
+    scenario: str = "diurnal",
+    temp_bins=controller.DEFAULT_TEMP_BINS,
+    dt_s: float = traces.DEFAULT_DT_S,
+    error_rate: float = 0.0,
+    baseline_dimms: int = 24,
+    baseline_steps: int = 500,
+    seed: int = 0,
+    verbose: bool = True,
+):
+    key = jax.random.PRNGKey(seed)
+    k_fleet, k_trace, k_err = jax.random.split(key, 3)
+
+    fl = fleet.synthesize(k_fleet, n_dimms)
+    sweep = fleet.sweep(fl, temps_c=temp_bins, patterns=(1.0,))
+    table = sweep.to_table()
+
+    trace_kw = {"vendor": fl.vendor} if scenario == "vendor_skew" else {}
+    trace = traces.generate(scenario, k_trace, n_dimms, n_steps, dt_s, **trace_kw)
+    errors = traces.error_injections(k_err, n_steps, n_dimms, error_rate)
+    drift = traces.max_drift_rate(trace, dt_s)
+
+    # -- scan replay: compile once, then time the steady state -------------
+    res = controller.replay(table, trace, errors)
+    jax.block_until_ready(res.timings)
+    t0 = time.perf_counter()
+    res = controller.replay(table, trace, errors)
+    jax.block_until_ready(res.timings)
+    t_scan = time.perf_counter() - t0
+
+    # -- per-observation Python loop (the pre-refactor execution model) ----
+    n_b = min(baseline_dimms, n_dimms)
+    s_b = min(baseline_steps, n_steps)
+    sub_table = controller.DimmTimingTable(
+        temp_bins=table.temp_bins, stack=table.stack[:n_b]
+    )
+    ctl = controller.ALDRAMController(sub_table)
+    sub_trace = np.asarray(trace[:s_b, :n_b])
+    sub_err = np.asarray(errors[:s_b, :n_b])
+    loop_rows = np.zeros((s_b, n_b, 4), np.float32)
+    t0 = time.perf_counter()
+    for s in range(s_b):
+        for d in range(n_b):
+            if sub_err[s, d]:
+                ctl.report_error(d)
+            t = ctl.observe(d, float(sub_trace[s, d]))
+            loop_rows[s, d] = (t.trcd, t.tras, t.twr, t.trp)
+    t_loop_measured = time.perf_counter() - t0
+    t_loop = t_loop_measured * (n_dimms * n_steps) / (n_b * s_b)
+    speedup = t_loop / t_scan
+
+    # -- bit-exact equivalence on the measured sub-grid --------------------
+    sub_res = controller.replay(sub_table, sub_trace, sub_err)
+    exact = bool(np.array_equal(np.asarray(sub_res.timings), loop_rows))
+    max_err = float(np.abs(np.asarray(sub_res.timings) - loop_rows).max())
+    if not exact:  # the correctness gate: CI must go red, not just log
+        raise AssertionError(
+            f"scan replay diverged from the observe loop: "
+            f"max|err| = {max_err} ns on the {n_b}x{s_b} sub-grid"
+        )
+
+    # -- scoring -----------------------------------------------------------
+    score = perfmodel.trace_score(table.stack, res)
+
+    rows = [
+        ("trace/scenario_" + scenario, 1.0, ""),
+        ("trace/n_dimms", float(n_dimms), ""),
+        ("trace/n_steps", float(n_steps), ""),
+        ("trace/transitions", float(n_dimms) * n_steps, ""),
+        ("trace/max_drift_c_per_s", drift,
+         f"paper bound {traces.PAPER_MAX_DRIFT_C_PER_S}"),
+        ("trace/scan_seconds", t_scan, ""),
+        ("trace/loop_seconds_extrapolated", t_loop, ""),
+        ("trace/speedup_vs_loop", speedup, ">=100"),
+        ("trace/loop_equivalence_exact", float(exact), "==1"),
+        ("trace/loop_max_abs_error_ns", max_err, "==0"),
+        ("trace/read_reduction_mean", score["read_reduction_mean"], ""),
+        ("trace/write_reduction_mean", score["write_reduction_mean"], ""),
+        ("trace/speedup_realized_mean", score["speedup_realized_mean"], ""),
+        ("trace/speedup_realized_intensive_mean",
+         score["speedup_realized_intensive_mean"],
+         f"paper claim {perfmodel.PAPER_CLAIM_SPEEDUP}"),
+        ("trace/speedup_vs_claim", score["speedup_vs_claim"], ""),
+        ("trace/switches_total", score["switches_total"], ""),
+        ("trace/switches_per_kstep", score["switches_per_kstep"], ""),
+        ("trace/time_at_jedec_frac", score["time_at_jedec_frac"], ""),
+        ("trace/time_in_coolest_bin_frac", score["time_in_coolest_bin_frac"], ""),
+        ("trace/fused_dimms", float(np.asarray(res.state.fused).sum()),
+         "0 unless error injection"),
+    ]
+
+    if verbose:
+        print(f"# {scenario}: {n_dimms} DIMMs x {n_steps} steps = "
+              f"{n_dimms * n_steps:,} transitions "
+              f"(max drift {drift:.3f} C/s)")
+        print(f"# scan replay: {t_scan*1e3:.1f} ms | observe loop: "
+              f"{t_loop_measured:.2f} s for {n_b}x{s_b} -> "
+              f"{t_loop:.1f} s extrapolated | speedup {speedup:,.0f}x")
+        print(f"# loop equivalence: exact={exact} max|err|={max_err:.2e} ns")
+        print(f"# realized: read -{score['read_reduction_mean']*100:.1f}% "
+              f"write -{score['write_reduction_mean']*100:.1f}% | "
+              f"perf +{score['speedup_realized_mean']*100:.1f}% all, "
+              f"+{score['speedup_realized_intensive_mean']*100:.1f}% "
+              f"mem-intensive (paper claims "
+              f"+{perfmodel.PAPER_CLAIM_SPEEDUP*100:.0f}%) | "
+              f"{score['switches_total']:.0f} switches")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-dimms", type=int, default=None,
+                    help="fleet size (default 1000)")
+    ap.add_argument("--n-steps", type=int, default=None,
+                    help="trace length in observations (default 10000)")
+    ap.add_argument("--scenario", choices=sorted(traces.SCENARIOS),
+                    default="diurnal")
+    ap.add_argument("--dt-s", type=float, default=traces.DEFAULT_DT_S,
+                    help="seconds per observation (default 60)")
+    ap.add_argument("--error-rate", type=float, default=0.0,
+                    help="per-(step,DIMM) error-injection probability")
+    ap.add_argument("--baseline-dimms", type=int, default=None,
+                    help="DIMMs actually timed in the observe loop (default 24)")
+    ap.add_argument("--baseline-steps", type=int, default=None,
+                    help="steps actually timed in the observe loop (default 500)")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: 64 DIMMs x 512 steps")
+    ap.add_argument("--json", type=str, default=None,
+                    help="also write rows to this JSON artifact path")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.tiny:
+        conflicts = [name for name, val in (
+            ("--n-dimms", args.n_dimms), ("--n-steps", args.n_steps),
+            ("--baseline-dimms", args.baseline_dimms),
+            ("--baseline-steps", args.baseline_steps),
+        ) if val is not None]
+        if conflicts:
+            ap.error(f"--tiny fixes the configuration; remove {', '.join(conflicts)}")
+        rows = run(n_dimms=64, n_steps=512, scenario=args.scenario,
+                   dt_s=args.dt_s, error_rate=args.error_rate,
+                   baseline_dimms=8, baseline_steps=128, seed=args.seed)
+    else:
+        rows = run(
+            n_dimms=1000 if args.n_dimms is None else args.n_dimms,
+            n_steps=10_000 if args.n_steps is None else args.n_steps,
+            scenario=args.scenario,
+            dt_s=args.dt_s,
+            error_rate=args.error_rate,
+            baseline_dimms=24 if args.baseline_dimms is None else args.baseline_dimms,
+            baseline_steps=500 if args.baseline_steps is None else args.baseline_steps,
+            seed=args.seed,
+        )
+    for name, value, ref in rows:
+        print(f"{name},{value:.6g},{ref}")
+    if args.json:
+        write_rows_json(args.json, "trace_eval", rows,
+                        meta={"scenario": args.scenario, "tiny": args.tiny,
+                              "seed": args.seed})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,7 @@
-"""AL-DRAM end-to-end demo: boot-profile a DIMM population, then run the
-adaptive controller over a server temperature trace (paper §1.6: server
-DRAM never exceeded 34 °C and drifted <0.1 °C/s).
+"""AL-DRAM end-to-end demo: boot-profile a DIMM population, then replay a
+24 h server day through the vectorized controller (paper §1.6: server DRAM
+never exceeded 34 °C and drifted <0.1 °C/s) — the whole 8-DIMM fleet in
+ONE jitted scan, not a per-observation Python loop.
 
   PYTHONPATH=src python examples/aldram_controller_demo.py
 """
@@ -8,7 +9,7 @@ DRAM never exceeded 34 °C and drifted <0.1 °C/s).
 import jax
 import numpy as np
 
-from repro.core import dimm
+from repro.core import dimm, perfmodel, traces
 from repro.core.controller import ALDRAMController, DimmTimingTable
 from repro.core.timing import JEDEC_DDR3_1600
 
@@ -18,23 +19,36 @@ print("boot-profiling 8 DIMMs at 5 temperature bins ...")
 table = DimmTimingTable.profile(sub)
 ctl = ALDRAMController(table)
 
-# Synthetic 24 h server trace: diurnal 26–34 °C plus load spikes.
-rng = np.random.default_rng(0)
-hours = np.arange(0, 24, 0.25)
-temps = 30 + 4 * np.sin(hours / 24 * 2 * np.pi) + rng.normal(0, 0.3, hours.size)
-temps[40:44] += 18.0  # afternoon load spike
+# 24 h server day, one reading per 15 min: diurnal 26-34 °C per DIMM plus
+# sharp +18 °C load spikes (drift-legal at this coarse cadence; at the
+# default 60 s cadence the same onsets violate the paper's 0.1 °C/s bound).
+key = jax.random.PRNGKey(0)
+temps = np.asarray(traces.load_bursts(
+    key, n_dimms=8, n_steps=96, dt_s=900.0,
+    burst_c=18.0, burst_prob=0.01, burst_len=4,
+))
 
-lat = []
-for t in temps:
-    timing = ctl.observe(0, float(t))
-    lat.append(timing.read_sum)
+res = ctl.replay(temps)  # all 8 DIMMs x 96 observations, one lax.scan
+score = perfmodel.trace_score(table.stack, res)
+red = perfmodel.realized_latency_reductions(res.timings)
 
+read_sums = np.asarray(res.timings[..., 0] + res.timings[..., 1]
+                       + res.timings[..., 3])
 base = JEDEC_DDR3_1600.read_sum
-avg_red = 1 - np.mean(lat) / base
-print(f"trace: {temps.min():.1f}–{temps.max():.1f} °C, "
-      f"{ctl.switch_count} timing-set switches")
-print(f"average read-latency reduction over the day: {avg_red*100:.1f}% "
-      f"(worst moment {100*(1-max(lat)/base):.1f}%, "
-      f"best {100*(1-min(lat)/base):.1f}%)")
+print(f"trace: {temps.min():.1f}-{temps.max():.1f} C across the fleet, "
+      f"{ctl.switch_count} timing-set switches "
+      f"({score['switches_per_kstep']:.1f} per kilo-observation)")
+print(f"fleet average read-latency reduction over the day: "
+      f"{score['read_reduction_mean']*100:.1f}% "
+      f"(per-DIMM {red['read'].min()*100:.1f}%..{red['read'].max()*100:.1f}%, "
+      f"worst moment {100*(1-read_sums.max()/base):.1f}%)")
+print(f"fleet average write-latency reduction: "
+      f"{score['write_reduction_mean']*100:.1f}%")
+print(f"realized performance gain: +{score['speedup_realized_mean']*100:.1f}% "
+      f"all workloads, +{score['speedup_realized_intensive_mean']*100:.1f}% "
+      f"memory-intensive (paper claims "
+      f"+{perfmodel.PAPER_CLAIM_SPEEDUP*100:.0f}%)")
+print(f"time at JEDEC fallback: {score['time_at_jedec_frac']*100:.1f}% "
+      f"of DIMM-hours (spikes past the last profiled bin)")
 assert ctl.fallback_count == 0, "no errors expected on profiled timings"
 print("zero reliability fallbacks — the margin was free.")

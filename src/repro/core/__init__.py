@@ -7,8 +7,14 @@ DRAM layer (faithful reproduction):
   profiler    — FPGA-platform analogue: minimal-safe-timing search
   fleet       — struct-of-arrays fleet characterization engine: the whole
                 (DIMM × temperature × pattern) study as one jitted sweep
-  controller  — adaptive per-(DIMM, temperature) timing selection + fallback
-  perfmodel   — real-system performance evaluation analogue (Fig. 3)
+  binning     — the shared scalar select-with-hysteresis kernel (both
+                embodiments' state machine)
+  controller  — adaptive per-(DIMM, temperature) timing selection +
+                fallback: array-backed tables, pure scan replay
+  traces      — parameterized thermal scenarios (diurnal, bursts, HVAC
+                failure, ...) for trace-driven controller evaluation
+  perfmodel   — real-system performance evaluation analogue (Fig. 3) +
+                replay trace scoring
 
 TPU embodiment (the method, transferred — DESIGN.md §2):
   altune      — adaptive execution-parameter tuning for JAX/Pallas programs
@@ -21,5 +27,11 @@ from repro.core.charge import (  # noqa: F401
     DEFAULT_CONSTANTS,
 )
 from repro.core.dimm import sample_population, worst_case_cell  # noqa: F401
-from repro.core.controller import ALDRAMController, DimmTimingTable  # noqa: F401
+from repro.core.controller import (  # noqa: F401
+    ALDRAMController,
+    ControllerState,
+    DimmTimingTable,
+    ReplayResult,
+    replay,
+)
 from repro.core.fleet import Fleet, SweepResult  # noqa: F401

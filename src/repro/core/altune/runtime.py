@@ -8,14 +8,22 @@ conservative config; a healthy node in the fast bin runs the profiled
 aggressive one; a numerical error (non-finite grads) fuses the unit back
 to WORST_CASE and triggers checkpoint-restore.
 
-The state machine is deliberately identical in shape to
-core/controller.ALDRAMController — that's the point of the paper transfer.
+The state machine IS core/controller's — both embodiments advance through
+the shared scalar kernel :func:`repro.core.binning.advance_bin`. Two
+knobs intentionally differ (documented there): this executor recovers one
+bin at a time (``stepwise=True`` — execution configs are re-validated on
+the ramp up, unlike boot-validated DRAM timing sets, so no jumping
+straight to the most aggressive config after a transient) and uses no
+calm margin (``margin=0`` — load bins are coarse ratios; any reading that
+bins better counts toward recovery).
 """
 
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Dict, Optional, Sequence
+
+from repro.core.binning import advance_bin, bin_index
 
 
 @dataclasses.dataclass
@@ -26,10 +34,7 @@ class ConditionBins:
     edges: Sequence[float] = (1.05, 1.2, 1.5)
 
     def bin_of(self, load: float) -> int:
-        for i, e in enumerate(self.edges):
-            if load <= e:
-                return i
-        return len(self.edges)
+        return bin_index(self.edges, load)
 
 
 @dataclasses.dataclass
@@ -72,19 +77,16 @@ class AdaptiveExecutor:
         st = self._state(unit)
         if st.fused:
             return self.worst_case
-        target = self.bins.bin_of(load)
-        if target > st.bin_idx:
-            st.bin_idx = target          # degrade immediately (conservative)
-            st.calm_streak = 0
+        st.bin_idx, st.calm_streak, switched = advance_bin(
+            self.bins.edges,
+            st.bin_idx,
+            st.calm_streak,
+            load,
+            hysteresis_steps=self.hysteresis_steps,
+            stepwise=True,
+        )
+        if switched:
             self.switches += 1
-        elif target < st.bin_idx:
-            st.calm_streak += 1
-            if st.calm_streak >= self.hysteresis_steps:
-                st.bin_idx -= 1          # recover one bin at a time
-                st.calm_streak = 0
-                self.switches += 1
-        else:
-            st.calm_streak = 0
         return self.current(unit)
 
     def current(self, unit: str) -> Any:

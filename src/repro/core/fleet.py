@@ -27,7 +27,9 @@ Python loop dominates wall-clock. This module batches the whole study into
   helpers. ``merged_timings`` (elementwise max of read and write
   requirements at the worst pattern) is exactly what a controller programs,
   and :meth:`~SweepResult.to_table` hands it to
-  :class:`repro.core.controller.DimmTimingTable` without re-profiling.
+  :class:`repro.core.controller.DimmTimingTable` as one stacked array —
+  straight into the controller's array-backed registers, no re-profiling
+  and no per-DIMM list plumbing.
 
 Scaling note: grid-search cost is O(n_dimms · n_temps · n_patterns ·
 Σ grid sizes) fused into a handful of XLA kernels; 1,000+ modules × 5
@@ -163,10 +165,11 @@ class SweepResult(NamedTuple):
         margin)`` over the merged read/write requirements at the worst
         pattern; ``margin`` is the mean fractional reduction vs JEDEC.
 
-        The single ingestion point for table consumers
-        (``DimmTimingTable.from_fleet``, altune ``TimingTable.from_fleet``):
-        one host transfer, one definition of the programmed set and of the
-        reduction-vs-JEDEC convention (``profiler.stack_reductions``)."""
+        Ingestion point for *per-entry* consumers (altune
+        ``TimingTable.from_fleet`` keys registers by entry); the DRAM
+        controller's ``DimmTimingTable.from_fleet`` consumes
+        :meth:`merged_timings` as one stacked array instead — no per-DIMM
+        Python plumbing on that path."""
         merged = self.merged_timings()
         grid = merged.tolist()
         margins = profiler.stack_reductions(merged).mean(axis=-1).tolist()

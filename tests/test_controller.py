@@ -1,10 +1,19 @@
 """AL-DRAM controller: binning, hysteresis, fuse, persistence."""
 
+import json
+
 import jax
+import numpy as np
+import pytest
 
 from repro.core import dimm
-from repro.core.controller import ALDRAMController, DimmTimingTable
-from repro.core.timing import JEDEC_DDR3_1600
+from repro.core.binning import bin_index
+from repro.core.controller import (
+    ALDRAMController,
+    DimmTimingTable,
+    TABLE_SCHEMA_VERSION,
+)
+from repro.core.timing import JEDEC_DDR3_1600, PARAM_NAMES
 
 
 def small_table():
@@ -31,6 +40,63 @@ def test_json_roundtrip():
     again = DimmTimingTable.from_json(table.to_json())
     assert again.temp_bins == table.temp_bins
     assert again.sets[0][0] == table.sets[0][0]
+    assert again == table  # stack-exact, not just spot-checked
+
+
+def test_json_schema_versioned():
+    """Persisted tables carry a schema version so future format changes
+    can keep old registers loadable (and unknown versions fail loudly)."""
+    table = small_table()
+    obj = json.loads(table.to_json())
+    assert obj["schema_version"] == TABLE_SCHEMA_VERSION
+    assert obj["params"] == list(PARAM_NAMES)
+    bad = dict(obj, schema_version=99)
+    with pytest.raises(ValueError, match="schema_version"):
+        DimmTimingTable.from_json(json.dumps(bad))
+    swapped = dict(obj, params=["tras", "trcd", "twr", "trp"])
+    with pytest.raises(ValueError, match="parameter order"):
+        DimmTimingTable.from_json(json.dumps(swapped))
+
+
+def test_json_v1_legacy_format_loads():
+    """PR-1 persisted tables (nested per-DIMM timing dicts, no version
+    field) must keep loading into the array-backed table."""
+    table = small_table()
+    v1 = json.dumps({
+        "temp_bins": list(table.temp_bins),
+        "sets": [[s.as_dict() for s in per_dimm] for per_dimm in table.sets],
+    })
+    again = DimmTimingTable.from_json(v1)
+    assert again == table
+
+
+def test_table_is_array_backed():
+    table = small_table()
+    assert isinstance(table.stack, np.ndarray)
+    assert table.stack.shape == (4, 3, 4)
+    assert table.stack.dtype == np.float32
+    assert table.n_dimms == 4 and table.n_bins == 3
+    # The nested-list view is a faithful projection of the stack.
+    assert table.sets[2][1] == table.row(2, 1)
+    with pytest.raises(ValueError, match="stack shape"):
+        DimmTimingTable(temp_bins=(55.0,), stack=np.zeros((4, 2, 4)))
+
+
+def test_lookup_uses_shared_bin_search():
+    """DimmTimingTable.lookup, the controller's target selection and
+    altune's ConditionBins all answer through binning.bin_index."""
+    from repro.core.altune.runtime import ConditionBins
+
+    table = small_table()
+    for t in (20.0, 55.0, 55.1, 70.0, 84.9, 90.0):
+        b = bin_index(table.temp_bins, t)
+        want = table.sets[0][b] if b < table.n_bins else JEDEC_DDR3_1600
+        assert table.lookup(0, t) == want
+    ctl = ALDRAMController(table, guard_band_c=5.0)
+    assert ctl._bin_for(49.0) == bin_index(table.temp_bins, 54.0)
+    bins = ConditionBins(edges=(1.05, 1.2, 1.5))
+    for load in (0.9, 1.05, 1.1, 1.6):
+        assert bins.bin_of(load) == bin_index(bins.edges, load)
 
 
 def test_hotter_switches_immediately_cooler_needs_hysteresis():

@@ -1,0 +1,225 @@
+"""Scanned replay ≡ per-observation observe loop, bit for bit.
+
+The pure scan state machine and the stateful wrapper share one transition
+kernel by construction; these tests prove the *array* mirror
+(controller.step / replay) tracks the *scalar* kernel (binning.advance_bin
+through ALDRAMController.observe) exactly — same timings, same switch
+counts, same fuse states — on random traces including error injections and
+above-last-bin excursions. Temperatures are drawn on a 0.25 °C grid so
+float32 (scan) and float64 (wrapper) arithmetic are both exact and the
+comparison is legitimately bit-level.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core import dimm, perfmodel
+from repro.core.controller import (
+    ALDRAMController,
+    ControllerParams,
+    DimmTimingTable,
+    init_state,
+    replay,
+)
+from repro.core.timing import JEDEC_DDR3_1600, PARAM_NAMES
+
+TEMP_BINS = (45.0, 55.0, 70.0, 85.0)
+N_DIMMS = 5
+
+
+@pytest.fixture(scope="module")
+def table():
+    cells, _ = dimm.sample_population(jax.random.PRNGKey(0))
+    sub = type(cells)(
+        r=cells.r[:N_DIMMS], c=cells.c[:N_DIMMS], leak=cells.leak[:N_DIMMS]
+    )
+    return DimmTimingTable.profile(sub, temp_bins=TEMP_BINS)
+
+
+def _random_trace(rng, n_steps, n_dimms):
+    """Temps on the 0.25 °C grid spanning below-first to above-last bin."""
+    return rng.integers(100, 400, size=(n_steps, n_dimms)).astype(np.float32) * 0.25
+
+
+def _loop_reference(table, params, trace, errors):
+    """Feed the trace observation-by-observation through the wrapper."""
+    ctl = ALDRAMController(
+        table,
+        guard_band_c=params.guard_band_c,
+        hysteresis_c=params.hysteresis_c,
+        hysteresis_steps=params.hysteresis_steps,
+    )
+    n_steps, n_dimms = trace.shape
+    rows = np.zeros((n_steps, n_dimms, 4), np.float32)
+    bins = np.zeros((n_steps, n_dimms), np.int32)
+    for s in range(n_steps):
+        for d in range(n_dimms):
+            if errors[s, d]:
+                ctl.report_error(d)
+            t = ctl.observe(d, float(trace[s, d]))
+            rows[s, d] = [getattr(t, p) for p in PARAM_NAMES]
+            b = ctl.bin_of(d)
+            bins[s, d] = table.n_bins if b is None else b
+    return ctl, rows, bins
+
+
+def _assert_equivalent(table, params, trace, errors):
+    res = replay(table, trace, errors, params=params)
+    ctl, rows, bins = _loop_reference(table, params, trace, errors)
+    np.testing.assert_array_equal(np.asarray(res.timings), rows)
+    np.testing.assert_array_equal(np.asarray(res.bin_idx), bins)
+    assert res.total_switches == ctl.switch_count
+    np.testing.assert_array_equal(np.asarray(res.state.fused), ctl._fused)
+    np.testing.assert_array_equal(
+        np.asarray(res.state.bin_idx), ctl._bin
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.state.cool_streak), ctl._streak
+    )
+
+
+# ---------------------------------------------------------------------------
+# Deterministic grid (always runs, hypothesis or not)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed,error_rate", [(0, 0.0), (1, 0.003), (2, 0.02)])
+@pytest.mark.parametrize("guard,hyst_c,hyst_steps", [
+    (5.0, 2.0, 3),     # paper defaults
+    (0.0, 0.0, 1),     # degenerate: no guard, no hysteresis
+    (10.0, 4.0, 5),    # aggressive damping
+])
+def test_replay_matches_observe_loop(table, seed, error_rate, guard,
+                                     hyst_c, hyst_steps):
+    rng = np.random.default_rng(seed)
+    trace = _random_trace(rng, 150, N_DIMMS)
+    errors = rng.random(trace.shape) < error_rate
+    params = ControllerParams(guard, hyst_c, hyst_steps)
+    _assert_equivalent(table, params, trace, errors)
+
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed"
+)
+
+
+@needs_hypothesis
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(0, 10_000),
+    st.sampled_from([0.0, 2.5, 5.0, 7.25]),
+    st.sampled_from([0.0, 1.0, 2.0]),
+    st.integers(1, 5),
+    st.sampled_from([0.0, 0.01]),
+)
+def test_replay_matches_observe_loop_property(
+    seed, guard, hyst_c, hyst_steps, error_rate
+):
+    cells, _ = dimm.sample_population(jax.random.PRNGKey(0))
+    sub = type(cells)(
+        r=cells.r[:N_DIMMS], c=cells.c[:N_DIMMS], leak=cells.leak[:N_DIMMS]
+    )
+    tbl = DimmTimingTable.profile(sub, temp_bins=TEMP_BINS)
+    rng = np.random.default_rng(seed)
+    trace = _random_trace(rng, 80, N_DIMMS)
+    errors = rng.random(trace.shape) < error_rate
+    _assert_equivalent(tbl, ControllerParams(guard, hyst_c, hyst_steps),
+                       trace, errors)
+
+
+# ---------------------------------------------------------------------------
+# Targeted invariants of the scan path
+# ---------------------------------------------------------------------------
+def test_above_last_bin_excursion_selects_jedec(table):
+    """A 95 °C excursion must drive the JEDEC sentinel row, then recovery
+    back into the profiled bins requires the full hysteresis streak."""
+    trace = np.full((12, N_DIMMS), 30.0, np.float32)
+    trace[3] = 95.0
+    res = replay(table, trace)
+    jedec = np.asarray([getattr(JEDEC_DDR3_1600, p) for p in PARAM_NAMES],
+                       np.float32)
+    assert (np.asarray(res.bin_idx[3]) == table.n_bins).all()
+    np.testing.assert_array_equal(np.asarray(res.timings[3]),
+                                  np.broadcast_to(jedec, (N_DIMMS, 4)))
+    # Cool again: after hysteresis_steps calm readings we are back in bin 0.
+    assert (np.asarray(res.bin_idx[-1]) == 0).all()
+
+
+def test_error_fuses_forever_in_replay(table):
+    trace = np.full((20, N_DIMMS), 30.0, np.float32)
+    errors = np.zeros_like(trace, bool)
+    errors[5, 2] = True
+    res = replay(table, trace, errors)
+    jedec = np.asarray([getattr(JEDEC_DDR3_1600, p) for p in PARAM_NAMES],
+                       np.float32)
+    assert not np.asarray(res.fused[:5, 2]).any()
+    assert np.asarray(res.fused[5:, 2]).all()
+    np.testing.assert_array_equal(np.asarray(res.timings[5:, 2]),
+                                  np.broadcast_to(jedec, (15, 4)))
+    # Other DIMMs are unaffected.
+    assert not np.asarray(res.fused[:, [0, 1, 3, 4]]).any()
+
+
+def test_wrapper_replay_resumes_observe_loop(table):
+    """replay → observe must equal observe all the way: the wrapper
+    absorbs the scan's final registers losslessly."""
+    rng = np.random.default_rng(7)
+    trace = _random_trace(rng, 60, N_DIMMS)
+    full = ALDRAMController(table)
+    _, rows_full, _ = _loop_reference(table, full.params, trace,
+                                      np.zeros(trace.shape, bool))
+    hybrid = ALDRAMController(table)
+    hybrid.replay(trace[:30])
+    for s in range(30, 60):
+        for d in range(N_DIMMS):
+            t = hybrid.observe(d, float(trace[s, d]))
+            np.testing.assert_array_equal(
+                np.asarray([getattr(t, p) for p in PARAM_NAMES], np.float32),
+                rows_full[s, d],
+            )
+
+
+def test_init_state_shapes(table):
+    st0 = init_state(table.n_dimms, table.n_bins)
+    assert st0.bin_idx.shape == (table.n_dimms,)
+    assert int(st0.bin_idx[0]) == table.n_bins - 1
+    assert not bool(st0.fused.any())
+
+
+def test_replay_shape_validation(table):
+    with pytest.raises(ValueError, match="n_steps, n_dimms"):
+        replay(table, np.zeros((10,), np.float32))
+    with pytest.raises(ValueError, match="DIMMs"):
+        replay(table, np.zeros((10, N_DIMMS + 1), np.float32))
+    with pytest.raises(ValueError, match="errors shape"):
+        replay(table, np.zeros((10, N_DIMMS), np.float32),
+               errors=np.zeros((9, N_DIMMS), bool))
+
+
+# ---------------------------------------------------------------------------
+# Trace scoring consumes the replay directly
+# ---------------------------------------------------------------------------
+def test_trace_score_consistency(table):
+    rng = np.random.default_rng(11)
+    trace = _random_trace(rng, 100, N_DIMMS)
+    res = replay(table, trace)
+    occ = perfmodel.time_in_bin(res.bin_idx, table.n_bins)
+    assert occ.shape == (N_DIMMS, table.n_bins + 1)
+    np.testing.assert_allclose(np.asarray(occ.sum(axis=-1)), 1.0, atol=1e-6)
+
+    red = perfmodel.realized_latency_reductions(res.timings)
+    read_sums = np.asarray(res.timings[..., 0] + res.timings[..., 1]
+                           + res.timings[..., 3])
+    want = 1.0 - read_sums.mean(axis=0) / JEDEC_DDR3_1600.read_sum
+    np.testing.assert_allclose(np.asarray(red["read"]), want, rtol=1e-5)
+
+    score = perfmodel.trace_score(table.stack, res)
+    assert score["switches_total"] == res.total_switches
+    assert 0.0 <= score["time_at_jedec_frac"] <= 1.0
+    # Adapted timings never lose to JEDEC; with bins occupied below 85 °C
+    # the realized gain is strictly positive.
+    assert score["speedup_realized_min"] >= -1e-6
+    assert score["speedup_realized_mean"] > 0.0
+    assert score["speedup_vs_claim"] == pytest.approx(
+        score["speedup_realized_intensive_mean"] - perfmodel.PAPER_CLAIM_SPEEDUP
+    )

@@ -1,0 +1,102 @@
+"""Thermal-trace generator invariants (paper §1.4 bounds).
+
+The deployment-regime scenarios must respect the paper's field
+measurements (<0.1 °C/s drift); the stress scenarios must violate them
+*deliberately* — that is their documented purpose. All generators must be
+deterministic in the key and shaped (n_steps, n_dimms) for the scan.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import traces
+
+KEY = jax.random.PRNGKey(42)
+N_DIMMS, N_STEPS, DT_S = 12, 300, traces.DEFAULT_DT_S
+
+#: Scenarios contracted to stay inside the paper's drift bound.
+BOUNDED = ("diurnal", "cold_start", "vendor_skew")
+#: Scenarios contracted to break it (sharp onsets / HVAC ramp).
+VIOLATING = ("load_bursts", "hvac_failure")
+
+
+@pytest.mark.parametrize("name", sorted(traces.SCENARIOS))
+def test_scenario_shape_dtype_and_determinism(name):
+    tr = traces.generate(name, KEY, N_DIMMS, N_STEPS, DT_S)
+    assert tr.shape == (N_STEPS, N_DIMMS)
+    assert tr.dtype == jnp.float32
+    assert bool(jnp.isfinite(tr).all())
+    again = traces.generate(name, KEY, N_DIMMS, N_STEPS, DT_S)
+    np.testing.assert_array_equal(np.asarray(tr), np.asarray(again))
+
+
+@pytest.mark.parametrize("name", BOUNDED)
+def test_deployment_scenarios_respect_drift_bound(name):
+    tr = traces.generate(name, KEY, N_DIMMS, N_STEPS, DT_S)
+    assert traces.max_drift_rate(tr, DT_S) <= traces.PAPER_MAX_DRIFT_C_PER_S + 1e-6
+
+
+@pytest.mark.parametrize("name", VIOLATING)
+def test_stress_scenarios_violate_drift_bound(name):
+    # Long enough / probable enough that at least one sharp event occurs.
+    tr = traces.generate(name, KEY, N_DIMMS, 600, DT_S)
+    assert traces.max_drift_rate(tr, DT_S) > traces.PAPER_MAX_DRIFT_C_PER_S
+
+
+def test_diurnal_stays_in_server_band():
+    """The paper's regime: defaults orbit the measured 26-34 °C band (a
+    couple of degrees of skew+noise allowance, never near the 45 °C bin)."""
+    tr = traces.diurnal(KEY, N_DIMMS, N_STEPS, DT_S)
+    assert float(tr.min()) >= traces.MIN_AMBIENT_C
+    assert float(tr.max()) <= traces.PAPER_MAX_SERVER_TEMP_C + 3.0
+    assert float(tr.max()) < 40.0
+
+
+def test_cold_start_begins_cold_and_settles():
+    tr = traces.cold_start(KEY, N_DIMMS, N_STEPS, DT_S, start_c=18.0)
+    assert float(tr[0].mean()) == pytest.approx(18.0, abs=0.5)
+    # By the end of 5 h the fleet has rejoined the diurnal band.
+    assert float(tr[-1].mean()) > 25.0
+
+
+def test_hvac_failure_exceeds_last_bin():
+    tr = traces.hvac_failure(KEY, N_DIMMS, 600, DT_S, onset_frac=0.5)
+    assert float(tr[: 300].max()) < 45.0        # normal before onset
+    assert float(tr[-1].min()) > 85.0           # past the last profiled bin
+    assert float(tr.max()) <= 95.0              # capped at peak_c
+
+
+def test_vendor_skew_orders_vendors():
+    vendor = jnp.asarray([0] * 4 + [1] * 4 + [2] * 4)
+    tr = traces.vendor_skew(KEY, N_DIMMS, N_STEPS, DT_S, vendor=vendor,
+                            offsets_c=(0.0, 3.0, 6.0), noise_c=0.0,
+                            skew_c=0.0)
+    means = np.asarray(tr).mean(axis=0)
+    assert means[:4].mean() + 2.5 < means[4:8].mean()
+    assert means[4:8].mean() + 2.5 < means[8:].mean()
+
+
+def test_enforce_drift_bound_clips_and_is_idempotent():
+    step = jnp.asarray([[20.0], [40.0], [40.0], [10.0]], jnp.float32)
+    out = traces.enforce_drift_bound(step, dt_s=10.0)  # limit: 1 °C/step
+    # Increments (+20, 0, -30) clamp to (+1, 0, -1): the output follows the
+    # input's *steps*, it does not keep chasing the unclamped level.
+    np.testing.assert_allclose(np.asarray(out[:, 0]), [20.0, 21.0, 21.0, 20.0])
+    again = traces.enforce_drift_bound(out, dt_s=10.0)
+    np.testing.assert_allclose(np.asarray(again), np.asarray(out))
+
+
+def test_generate_rejects_unknown_scenario():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        traces.generate("volcano", KEY, 4, 10)
+
+
+def test_error_injections_rates():
+    assert not bool(traces.error_injections(KEY, 50, 8, 0.0).any())
+    assert bool(traces.error_injections(KEY, 50, 8, 1.0).all())
+    mask = traces.error_injections(KEY, 4000, 8, 0.01)
+    rate = float(mask.mean())
+    assert 0.003 < rate < 0.03
+    assert mask.dtype == bool
