@@ -98,7 +98,9 @@ def run(
     p_worst = res.worst_pattern_idx()
     ti = list(temps_c).index(55.0) if 55.0 in temps_c else 0
     t_label = f"{temps_c[ti]:g}C"
-    sp = perfmodel.fleet_speedups(res.joint[ti, p_worst])
+    # (N, 4) merged joint stack: say so explicitly, or a 2-DIMM run would
+    # be misread as an access-type axis.
+    sp = perfmodel.fleet_speedups(res.joint[ti, p_worst], split=False)
     rows.append((f"fleet/{t_label}/perf_speedup_mean", float(sp.mean() - 1.0), ""))
     rows.append((f"fleet/{t_label}/perf_speedup_min", float(sp.min() - 1.0), ""))
     rows.append((f"fleet/{t_label}/perf_speedup_max", float(sp.max() - 1.0), ""))

@@ -1,12 +1,26 @@
 """§1.7 reproductions: refresh-interval effect, multi-parameter
-interdependence, failure repeatability."""
+interdependence, failure repeatability.
+
+Ported to the PR 1 fleet engine: each analysis characterizes through one
+jitted `fleet.sweep` (the read and joint stacks come out of the same
+sweep) instead of per-point `profiler.profile_*` calls; CSV rows are
+identical to the legacy path. Repeatability keeps its dedicated
+noise-retest loop (it perturbs the population per trial, which is not a
+characterization sweep).
+"""
 
 from __future__ import annotations
 
 import jax
 
-from repro.core import charge, dimm, profiler
-from repro.core.timing import JEDEC_DDR3_1600, PARAM_NAMES
+from repro.core import dimm, fleet, profiler
+from repro.core.timing import PARAM_NAMES
+
+
+def _mean_reductions(timings) -> dict:
+    """Fleet-mean fractional reduction per parameter for a (N, 4) stack."""
+    red = profiler.stack_reductions(timings)
+    return {p: float(red[:, i].mean()) for i, p in enumerate(PARAM_NAMES)}
 
 
 def refresh_interval(temp: float = 55.0):
@@ -14,8 +28,9 @@ def refresh_interval(temp: float = 55.0):
     cells, _ = dimm.sample_population(jax.random.PRNGKey(0))
     rows = []
     for win_ms in (64.0, 32.0, 16.0, 8.0):
-        res = profiler.profile_individual(cells, temp, window_s=win_ms * 1e-3)
-        mean = res.mean_reductions()
+        res = fleet.sweep(cells, temps_c=(temp,), patterns=(1.0,),
+                          window_s=win_ms * 1e-3)
+        mean = _mean_reductions(res.read[0, 0])
         rows.append((f"refresh/{int(win_ms)}ms/tras_reduction", mean["tras"], ""))
         rows.append((f"refresh/{int(win_ms)}ms/trcd_reduction", mean["trcd"], ""))
     return rows
@@ -23,10 +38,12 @@ def refresh_interval(temp: float = 55.0):
 
 def multi_param(temp: float = 55.0):
     """Paper: reducing one timing parameter decreases the opportunity to
-    reduce another — compare individually-profiled vs jointly-profiled."""
+    reduce another — compare individually-profiled vs jointly-profiled.
+    One sweep: the individual (read) and joint stacks share the call."""
     cells, _ = dimm.sample_population(jax.random.PRNGKey(0))
-    ind = profiler.profile_individual(cells, temp).mean_reductions()
-    joint = profiler.profile_joint(cells, temp, restore_scale=1.0).mean_reductions()
+    res = fleet.sweep(cells, temps_c=(temp,), patterns=(1.0,))
+    ind = _mean_reductions(res.read[0, 0])
+    joint = _mean_reductions(res.joint[0, 0])
     rows = []
     for p in PARAM_NAMES:
         rows.append((f"multiparam/individual/{p}", ind[p], ""))

@@ -19,11 +19,19 @@ running 10⁷ Python observe calls would take tens of minutes, which is the
 point. Equivalence with the scan is asserted bit-exactly on that sub-grid
 (the run fails hard on divergence); the speedup is reported, not gated —
 wall-clock on shared CI boxes is too noisy to assert.
+
+Regression gate: ``--tiny`` (CI) loads the committed baseline JSON
+(``benchmarks/baselines/trace_eval_tiny.json``) and fails hard if the
+realized memory-intensive speedup drops below it, or if any DIMM's
+programmed read-set tRAS fails to sit below JEDEC in the coolest bin —
+the two observable symptoms of the old tRAS-at-JEDEC merge bug.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import time
 
 import jax
@@ -35,6 +43,9 @@ try:
     from benchmarks._json_out import write_rows_json
 except ImportError:  # direct-script execution: benchmarks/ is sys.path[0]
     from _json_out import write_rows_json
+
+#: Committed regression baseline for the --tiny CI configuration.
+TINY_BASELINE_PATH = pathlib.Path(__file__).parent / "baselines" / "trace_eval_tiny.json"
 
 
 def run(
@@ -48,6 +59,7 @@ def run(
     baseline_steps: int = 500,
     seed: int = 0,
     verbose: bool = True,
+    regression_baseline: str | pathlib.Path | None = None,
 ):
     key = jax.random.PRNGKey(seed)
     k_fleet, k_trace, k_err = jax.random.split(key, 3)
@@ -78,14 +90,15 @@ def run(
     ctl = controller.ALDRAMController(sub_table)
     sub_trace = np.asarray(trace[:s_b, :n_b])
     sub_err = np.asarray(errors[:s_b, :n_b])
-    loop_rows = np.zeros((s_b, n_b, 4), np.float32)
+    loop_rows = np.zeros((s_b, n_b, 2, 4), np.float32)
     t0 = time.perf_counter()
     for s in range(s_b):
         for d in range(n_b):
             if sub_err[s, d]:
                 ctl.report_error(d)
             t = ctl.observe(d, float(sub_trace[s, d]))
-            loop_rows[s, d] = (t.trcd, t.tras, t.twr, t.trp)
+            loop_rows[s, d, 0] = tuple(t.read)
+            loop_rows[s, d, 1] = tuple(t.write)
     t_loop_measured = time.perf_counter() - t0
     t_loop = t_loop_measured * (n_dimms * n_steps) / (n_b * s_b)
     speedup = t_loop / t_scan
@@ -117,6 +130,14 @@ def run(
         ("trace/loop_max_abs_error_ns", max_err, "==0"),
         ("trace/read_reduction_mean", score["read_reduction_mean"], ""),
         ("trace/write_reduction_mean", score["write_reduction_mean"], ""),
+        ("trace/read_tras_reduction_mean",
+         score["read_tras_reduction_mean"], "> 0 (merge bug pinned this at 0)"),
+        ("trace/write_tras_reduction_mean",
+         score["write_tras_reduction_mean"], ""),
+        ("trace/read_trcd_reduction_mean", score["read_trcd_reduction_mean"], ""),
+        ("trace/write_twr_reduction_mean", score["write_twr_reduction_mean"], ""),
+        ("trace/tras_below_jedec_coolest_frac",
+         score["tras_below_jedec_coolest_frac"], "==1"),
         ("trace/speedup_realized_mean", score["speedup_realized_mean"], ""),
         ("trace/speedup_realized_intensive_mean",
          score["speedup_realized_intensive_mean"],
@@ -130,6 +151,26 @@ def run(
          "0 unless error injection"),
     ]
 
+    # -- regression gate vs the committed baseline -------------------------
+    if regression_baseline is not None:
+        base = json.loads(pathlib.Path(regression_baseline).read_text())
+        floor = base["speedup_realized_intensive_mean"] - base.get("tolerance", 0.005)
+        got = score["speedup_realized_intensive_mean"]
+        if got < floor:  # CI must go red on a realized-speedup regression
+            raise AssertionError(
+                f"realized memory-intensive speedup regressed: {got:.4f} < "
+                f"baseline {base['speedup_realized_intensive_mean']:.4f} - "
+                f"tolerance (see {regression_baseline})"
+            )
+        if score["tras_below_jedec_coolest_frac"] < 1.0:
+            raise AssertionError(
+                "tRAS-at-JEDEC merge bug symptom: some DIMM's coolest-bin "
+                "read set does not reduce tRAS below JEDEC "
+                f"(frac={score['tras_below_jedec_coolest_frac']:.3f})"
+            )
+        rows.append(("trace/regression_gate_pass", 1.0,
+                     f">= {floor:.4f} intensive"))
+
     if verbose:
         print(f"# {scenario}: {n_dimms} DIMMs x {n_steps} steps = "
               f"{n_dimms * n_steps:,} transitions "
@@ -138,6 +179,10 @@ def run(
               f"{t_loop_measured:.2f} s for {n_b}x{s_b} -> "
               f"{t_loop:.1f} s extrapolated | speedup {speedup:,.0f}x")
         print(f"# loop equivalence: exact={exact} max|err|={max_err:.2e} ns")
+        print(f"# per-access tRAS: read -{score['read_tras_reduction_mean']*100:.1f}% "
+              f"write -{score['write_tras_reduction_mean']*100:.1f}% "
+              f"(coolest-bin below-JEDEC frac "
+              f"{score['tras_below_jedec_coolest_frac']:.2f})")
         print(f"# realized: read -{score['read_reduction_mean']*100:.1f}% "
               f"write -{score['write_reduction_mean']*100:.1f}% | "
               f"perf +{score['speedup_realized_mean']*100:.1f}% all, "
@@ -165,7 +210,11 @@ def main() -> None:
     ap.add_argument("--baseline-steps", type=int, default=None,
                     help="steps actually timed in the observe loop (default 500)")
     ap.add_argument("--tiny", action="store_true",
-                    help="CI smoke: 64 DIMMs x 512 steps")
+                    help="CI smoke: 64 DIMMs x 512 steps, gated against the "
+                         "committed regression baseline")
+    ap.add_argument("--regression-baseline", type=str, default=None,
+                    help="baseline JSON for the realized-speedup gate "
+                         "(default: the committed tiny baseline when --tiny)")
     ap.add_argument("--json", type=str, default=None,
                     help="also write rows to this JSON artifact path")
     ap.add_argument("--seed", type=int, default=0)
@@ -179,9 +228,14 @@ def main() -> None:
         ) if val is not None]
         if conflicts:
             ap.error(f"--tiny fixes the configuration; remove {', '.join(conflicts)}")
+        gate = args.regression_baseline
+        if gate is None and args.scenario == "diurnal" and args.seed == 0 \
+                and TINY_BASELINE_PATH.exists():
+            gate = TINY_BASELINE_PATH  # the committed config the baseline pins
         rows = run(n_dimms=64, n_steps=512, scenario=args.scenario,
                    dt_s=args.dt_s, error_rate=args.error_rate,
-                   baseline_dimms=8, baseline_steps=128, seed=args.seed)
+                   baseline_dimms=8, baseline_steps=128, seed=args.seed,
+                   regression_baseline=gate)
     else:
         rows = run(
             n_dimms=1000 if args.n_dimms is None else args.n_dimms,
@@ -192,6 +246,7 @@ def main() -> None:
             baseline_dimms=24 if args.baseline_dimms is None else args.baseline_dimms,
             baseline_steps=500 if args.baseline_steps is None else args.baseline_steps,
             seed=args.seed,
+            regression_baseline=args.regression_baseline,
         )
     for name, value, ref in rows:
         print(f"{name},{value:.6g},{ref}")

@@ -48,8 +48,11 @@ class TimingTable:
         kernel: str = "dram_timing",
     ) -> "TimingTable":
         """Ingest a :class:`repro.core.fleet.SweepResult` as controller
-        registers: one entry per (DIMM, temperature-bin), device-binned by
-        vendor, margin = mean fractional reduction vs JEDEC.
+        registers: one entry per (DIMM, temperature-bin, access-type) —
+        condition-binned as ``T{temp}:{read|write}`` so each access type
+        keeps its own profiled margin (the paper's per-access-type register
+        sets) — device-binned by vendor, margin = that set's mean
+        fractional reduction vs JEDEC.
 
         This is the TPU-embodiment mirror of
         ``DimmTimingTable.from_fleet`` — the same fleet sweep feeds both the
@@ -58,12 +61,12 @@ class TimingTable:
 
         vendors = [int(v) for v in vendor.tolist()] if vendor is not None else None
         table = cls()
-        for _b, t, i, timings, margin in result.table_entries():
+        for _b, t, i, access, timings, margin in result.table_entries():
             table.put(
                 kernel,
                 f"dimm{i:05d}",
                 f"vendor{vendors[i] if vendors else 0}",
-                f"T{t:g}",
+                f"T{t:g}:{access}",
                 dict(zip(PARAM_NAMES, timings)),
                 margin,
             )

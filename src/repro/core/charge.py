@@ -13,6 +13,11 @@ The paper's three observations, implemented as a quantitative model:
 3. **Precharge** (tRP): the bitline returns to VDD/2 exponentially; a cell
    with surplus margin tolerates a residual bitline offset, so the final
    part of precharge can be cut.
+4. **Restore under write** (write-mode tRAS): during a write access the
+   external driver overdrives the cell toward ``v_overdrive``, so the row
+   reaches its restore target along the (faster) write-drive exponential —
+   the channel that makes write-mode tRAS testable rather than pinned at
+   JEDEC (see :func:`restore_under_write_time`).
 
 Temperature enters through (a) leakage — charge loss roughly doubles every
 ``leak_doubling_c`` °C (the paper's [124]) — and (b) carrier mobility: the
@@ -406,6 +411,57 @@ def min_trp_write(
 
 
 # ---------------------------------------------------------------------------
+# Restore under write (the write-mode tRAS channel)
+# ---------------------------------------------------------------------------
+def restore_under_write_time(
+    cell: CellParams,
+    v_tgt: Array,
+    temp_c: Array | float,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Array:
+    """Row-restore time when the restore phase is driven by the *write
+    driver* instead of the sense amplifier alone.
+
+    During a write access the external driver overdrives the cell toward
+    ``v_overdrive`` (> ``v_full``), so the row reaches its restore target
+    along the write-drive exponential — starting from the post-latch level
+    ``v_restore_start`` rather than from the opposite rail (which is what
+    tWR provisions for). This is the restore-under-write path that makes
+    the write-mode tRAS *testable*: before it existed the write profiler
+    had to report tRAS at JEDEC ("untested in that mode"), which the
+    read/write merge then propagated into every programmed table."""
+    tau = cell.r * consts.tau_write * drive_factor(temp_c, consts)
+    return tau * jnp.log(
+        (consts.v_overdrive - consts.v_restore_start) / (consts.v_overdrive - v_tgt)
+    )
+
+
+def min_tras_write(
+    cell: CellParams,
+    temp_c: Array | float,
+    window_s: float = REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+    v_tgt: Array | None = None,
+) -> Array:
+    """Minimal safe tRAS for a *write* access (ns): write-assisted sensing
+    (the driver boosts the bitline differential, as in tRCD's write mode)
+    followed by restore under write drive to the adaptive target.
+
+    Always below the read-mode :func:`min_tras` — the overdriven restore
+    converges faster than the sense-amp tail — and anchored consistently:
+    the worst-case corner at 85 °C still needs less than JEDEC tRAS here
+    because JEDEC provisions tRAS for the slower *read* restore."""
+    dv0 = _wm_dv0(cell, temp_c, window_s, consts)
+    if v_tgt is None:
+        v_tgt = restore_target(cell, temp_c, window_s, consts)
+    return (
+        consts.ovh_ras
+        + sense_time(cell, dv0, consts)
+        + restore_under_write_time(cell, v_tgt, temp_c, consts)
+    )
+
+
+# ---------------------------------------------------------------------------
 # Forward correctness predicates (what the profiler actually tests)
 # ---------------------------------------------------------------------------
 def read_ok(
@@ -449,17 +505,26 @@ def write_ok(
     window_s: float = REFRESH_WINDOW_S,
     consts: ChargeModelConstants = DEFAULT_CONSTANTS,
 ) -> Array:
-    """Does a write with these timings commit correct data?"""
+    """Does a write with these timings commit correct data?
+
+    Four phases, all forward-checked: write recovery (tWR drives the cell
+    from the opposite rail to the restore target), write-assisted sensing
+    (tRCD), row restore under write drive (tRAS — the restore-under-write
+    path, so write-mode tRAS is genuinely *tested* rather than assumed),
+    and precharge (tRP)."""
+    tau_wr = cell.r * consts.tau_write * drive_factor(temp_c, consts)
     t_avail = timings.twr - consts.ovh_wr
-    v_reached = consts.v_overdrive * (
-        1.0
-        - jnp.exp(
-            -t_avail / (cell.r * consts.tau_write * drive_factor(temp_c, consts))
-        )
-    )
+    v_reached = consts.v_overdrive * (1.0 - jnp.exp(-t_avail / tau_wr))
     v_tgt = restore_target(cell, temp_c, window_s, consts)
     write_pass = v_reached >= v_tgt * (1.0 - _EPS)
 
+    dv0w = _wm_dv0(cell, temp_c, window_s, consts)
+    t_restore_avail = timings.tras - consts.ovh_ras - sense_time(cell, dv0w, consts)
+    v_row = consts.v_overdrive - (
+        consts.v_overdrive - consts.v_restore_start
+    ) * jnp.exp(-jnp.maximum(t_restore_avail, 0.0) / tau_wr)
+    tras_pass = v_row >= v_tgt * (1.0 - _EPS)
+
     trcd_pass = timings.trcd >= min_trcd_write(cell, temp_c, window_s, consts) * (1.0 - _EPS)
     trp_pass = timings.trp >= min_trp_write(cell, temp_c, window_s, consts) * (1.0 - _EPS)
-    return write_pass & trcd_pass & trp_pass
+    return write_pass & tras_pass & trcd_pass & trp_pass

@@ -2,13 +2,25 @@
 
 AL-DRAM requires *no DRAM chip or interface changes* — only that the memory
 controller store multiple pre-validated timing sets per DIMM and select
-among them by the current operating temperature. This module is that
-controller, in struct-of-arrays form:
+among them by the current operating temperature. The paper's controller
+keeps **per-access-type register sets**: read accesses are bound by
+tRCD/tRAS/tRP and write accesses by tRCD/tWR/tRP, the two modes are
+profiled by different tests (Fig. 2a vs 2b), and the reported 55 °C
+reductions (27/32/33/18 % for tRCD/tRAS/tWR/tRP) assume each access type
+runs at *its own* profiled margin. Collapsing the two sets into one merged
+register file forfeits exactly the margin the slower mode doesn't have —
+historically this pipeline merged with write-mode tRAS pinned at JEDEC, so
+programmed tables never reduced tRAS at all (the "tRAS-at-JEDEC merge
+bug"). This module is that controller, split sets and all, in
+struct-of-arrays form:
 
 * :class:`DimmTimingTable` — the controller's timing registers: one
-  ``(n_dimms, n_bins, 4)`` timing stack plus the bin edges, built directly
-  from a :class:`repro.core.fleet.SweepResult` (no per-DIMM Python object
-  plumbing) and persisted with a schema version.
+  ``(n_dimms, n_bins, 2, 4)`` timing stack (access-type axis ordered as
+  :data:`repro.core.timing.ACCESS_TYPES` = read, write) plus the bin
+  edges, built directly from a :class:`repro.core.fleet.SweepResult` (no
+  per-DIMM Python object plumbing) and persisted with a schema version
+  (v3; v1/v2 single-set files still load, their merged set duplicated
+  into both slots).
 * The **pure state machine**: controller state is a
   :class:`ControllerState` pytree (``bin_idx`` / ``cool_streak`` /
   ``fused`` arrays over the DIMM axis) advanced by :func:`step` — one
@@ -44,7 +56,14 @@ from jax import Array
 from repro.core import charge
 from repro.core.binning import advance_bin, bin_index
 from repro.core.charge import CellParams, ChargeModelConstants, DEFAULT_CONSTANTS
-from repro.core.timing import JEDEC_DDR3_1600, PARAM_NAMES, TimingParams
+from repro.core.timing import (
+    ACCESS_TYPES,
+    AccessTimings,
+    JEDEC_ACCESS,
+    JEDEC_DDR3_1600,
+    PARAM_NAMES,
+    TimingParams,
+)
 
 #: Temperature bins (°C upper edges) for which timing sets are profiled.
 #: 85 °C is the standard's qualification point; the paper evaluates 55 °C.
@@ -61,36 +80,55 @@ HYSTERESIS_C: float = 2.0
 HYSTERESIS_STEPS: int = 3
 
 #: Persisted-table format version. v1 (PR 1, implicit) stored nested
-#: per-DIMM lists of timing dicts; v2 stores the stacked array directly.
-#: ``from_json`` loads both, so tables persisted by any PR stay readable.
-TABLE_SCHEMA_VERSION: int = 2
+#: per-DIMM lists of timing dicts; v2 stored a single merged
+#: ``(n_dimms, n_bins, 4)`` stack; v3 stores the per-access-type
+#: ``(n_dimms, n_bins, 2, 4)`` stack. ``from_json`` loads all three —
+#: v1/v2 merged sets are duplicated into both access slots on load.
+TABLE_SCHEMA_VERSION: int = 3
 
 _JEDEC_ROW = np.asarray(
     [getattr(JEDEC_DDR3_1600, p) for p in PARAM_NAMES], np.float32
 )
+#: JEDEC duplicated over the access-type axis: the (2, 4) sentinel row the
+#: state machine selects beyond the last bin or after a fuse.
+_JEDEC_ROWS = np.broadcast_to(_JEDEC_ROW, (len(ACCESS_TYPES), 4)).copy()
 
 
 @dataclasses.dataclass(eq=False)
 class DimmTimingTable:
-    """Per-DIMM timing sets, one per temperature bin, array-backed.
+    """Per-DIMM, per-access-type timing sets, one per temperature bin,
+    array-backed.
 
-    ``stack[dimm, bin]`` is the four programmed timings (ns, cycle-
-    quantized, ``PARAM_NAMES`` order). Temperatures above the last bin
-    edge select JEDEC — the beyond-last sentinel row, not stored."""
+    ``stack[dimm, bin]`` is a ``(2, 4)`` block: the read and the write
+    timing set (ns, cycle-quantized; axes ordered as ``ACCESS_TYPES`` ×
+    ``PARAM_NAMES``). Temperatures above the last bin edge select JEDEC
+    for both access types — the beyond-last sentinel rows, not stored.
+
+    A negative entry is the profiler's *untested* sentinel and is refused
+    at construction: a table must never program a timing that was not
+    actually validated (the guard that makes the old silent
+    tRAS-at-JEDEC write profile impossible to reintroduce)."""
 
     temp_bins: Tuple[float, ...]
-    #: (n_dimms, n_bins, 4) float32 ns
+    #: (n_dimms, n_bins, 2, 4) float32 ns
     stack: np.ndarray
 
     def __post_init__(self) -> None:
         self.stack = np.asarray(self.stack, np.float32)
-        if self.stack.ndim != 3 or self.stack.shape[1:] != (
+        if self.stack.ndim != 4 or self.stack.shape[1:] != (
             len(self.temp_bins),
+            len(ACCESS_TYPES),
             len(PARAM_NAMES),
         ):
             raise ValueError(
                 f"stack shape {self.stack.shape} does not match "
-                f"{len(self.temp_bins)} bins × {len(PARAM_NAMES)} params"
+                f"{len(self.temp_bins)} bins × {len(ACCESS_TYPES)} access "
+                f"types × {len(PARAM_NAMES)} params"
+            )
+        if bool((self.stack < 0.0).any()):
+            raise ValueError(
+                "timing stack contains negative entries (the profiler's "
+                "untested sentinel): refusing to program untested timings"
             )
 
     # -- shape ------------------------------------------------------------
@@ -121,10 +159,10 @@ class DimmTimingTable:
         """Boot-time profiling: minimal safe timings per DIMM per bin.
 
         Runs the fleet engine once over all bins (a single jitted
-        (DIMM × temperature) sweep at the worst-case data pattern) and takes
-        the elementwise max over read- and write-mode requirements, so one
-        set per bin is safe for both access types (what a real controller
-        programs)."""
+        (DIMM × temperature) sweep at the worst-case data pattern) and
+        programs one read set and one write set per bin — each access type
+        at its own profiled margin (the paper's per-access-type register
+        sets), never the elementwise merge."""
         from repro.core import fleet as fleet_mod
 
         result = fleet_mod.sweep(
@@ -137,18 +175,19 @@ class DimmTimingTable:
     def from_fleet(
         cls, result, temp_bins: Optional[Sequence[float]] = None
     ) -> "DimmTimingTable":
-        """Build the stacked per-(DIMM, temperature-bin) table straight
-        from a :class:`repro.core.fleet.SweepResult` — no re-profiling, no
-        Python list plumbing: the sweep's merged ``(T, N, 4)`` stack is
-        transposed into the controller's ``(N, T, 4)`` registers in one
-        device-to-host transfer.
+        """Build the stacked per-(DIMM, temperature-bin, access-type) table
+        straight from a :class:`repro.core.fleet.SweepResult` — no
+        re-profiling, no Python list plumbing: the sweep's ``(T, N, 2, 4)``
+        stacked sets are transposed into the controller's ``(N, T, 2, 4)``
+        registers in one device-to-host transfer.
 
-        The sweep's temperature grid becomes the bin edges; each entry is
-        the read/write-merged requirement at the worst-case pattern. Pass
-        ``temp_bins`` to override the sweep's record of them; by default the
-        sweep's exact caller-provided temperatures are used (never the
-        float32 grid, which would perturb edges like 40.1 and make
-        ``lookup`` at that exact temperature miss its own bin)."""
+        The sweep's temperature grid becomes the bin edges; each (bin,
+        access) entry is that access type's profiled requirement at the
+        worst-case pattern. Pass ``temp_bins`` to override the sweep's
+        record of them; by default the sweep's exact caller-provided
+        temperatures are used (never the float32 grid, which would perturb
+        edges like 40.1 and make ``lookup`` at that exact temperature miss
+        its own bin)."""
         if temp_bins is None:
             temp_bins = result.bin_edges()
         else:
@@ -158,43 +197,59 @@ class DimmTimingTable:
                     f"{len(temp_bins)} temp_bins for a "
                     f"{result.read.shape[0]}-temperature sweep"
                 )
-        merged = np.asarray(result.merged_timings(), np.float32)  # (T, N, 4)
-        return cls(temp_bins=temp_bins, stack=merged.transpose(1, 0, 2))
+        stacked = np.asarray(result.stacked_timings(), np.float32)  # (T,N,2,4)
+        return cls(temp_bins=temp_bins, stack=stacked.transpose(1, 0, 2, 3))
 
     @classmethod
     def from_sets(
         cls,
         temp_bins: Sequence[float],
-        sets: Sequence[Sequence[TimingParams]],
+        sets: Sequence[Sequence[TimingParams | AccessTimings]],
     ) -> "DimmTimingTable":
-        """Build from nested per-DIMM timing-set lists (the v1 layout)."""
+        """Build from nested per-DIMM timing-set lists. Plain
+        :class:`TimingParams` entries (the v1 merged layout) are duplicated
+        into both access slots; :class:`AccessTimings` entries keep their
+        split sets."""
+        def block(entry: TimingParams | AccessTimings):
+            if isinstance(entry, TimingParams):
+                entry = AccessTimings.merged(entry)
+            return [[getattr(t, p) for p in PARAM_NAMES] for t in entry]
+
         stack = np.asarray(
-            [[[getattr(t, p) for p in PARAM_NAMES] for t in per_dimm]
-             for per_dimm in sets],
-            np.float32,
+            [[block(t) for t in per_dimm] for per_dimm in sets], np.float32
         )
         return cls(temp_bins=tuple(float(t) for t in temp_bins), stack=stack)
 
     # -- access -----------------------------------------------------------
-    def row(self, dimm: int, bin_idx: int) -> TimingParams:
-        """Timing set at ``(dimm, bin)``; the beyond-last sentinel
-        (``bin_idx >= n_bins``) is JEDEC."""
+    def row(self, dimm: int, bin_idx: int) -> AccessTimings:
+        """Read + write timing sets at ``(dimm, bin)``; the beyond-last
+        sentinel (``bin_idx >= n_bins``) is JEDEC for both access types."""
         if bin_idx >= self.n_bins:
-            return JEDEC_DDR3_1600
-        return TimingParams(*(float(v) for v in self.stack[dimm, bin_idx]))
+            return JEDEC_ACCESS
+        block = self.stack[dimm, bin_idx]
+        return AccessTimings(
+            read=TimingParams(*(float(v) for v in block[0])),
+            write=TimingParams(*(float(v) for v in block[1])),
+        )
 
     @property
-    def sets(self) -> List[List[TimingParams]]:
+    def sets(self) -> List[List[AccessTimings]]:
         """Nested-list view ``sets[dimm][bin]`` (compatibility shim for
         per-DIMM consumers; the storage is :attr:`stack`)."""
         return [
-            [TimingParams(*(float(v) for v in row)) for row in per_dimm]
+            [
+                AccessTimings(
+                    read=TimingParams(*(float(v) for v in block[0])),
+                    write=TimingParams(*(float(v) for v in block[1])),
+                )
+                for block in per_dimm
+            ]
             for per_dimm in self.stack
         ]
 
-    def lookup(self, dimm: int, temp_c: float) -> TimingParams:
-        """Timing set for the smallest bin covering ``temp_c`` (guard-banded
-        by the caller); above the last bin → JEDEC."""
+    def lookup(self, dimm: int, temp_c: float) -> AccessTimings:
+        """Timing sets for the smallest bin covering ``temp_c``
+        (guard-banded by the caller); above the last bin → JEDEC."""
         return self.row(dimm, bin_index(self.temp_bins, temp_c))
 
     # -- persistence (the controller's "timing registers" survive reboot) --
@@ -203,6 +258,7 @@ class DimmTimingTable:
             {
                 "schema_version": TABLE_SCHEMA_VERSION,
                 "params": list(PARAM_NAMES),
+                "access_types": list(ACCESS_TYPES),
                 "temp_bins": list(self.temp_bins),
                 "stack": self.stack.tolist(),
             }
@@ -213,16 +269,31 @@ class DimmTimingTable:
         obj = json.loads(text)
         version = obj.get("schema_version", 1)
         if version == 1:
-            # PR-1 layout: nested per-DIMM lists of timing dicts.
+            # PR-1 layout: nested per-DIMM lists of merged timing dicts,
+            # duplicated into both access slots by from_sets.
             return cls.from_sets(
                 obj["temp_bins"],
                 [[TimingParams(**d) for d in per_dimm] for per_dimm in obj["sets"]],
             )
-        if version == 2:
+        if version in (2, 3):
             if obj.get("params", list(PARAM_NAMES)) != list(PARAM_NAMES):
                 raise ValueError(
                     f"persisted parameter order {obj['params']} does not "
                     f"match {list(PARAM_NAMES)}"
+                )
+        if version == 2:
+            # PR-2 layout: one merged (N, B, 4) stack → duplicate over the
+            # access axis (the merge is safe for both types, just slower).
+            merged = np.asarray(obj["stack"], np.float32)
+            return cls(
+                temp_bins=tuple(obj["temp_bins"]),
+                stack=np.repeat(merged[:, :, None, :], len(ACCESS_TYPES), axis=2),
+            )
+        if version == 3:
+            if obj.get("access_types", list(ACCESS_TYPES)) != list(ACCESS_TYPES):
+                raise ValueError(
+                    f"persisted access-type order {obj['access_types']} does "
+                    f"not match {list(ACCESS_TYPES)}"
                 )
             return cls(
                 temp_bins=tuple(obj["temp_bins"]),
@@ -266,7 +337,7 @@ def init_state(n_dimms: int, n_bins: int) -> ControllerState:
 def _advance_dimm(
     edges: Array,       # (B,)
     params: ControllerParams,
-    rows: Array,        # (B, 4) this DIMM's timing registers
+    rows: Array,        # (B, 2, 4) this DIMM's per-access timing registers
     bin_idx: Array,     # () int32
     streak: Array,      # () int32
     fused: Array,       # () bool
@@ -294,11 +365,11 @@ def _advance_dimm(
     # A fused DIMM's registers are frozen (the wrapper early-returns).
     new_bin = jnp.where(fused, bin_idx, new_bin)
     new_streak = jnp.where(fused, streak, new_streak)
-    # Effective selected row: n_bins is the JEDEC sentinel.
+    # Effective selected rows (read + write sets): n_bins = JEDEC sentinel.
     eff_bin = jnp.where(fused, n_bins, new_bin).astype(jnp.int32)
     row = jnp.where(
         eff_bin >= n_bins,
-        jnp.asarray(_JEDEC_ROW),
+        jnp.asarray(_JEDEC_ROWS),
         rows[jnp.clip(new_bin, 0, n_bins - 1)],
     )
     return new_bin, new_streak, fused, row, switched, eff_bin
@@ -316,8 +387,9 @@ def step(
 
     ``temps_c``/``errors`` are ``(n_dimms,)``; errors fuse *before* the
     temperature is considered, exactly like ``report_error`` followed by
-    ``observe``. Returns ``(state, timing_rows (n_dimms, 4),
-    switched (n_dimms,), effective_bin (n_dimms,))``."""
+    ``observe``. Returns ``(state, timing_rows (n_dimms, 2, 4),
+    switched (n_dimms,), effective_bin (n_dimms,))`` — the timing rows
+    carry both access-type sets (read = 0, write = 1)."""
     if errors is None:
         errors = jnp.zeros(temps_c.shape, bool)
     new_bin, new_streak, fused, rows, switched, eff = jax.vmap(
@@ -330,7 +402,7 @@ def step(
 class ReplayResult(NamedTuple):
     """Dense output of a trace replay (all arrays over (n_steps, n_dimms))."""
 
-    timings: Array      # (S, N, 4) realized timing rows, ns
+    timings: Array      # (S, N, 2, 4) realized per-access timing rows, ns
     bin_idx: Array      # (S, N) int32 effective row (n_bins = JEDEC sentinel)
     switched: Array     # (S, N) bool
     fused: Array        # (S, N) bool (post-step fuse state)
@@ -447,10 +519,11 @@ class ALDRAMController:
         to the shared :func:`repro.core.binning.bin_index`)."""
         return bin_index(self.table.temp_bins, temp_c + self.guard_band_c)
 
-    def observe(self, dimm: int, temp_c: float) -> TimingParams:
-        """Feed a temperature observation; returns the timing set to use."""
+    def observe(self, dimm: int, temp_c: float) -> AccessTimings:
+        """Feed a temperature observation; returns the read + write timing
+        sets to program (both access types, each at its own margin)."""
         if self._fused[dimm]:
-            return JEDEC_DDR3_1600
+            return JEDEC_ACCESS
         new_bin, streak, switched = advance_bin(
             self.table.temp_bins,
             int(self._bin[dimm]),
@@ -466,18 +539,18 @@ class ALDRAMController:
             self.switch_count += 1
         return self.current(dimm)
 
-    def current(self, dimm: int) -> TimingParams:
+    def current(self, dimm: int) -> AccessTimings:
         if self._fused[dimm]:
-            return JEDEC_DDR3_1600
+            return JEDEC_ACCESS
         return self.table.row(dimm, int(self._bin[dimm]))
 
-    def report_error(self, dimm: int) -> TimingParams:
+    def report_error(self, dimm: int) -> AccessTimings:
         """Reliability fallback: any observed error fuses the DIMM to JEDEC
         timings (the paper's ultimate guarantee — at worst, AL-DRAM degrades
         to the baseline)."""
         self._fused[dimm] = True
         self.fallback_count += 1
-        return JEDEC_DDR3_1600
+        return JEDEC_ACCESS
 
     def bin_of(self, dimm: int) -> Optional[int]:
         return None if self._fused[dimm] else int(self._bin[dimm])

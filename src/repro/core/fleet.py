@@ -23,13 +23,15 @@ Python loop dominates wall-clock. This module batches the whole study into
   rebuilding inside the traced region.
 * :class:`SweepResult` holds the dense outputs — ``read`` / ``write`` /
   ``joint`` timing stacks of shape ``(n_temps, n_patterns, n_dimms, 4)``
-  (last axis in ``PARAM_NAMES`` order) — with reduction / merge / summary
-  helpers. ``merged_timings`` (elementwise max of read and write
-  requirements at the worst pattern) is exactly what a controller programs,
-  and :meth:`~SweepResult.to_table` hands it to
-  :class:`repro.core.controller.DimmTimingTable` as one stacked array —
-  straight into the controller's array-backed registers, no re-profiling
-  and no per-DIMM list plumbing.
+  (last axis in ``PARAM_NAMES`` order) — with reduction / summary helpers.
+  ``stacked_timings`` (the read and write sets at the worst pattern,
+  stacked on an access-type axis) is exactly what a per-access-type
+  controller programs, and :meth:`~SweepResult.to_table` hands it to
+  :class:`repro.core.controller.DimmTimingTable` as one
+  ``(T, N, 2, 4)`` array — straight into the controller's array-backed
+  registers, no re-profiling and no per-DIMM list plumbing.
+  ``merged_timings`` (elementwise max of the two sets) remains as a
+  deprecated compat shim for single-register-set consumers.
 
 Scaling note: grid-search cost is O(n_dimms · n_temps · n_patterns ·
 Σ grid sizes) fused into a handful of XLA kernels; 1,000+ modules × 5
@@ -143,13 +145,10 @@ class SweepResult(NamedTuple):
         """Index of the guarantee pattern (smallest margin factor)."""
         return int(jnp.argmin(self.patterns))
 
-    def merged_timings(self) -> Array:
-        """(T, N, 4) elementwise max of read/write requirements at the
-        worst-case pattern — the set a controller programs per temp bin.
-
-        Refuses to build controller-facing output from a sweep that never
-        tested the guarantee pattern (margin factor 1.0): timings profiled
-        only under benign patterns are not safe to program."""
+    def _guarantee_pattern_idx(self) -> int:
+        """Worst-pattern index, refusing sweeps that never tested the
+        guarantee pattern (margin factor 1.0): timings profiled only under
+        benign patterns are not safe to program."""
         p = self.worst_pattern_idx()
         worst = float(self.patterns[p])
         if worst > 1.0:
@@ -158,24 +157,70 @@ class SweepResult(NamedTuple):
                 f"factor is {worst} (> 1.0); re-sweep with pattern 1.0 "
                 "before programming controller tables"
             )
-        return jnp.maximum(self.read[:, p], self.write[:, p])
+        return p
+
+    def read_timings(self) -> Array:
+        """(T, N, 4) read-access timing sets at the worst-case pattern —
+        what the controller programs into the *read* register file."""
+        return self.read[:, self._guarantee_pattern_idx()]
+
+    def write_timings(self) -> Array:
+        """(T, N, 4) write-access timing sets at the worst-case pattern —
+        what the controller programs into the *write* register file.
+
+        Refuses a sweep whose write profile carries the
+        :data:`repro.core.profiler.WRITE_TRAS_UNTESTED_NS` sentinel (tRAS
+        never tested under write stress): an untested parameter must be
+        re-profiled, not silently programmed."""
+        w = self.write[:, self._guarantee_pattern_idx()]
+        if bool((jnp.asarray(w) < 0.0).any()):
+            raise ValueError(
+                "write-mode sweep carries the untested-tRAS sentinel "
+                f"({profiler.WRITE_TRAS_UNTESTED_NS} ns): re-sweep with "
+                "tras_mode='profiled' before programming write registers"
+            )
+        return w
+
+    def stacked_timings(self) -> Array:
+        """(T, N, 2, 4) per-access-type timing sets (axis order
+        ``ACCESS_TYPES`` = read, write) at the worst-case pattern — the
+        dense form :class:`repro.core.controller.DimmTimingTable` ingests."""
+        return jnp.stack([self.read_timings(), self.write_timings()], axis=-2)
+
+    def merged_timings(self) -> Array:
+        """(T, N, 4) elementwise max of read/write requirements at the
+        worst-case pattern.
+
+        .. deprecated:: PR 3
+            Compat shim for single-register-set consumers. The merge is
+            strictly more conservative than programming per-access-type
+            sets (:meth:`stacked_timings`): a merged set must satisfy both
+            access types at once, so each parameter inherits the slower
+            mode's requirement. Now that write-mode tRAS is actually
+            profiled, even the merged set reduces tRAS below JEDEC — but
+            new consumers should take the split sets."""
+        return jnp.maximum(self.read_timings(), self.write_timings())
 
     def table_entries(self):
-        """Iterate ``(bin_idx, temp_c, dimm_idx, [trcd, tras, twr, trp],
-        margin)`` over the merged read/write requirements at the worst
-        pattern; ``margin`` is the mean fractional reduction vs JEDEC.
+        """Iterate ``(bin_idx, temp_c, dimm_idx, access_type,
+        [trcd, tras, twr, trp], margin)`` over the per-access-type sets at
+        the worst pattern; ``margin`` is the mean fractional reduction vs
+        JEDEC of that set.
 
         Ingestion point for *per-entry* consumers (altune
         ``TimingTable.from_fleet`` keys registers by entry); the DRAM
         controller's ``DimmTimingTable.from_fleet`` consumes
-        :meth:`merged_timings` as one stacked array instead — no per-DIMM
+        :meth:`stacked_timings` as one stacked array instead — no per-DIMM
         Python plumbing on that path."""
-        merged = self.merged_timings()
-        grid = merged.tolist()
-        margins = profiler.stack_reductions(merged).mean(axis=-1).tolist()
+        from repro.core.timing import ACCESS_TYPES
+
+        stacked = self.stacked_timings()                      # (T, N, 2, 4)
+        grid = stacked.tolist()
+        margins = profiler.stack_reductions(stacked).mean(axis=-1).tolist()
         for b, t in enumerate(self.bin_edges()):
-            for i, timings in enumerate(grid[b]):
-                yield b, t, i, timings, margins[b][i]
+            for i, per_access in enumerate(grid[b]):
+                for a, access in enumerate(ACCESS_TYPES):
+                    yield b, t, i, access, per_access[a], margins[b][i][a]
 
     def to_table(self):
         """Build a :class:`repro.core.controller.DimmTimingTable` directly
@@ -205,19 +250,22 @@ class SweepResult(NamedTuple):
         return out
 
 
-@partial(jax.jit, static_argnames=("window_s", "consts"))
+@partial(jax.jit, static_argnames=("window_s", "consts", "write_tras"))
 def _sweep_grid(
     cells: CellParams,
     temps_c: Array,
     patterns: Array,
     window_s: float,
     consts: ChargeModelConstants,
+    write_tras: str,
 ) -> Tuple[Array, Array, Array]:
     """The whole characterization study as one traced computation."""
 
     def at_point(t: Array, p: Array) -> Tuple[Array, Array, Array]:
         read = profiler.individual_min_timings(cells, t, p, window_s, consts)
-        write = profiler.write_mode_min_timings(cells, t, p, window_s, consts)
+        write = profiler.write_mode_min_timings(
+            cells, t, p, window_s, consts, tras_mode=write_tras
+        )
         joint = profiler.joint_min_timings(
             cells, t, 1.0, window_s, consts
         )
@@ -236,18 +284,22 @@ def sweep(
     patterns: Sequence[float] = DEFAULT_PATTERNS,
     window_s: float = charge.REFRESH_WINDOW_S,
     consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+    write_tras: str = "profiled",
 ) -> SweepResult:
     """Characterize a whole fleet in one jitted (vmap × vmap) call.
 
     Equivalent to — and tested against — looping
     ``profiler.profile_individual`` / ``profile_write_mode`` /
     ``profile_joint`` over every (temperature, pattern) point, but with the
-    entire grid fused into one XLA computation.
+    entire grid fused into one XLA computation. ``write_tras`` passes
+    through to :func:`repro.core.profiler.write_mode_min_timings`
+    (``"untested"`` fills the write tRAS column with the refused sentinel —
+    for tests of the refusal path, never for real tables).
     """
     cells = fleet.cells if isinstance(fleet, Fleet) else fleet
     t = jnp.asarray(temps_c, jnp.float32)
     p = jnp.asarray(patterns, jnp.float32)
-    read, write, joint = _sweep_grid(cells, t, p, float(window_s), consts)
+    read, write, joint = _sweep_grid(cells, t, p, float(window_s), consts, write_tras)
     return SweepResult(
         temps_c=t, patterns=p, read=read, write=write, joint=joint,
         temps_exact=tuple(float(x) for x in temps_c),

@@ -34,14 +34,21 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import Array
 
-from repro.core.timing import JEDEC_DDR3_1600, TBURST_NS, TCL_NS, TimingParams
+from repro.core.timing import (
+    ACCESS_TYPES,
+    JEDEC_DDR3_1600,
+    PARAM_NAMES,
+    TBURST_NS,
+    TCL_NS,
+    TimingParams,
+)
 
 #: Deployed reductions from the paper's real-system evaluation (§1.6).
 DEPLOYED_REDUCTIONS_55C: Dict[str, float] = {
@@ -140,17 +147,32 @@ def _fields(ws: Tuple[Workload, ...]) -> Dict[str, "np.ndarray"]:
     }
 
 
-def access_latency_ns(t: TimingParams, f: Dict[str, Array], cfg: SystemConfig) -> Array:
-    """Expected bank access latency (no queueing) per request."""
+def access_latency_ns(
+    t: TimingParams,
+    f: Dict[str, Array],
+    cfg: SystemConfig,
+    t_write: Optional[TimingParams] = None,
+) -> Array:
+    """Expected bank access latency (no queueing) per request.
+
+    ``t`` is the *read* timing set; ``t_write`` the write set (defaults to
+    ``t`` — the merged single-register-file behaviour, to which this
+    reduces exactly when the sets coincide). Reads are bound by
+    tRCD/tRAS/tRP of the read set; write requests take their tRCD/tRP from
+    the write set and expose its tWR through the turnaround recovery."""
+    tw = t if t_write is None else t_write
     h = f["row_hit"]
+    wf = f["write_frac"]
     miss = 1.0 - h
     empty = cfg.empty_frac * miss
     conflict = miss - empty
+    trcd_eff = (1.0 - wf) * t.trcd + wf * tw.trcd
+    trp_eff = (1.0 - wf) * t.trp + wf * tw.trp
     t_hit = TCL_NS + TBURST_NS
-    t_empty = t.trcd + TCL_NS + TBURST_NS
+    t_empty = trcd_eff + TCL_NS + TBURST_NS
     ras_extra = cfg.ras_residual * jnp.maximum(t.tras - (t.trcd + TCL_NS + TBURST_NS), 0.0)
-    wr_extra = cfg.wr_turnaround * f["write_frac"] * t.twr
-    t_conf = t.trp + t.trcd + TCL_NS + TBURST_NS + ras_extra + wr_extra
+    wr_extra = cfg.wr_turnaround * wf * tw.twr
+    t_conf = trp_eff + trcd_eff + TCL_NS + TBURST_NS + ras_extra + wr_extra
     return h * t_hit + empty * t_empty + conflict * t_conf + cfg.ctrl_overhead_ns
 
 
@@ -159,29 +181,45 @@ def access_latency_ns(t: TimingParams, f: Dict[str, Array], cfg: SystemConfig) -
 TRTP_NS: float = 7.5
 
 
-def miss_service_ns(t: TimingParams, f: Dict[str, Array], cfg: SystemConfig) -> Array:
+def miss_service_ns(
+    t: TimingParams,
+    f: Dict[str, Array],
+    cfg: SystemConfig,
+    t_write: Optional[TimingParams] = None,
+) -> Array:
     """Bank occupancy per *miss*: the row cycle. Precharge may start once
     both tRAS and read-to-precharge (tRCD+tRTP) are satisfied; writes add
-    tWR recovery."""
+    tWR recovery. With a distinct write set, write-conflict row cycles run
+    at the write set's (shorter, restore-under-write) tRAS."""
+    tw = t if t_write is None else t_write
     h = f["row_hit"]
+    wf = f["write_frac"]
     miss = jnp.maximum(1.0 - h, 1e-9)
     empty = cfg.empty_frac * miss
     conflict = miss - empty
-    wr_extra = cfg.wr_turnaround * f["write_frac"] * t.twr
-    occ_conf = jnp.maximum(t.tras, t.trcd + TRTP_NS) + t.trp + wr_extra
-    return (empty * (t.trcd + TBURST_NS) + conflict * occ_conf) / miss
+    trcd_eff = (1.0 - wf) * t.trcd + wf * tw.trcd
+    wr_extra = cfg.wr_turnaround * wf * tw.twr
+    occ_read = jnp.maximum(t.tras, t.trcd + TRTP_NS) + t.trp
+    occ_write = jnp.maximum(tw.tras, tw.trcd + TRTP_NS) + tw.trp
+    occ_conf = (1.0 - wf) * occ_read + wf * occ_write + wr_extra
+    return (empty * (trcd_eff + TBURST_NS) + conflict * occ_conf) / miss
 
 
 def evaluate(
     t: TimingParams,
     cfg: SystemConfig,
     workloads: Tuple[Workload, ...] = WORKLOADS,
+    t_write: Optional[TimingParams] = None,
 ) -> Dict[str, Array]:
     """IPC per workload under timing set ``t`` (homogeneous multi-instance
-    for the multi-core configuration, the paper's methodology)."""
+    for the multi-core configuration, the paper's methodology).
+
+    Pass ``t_write`` to evaluate a per-access-type register file: reads
+    run at ``t``'s margins, writes at ``t_write``'s. Omitting it models a
+    merged single set (the two coincide)."""
     f = _fields(workloads)
-    lat = access_latency_ns(t, f, cfg)
-    svc = miss_service_ns(t, f, cfg)
+    lat = access_latency_ns(t, f, cfg, t_write)
+    svc = miss_service_ns(t, f, cfg, t_write)
     miss = 1.0 - f["row_hit"]
     banks_eff = cfg.n_banks * cfg.bank_balance
     ghz = cfg.cpu_ghz
@@ -241,11 +279,38 @@ def speedup_report(
 # ---------------------------------------------------------------------------
 # Fleet path: vmapped evaluation of per-DIMM timing stacks
 # ---------------------------------------------------------------------------
+def _with_access_axis(timings: Array, split: Optional[bool] = None) -> Array:
+    """Normalize a timing stack to ``(..., 2, 4)`` (access-type axis).
+
+    ``split=True`` asserts the stack already carries the access axis
+    (read = 0, write = 1, the ``ACCESS_TYPES`` order); ``split=False``
+    treats it as a merged set and duplicates it into both slots. With
+    ``split=None`` the shape decides: a trailing ``(2, 4)`` is taken as
+    split. That heuristic cannot distinguish a literal two-entry merged
+    ``(2, 4)`` stack — callers whose leading axes are arbitrary (a 2-DIMM
+    fleet, a 2-bin table) must pass ``split`` explicitly; the fixed-rank
+    entry points (``trace_score``, ``realized_latency_reductions``) decide
+    by rank and are unambiguous."""
+    timings = jnp.asarray(timings, jnp.float32)
+    if timings.shape[-1] != len(PARAM_NAMES):
+        raise ValueError(f"timing stack must end in a 4-axis, got {timings.shape}")
+    if split is None:
+        split = timings.ndim >= 2 and timings.shape[-2] == len(ACCESS_TYPES)
+    if split:
+        if timings.ndim < 2 or timings.shape[-2] != len(ACCESS_TYPES):
+            raise ValueError(
+                f"expected an access-type axis (..., 2, 4), got {timings.shape}"
+            )
+        return timings
+    return jnp.stack([timings, timings], axis=-2)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "workloads"))
 def _ipc_stack(flat: Array, cfg: SystemConfig, workloads: Tuple[Workload, ...]) -> Array:
     def one(ts: Array) -> Array:
-        t = TimingParams(ts[0], ts[1], ts[2], ts[3])
-        return evaluate(t, cfg, workloads)["ipc"]
+        tr = TimingParams(ts[0, 0], ts[0, 1], ts[0, 2], ts[0, 3])
+        tw = TimingParams(ts[1, 0], ts[1, 1], ts[1, 2], ts[1, 3])
+        return evaluate(tr, cfg, workloads, t_write=tw)["ipc"]
 
     return jax.vmap(one)(flat)
 
@@ -254,31 +319,38 @@ def evaluate_stack(
     timings: Array,
     cfg: SystemConfig,
     workloads: Tuple[Workload, ...] = WORKLOADS,
+    split: Optional[bool] = None,
 ) -> Array:
-    """IPC for a ``(..., 4)`` timing stack (``PARAM_NAMES`` order, ns).
+    """IPC for a ``(..., 4)`` merged or ``(..., 2, 4)`` per-access-type
+    timing stack (``PARAM_NAMES`` order, ns; see :func:`_with_access_axis`
+    for the ``split`` disambiguation rule — pass it explicitly when a
+    leading axis could legitimately have extent 2).
 
     Jitted and vmapped over all leading axes — the fleet engine feeds the
-    ``(n_temps, n_patterns, n_dimms, 4)`` sweep output straight in (eager
-    dispatch of the unrolled bisection loop is ~300× slower). Returns IPC
-    with shape ``(..., n_workloads)``.
+    sweep output straight in (eager dispatch of the unrolled bisection
+    loop is ~300× slower). Returns IPC with shape
+    ``(leading..., n_workloads)``.
     """
-    timings = jnp.asarray(timings, jnp.float32)
-    ipc = _ipc_stack(timings.reshape(-1, 4), cfg, workloads)
-    return ipc.reshape(*timings.shape[:-1], ipc.shape[-1])
+    timings = _with_access_axis(timings, split)
+    ipc = _ipc_stack(timings.reshape(-1, 2, 4), cfg, workloads)
+    return ipc.reshape(*timings.shape[:-2], ipc.shape[-1])
 
 
 def fleet_speedups(
     timings: Array,
     cfg: SystemConfig = MULTI_CORE,
     workloads: Tuple[Workload, ...] = WORKLOADS,
+    split: Optional[bool] = None,
 ) -> Array:
-    """Per-entry geometric-mean speedup over JEDEC for a ``(..., 4)`` stack.
+    """Per-entry geometric-mean speedup over JEDEC for a ``(..., 4)``
+    merged or ``(..., 2, 4)`` per-access-type stack (``split`` as in
+    :func:`evaluate_stack`).
 
     This is the per-DIMM "what do I gain from adapting this module" number
     of the paper's Fig. 3, computed for a whole fleet in one call."""
     jedec = jnp.asarray([list(JEDEC_DDR3_1600)], jnp.float32)
-    base = evaluate_stack(jedec, cfg, workloads)[0]
-    ipc = evaluate_stack(timings, cfg, workloads)
+    base = evaluate_stack(jedec, cfg, workloads, split=False)[0]
+    ipc = evaluate_stack(timings, cfg, workloads, split=split)
     return jnp.exp(jnp.log(ipc / base).mean(axis=-1))
 
 
@@ -309,14 +381,26 @@ def time_in_bin(bin_idx: Array, n_bins: int) -> Array:
 def realized_latency_reductions(timings: Array) -> Dict[str, Array]:
     """Per-DIMM mean read/write latency reduction vs JEDEC over a trace.
 
-    ``timings`` is the ``(n_steps, n_dimms, 4)`` realized-row stack from a
-    replay; the figures of merit are the paper's Fig. 2 sums
-    (read: tRCD+tRAS+tRP, write: tRCD+tWR+tRP)."""
-    read = timings[..., 0] + timings[..., 1] + timings[..., 3]
-    write = timings[..., 0] + timings[..., 2] + timings[..., 3]
+    ``timings`` is the ``(n_steps, n_dimms, 2, 4)`` realized per-access
+    row stack from a replay (a legacy merged ``(n_steps, n_dimms, 4)``
+    stack is also accepted and duplicated); the figures of merit are the
+    paper's Fig. 2 sums, each computed from its own access-type set
+    (read: tRCD+tRAS+tRP of the read set, write: tRCD+tWR+tRP of the
+    write set). ``read_params`` / ``write_params`` give the ``(n_dimms,
+    4)`` per-parameter realized reductions of each set."""
+    timings = jnp.asarray(timings, jnp.float32)
+    # Fixed-rank input: rank 4 carries the access axis, rank 3 is legacy
+    # merged — no shape heuristic needed (a 2-DIMM fleet stays a fleet).
+    timings = _with_access_axis(timings, split=(timings.ndim == 4))
+    rs, ws = timings[..., 0, :], timings[..., 1, :]
+    read = rs[..., 0] + rs[..., 1] + rs[..., 3]
+    write = ws[..., 0] + ws[..., 2] + ws[..., 3]
+    jedec = jnp.asarray(list(JEDEC_DDR3_1600), jnp.float32)
     return {
         "read": 1.0 - read.mean(axis=0) / JEDEC_DDR3_1600.read_sum,
         "write": 1.0 - write.mean(axis=0) / JEDEC_DDR3_1600.write_sum,
+        "read_params": 1.0 - rs.mean(axis=0) / jedec,
+        "write_params": 1.0 - ws.mean(axis=0) / jedec,
     }
 
 
@@ -330,27 +414,36 @@ def trace_score(
     """Score a controller replay: realized latency/performance gains,
     switching activity, and degradation vs the paper's 14 % claim.
 
-    ``stack`` is the table's ``(n_dimms, n_bins, 4)`` timing registers;
-    ``replay`` a :class:`repro.core.controller.ReplayResult` (duck-typed:
-    ``timings``, ``bin_idx``, ``switched``). The performance figure is
-    occupancy-weighted: IPC is evaluated once per *unique* (DIMM, bin) row
-    — n_dimms × (n_bins+1) evaluations — then weighted by time-in-bin, so
-    scoring a 10⁷-transition day costs the same as scoring a minute."""
+    ``stack`` is the table's ``(n_dimms, n_bins, 2, 4)`` per-access-type
+    timing registers (a legacy merged ``(n_dimms, n_bins, 4)`` stack is
+    duplicated); ``replay`` a :class:`repro.core.controller.ReplayResult`
+    (duck-typed: ``timings``, ``bin_idx``, ``switched``). The performance
+    figure is occupancy-weighted: IPC is evaluated once per *unique*
+    (DIMM, bin) register block — n_dimms × (n_bins+1) evaluations — then
+    weighted by time-in-bin, so scoring a 10⁷-transition day costs the
+    same as scoring a minute. Alongside the Fig. 2 sum reductions, the
+    per-parameter realized reductions of each access-type set are
+    reported as ``{access}_{param}_reduction_mean`` (the per-access-type
+    register sets are the whole point — tRAS must show up reduced in the
+    read set, not pinned at JEDEC by a merge)."""
     stack = jnp.asarray(stack, jnp.float32)
+    # Fixed-rank input: rank 4 = (N, B, 2, 4) split registers, rank 3 =
+    # legacy merged (N, B, 4) — decided by rank, never by axis extent.
+    stack = _with_access_axis(stack, split=(stack.ndim == 4))    # (N, B, 2, 4)
     n_dimms, n_bins = stack.shape[0], stack.shape[1]
     occ = time_in_bin(replay.bin_idx, n_bins)                    # (N, B+1)
     red = realized_latency_reductions(replay.timings)
     jedec_rows = jnp.broadcast_to(
-        jnp.asarray([list(JEDEC_DDR3_1600)], jnp.float32), (n_dimms, 1, 4)
+        jnp.asarray(list(JEDEC_DDR3_1600), jnp.float32), (n_dimms, 1, 2, 4)
     )
-    rows = jnp.concatenate([stack, jedec_rows], axis=1)          # (N, B+1, 4)
-    sp = fleet_speedups(rows, cfg, workloads)                    # (N, B+1)
-    sp_mem = fleet_speedups(rows, cfg, MEM_INTENSIVE_WORKLOADS)
+    rows = jnp.concatenate([stack, jedec_rows], axis=1)          # (N, B+1, 2, 4)
+    sp = fleet_speedups(rows, cfg, workloads, split=True)        # (N, B+1)
+    sp_mem = fleet_speedups(rows, cfg, MEM_INTENSIVE_WORKLOADS, split=True)
     realized = (occ * sp).sum(axis=-1)                           # (N,)
     realized_mem = (occ * sp_mem).sum(axis=-1)
     switches = replay.switched.sum(axis=0)
     n_steps = replay.bin_idx.shape[0]
-    return {
+    out = {
         "read_reduction_mean": float(red["read"].mean()),
         "write_reduction_mean": float(red["write"].mean()),
         "speedup_realized_mean": float(realized.mean() - 1.0),
@@ -364,7 +457,17 @@ def trace_score(
         / (n_steps * n_dimms / 1000.0),
         "time_at_jedec_frac": float(occ[:, n_bins].mean()),
         "time_in_coolest_bin_frac": float(occ[:, 0].mean()),
+        # Fraction of DIMMs whose *programmed* read-set tRAS sits below
+        # JEDEC in the coolest bin — 1.0 unless a merge bug reappears.
+        "tras_below_jedec_coolest_frac": float(
+            (stack[:, 0, 0, 1] < JEDEC_DDR3_1600.tras - 1e-6).mean()
+        ),
     }
+    for access in ACCESS_TYPES:
+        per = red[f"{access}_params"]                            # (N, 4)
+        for pi, param in enumerate(PARAM_NAMES):
+            out[f"{access}_{param}_reduction_mean"] = float(per[:, pi].mean())
+    return out
 
 
 def per_workload_speedups(

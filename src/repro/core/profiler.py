@@ -151,15 +151,38 @@ def individual_min_timings(
     )
 
 
+#: Sentinel (ns) for a timing parameter that was NOT tested in the current
+#: profiling mode. A negative timing is impossible, so table builders can —
+#: and must — refuse it loudly instead of silently programming JEDEC. This
+#: replaces the old behaviour of reporting write-mode tRAS *at* JEDEC,
+#: which the read/write merge then baked into every programmed table.
+WRITE_TRAS_UNTESTED_NS: float = -1.0
+
+#: Accepted ``tras_mode`` values for :func:`write_mode_min_timings`.
+WRITE_TRAS_MODES: Tuple[str, str] = ("profiled", "untested")
+
+
 def write_mode_min_timings(
     cells: CellParams,
     temp_c: Array | float,
     pattern: Array | float = 1.0,
     window_s: float = charge.REFRESH_WINDOW_S,
     consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+    tras_mode: str = "profiled",
 ) -> Array:
-    """Write-test minimal timings for {tRCD, tWR, tRP} (Fig. 2b), tRAS held
-    at JEDEC. Pure; returns ``(n_dimms, 4)``."""
+    """Write-test minimal timings for all four parameters (Fig. 2b).
+
+    Pure; returns ``(n_dimms, 4)``. tRAS is profiled through the
+    restore-under-write path of :mod:`repro.core.charge` (the write driver
+    overdrives the row restore, so write-mode tRAS is genuinely tested).
+    ``tras_mode="untested"`` reproduces the legacy situation *explicitly*:
+    the tRAS column is filled with :data:`WRITE_TRAS_UNTESTED_NS`, a
+    negative sentinel that every table builder refuses — it can no longer
+    silently masquerade as a JEDEC requirement."""
+    if tras_mode not in WRITE_TRAS_MODES:
+        raise ValueError(
+            f"tras_mode must be one of {WRITE_TRAS_MODES}, got {tras_mode!r}"
+        )
     eff = charge.apply_pattern(cells, pattern)
     base = JEDEC_DDR3_1600
 
@@ -171,8 +194,13 @@ def write_mode_min_timings(
 
         return f
 
-    cols = {p: _min_safe_on_grid(ok(p), _grid(p)) for p in ("trcd", "twr", "trp")}
-    cols["tras"] = jnp.broadcast_to(jnp.asarray(base.tras, jnp.float32), cells.r.shape)
+    cols = {
+        p: _min_safe_on_grid(ok(p), _grid(p)) for p in ("trcd", "tras", "twr", "trp")
+    }
+    if tras_mode == "untested":
+        cols["tras"] = jnp.broadcast_to(
+            jnp.asarray(WRITE_TRAS_UNTESTED_NS, jnp.float32), cells.r.shape
+        )
     return jnp.stack([cols[p] for p in PARAM_NAMES], axis=-1)
 
 
@@ -241,7 +269,8 @@ def profile_write_mode(
     consts: ChargeModelConstants = DEFAULT_CONSTANTS,
     pattern: float = 1.0,
 ) -> ProfileResult:
-    """Write-test minimal timings for {tRCD, tWR, tRP} (Fig. 2b)."""
+    """Write-test minimal timings for all four parameters (Fig. 2b); tRAS
+    comes from the restore-under-write profile."""
     t = write_mode_min_timings(cells, temp_c, pattern, window_s, consts)
     return _result(t, temp_c, window_s)
 

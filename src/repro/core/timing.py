@@ -23,6 +23,14 @@ TCK_DDR3_1600_NS: float = 1.25
 #: Names, in the paper's canonical order.
 PARAM_NAMES: Tuple[str, str, str, str] = ("trcd", "tras", "twr", "trp")
 
+#: Access types, in the canonical axis order of every stacked timing array
+#: with an access-type axis (read = 0, write = 1). AL-DRAM's controller
+#: keeps one pre-validated register set per access type per temperature
+#: bin, because read and write accesses stress different phases of the
+#: bank cycle (sensing/restore vs write-driver recovery).
+ACCESS_TYPES: Tuple[str, str] = ("read", "write")
+READ, WRITE = 0, 1
+
 
 @dataclasses.dataclass(frozen=True)
 class TimingParams:
@@ -96,9 +104,39 @@ class TimingParams:
                 raise ValueError(f"{k}={v!r} must be positive and finite")
 
 
+@dataclasses.dataclass(frozen=True)
+class AccessTimings:
+    """One timing set per access type — the unit a per-access-type
+    controller register file programs for a (DIMM, temperature bin).
+
+    Reads are bound by tRCD + tRAS + tRP; writes by tRCD + tWR + tRP; the
+    two sets are profiled independently (read-mode vs write-mode tests),
+    so neither carries the other's conservatism."""
+
+    read: TimingParams
+    write: TimingParams
+
+    def by_type(self, access: str) -> TimingParams:
+        if access not in ACCESS_TYPES:
+            raise KeyError(f"unknown access type {access!r}")
+        return getattr(self, access)
+
+    def __iter__(self) -> Iterator[TimingParams]:
+        return iter((self.read, self.write))
+
+    @classmethod
+    def merged(cls, t: TimingParams) -> "AccessTimings":
+        """A single merged set duplicated into both slots (legacy tables)."""
+        return cls(read=t, write=t)
+
+
 #: JEDEC DDR3-1600 standard timings (JESD79-3F): the worst-case provisioned
 #: baseline every DIMM must honour regardless of its actual cells/temperature.
 JEDEC_DDR3_1600 = TimingParams(trcd=13.75, tras=35.0, twr=15.0, trp=13.75)
+
+#: JEDEC duplicated into both access slots — the beyond-last-bin / fused
+#: fallback of the per-access-type register file.
+JEDEC_ACCESS = AccessTimings(read=JEDEC_DDR3_1600, write=JEDEC_DDR3_1600)
 
 #: Additional fixed latencies used by the performance model (not adapted).
 TCL_NS: float = 13.75  # CAS latency (read command to first data)

@@ -1,0 +1,204 @@
+"""Per-access-type timing sets: the invariants that killed the
+tRAS-at-JEDEC merge bug and keep it dead.
+
+(a) The read set is elementwise ≤ the old merged set (splitting can only
+    remove conservatism, never add it).
+(b) The write set never programs below its profiled safety requirement —
+    every programmed write row passes the forward write predicate, and
+    shaving one clock cycle off its tRAS fails it (the grid search is
+    tight).
+(c) `DimmTimingTable` JSON v1/v2/v3 round-trips load bit-exact.
+(d) The write-mode "untested tRAS" state is an explicit sentinel that
+    every table builder refuses — it can no longer masquerade as JEDEC.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core import charge, dimm, fleet, profiler
+from repro.core.controller import DimmTimingTable
+from repro.core.timing import (
+    JEDEC_DDR3_1600,
+    PARAM_NAMES,
+    TCK_DDR3_1600_NS,
+    TimingParams,
+)
+
+TEMPS = (45.0, 55.0, 85.0)
+
+
+@pytest.fixture(scope="module")
+def paper_fleet():
+    cells, vidx = dimm.sample_population(jax.random.PRNGKey(0))
+    return fleet.Fleet(cells=cells, vendor=vidx)
+
+
+@pytest.fixture(scope="module")
+def result(paper_fleet):
+    return fleet.sweep(paper_fleet, TEMPS, (1.0, 1.03))
+
+
+def _old_merged(result):
+    """The pre-split pipeline's programmed set: max(read, write) with the
+    write profile's tRAS pinned at JEDEC — i.e. today's merged view with
+    the tRAS column forced back to JEDEC."""
+    merged = np.asarray(result.merged_timings()).copy()
+    merged[..., 1] = JEDEC_DDR3_1600.tras
+    return merged
+
+
+# ---------------------------------------------------------------------------
+# (a) read set ≤ old merged set
+# ---------------------------------------------------------------------------
+def test_read_set_never_exceeds_old_merged(result):
+    read = np.asarray(result.read_timings())
+    old = _old_merged(result)
+    assert (read <= old + 1e-6).all()
+    # And strictly better somewhere: the coolest bin's tRAS must actually
+    # have moved off JEDEC for every DIMM (the recovered margin).
+    assert (read[0, :, 1] < JEDEC_DDR3_1600.tras - 1e-6).all()
+
+
+def test_write_set_never_exceeds_old_merged(result):
+    # The write set only sheds the read set's conservatism too.
+    write = np.asarray(result.write_timings())
+    assert (write <= _old_merged(result) + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# (b) write set ≥ profiled safety requirement
+# ---------------------------------------------------------------------------
+def test_write_set_passes_write_predicate(paper_fleet, result):
+    """Every programmed write row must pass the forward write-correctness
+    predicate at its bin temperature (worst-case pattern) — the profiled
+    safety floor."""
+    write = np.asarray(result.write_timings())           # (T, N, 4)
+    cells = paper_fleet.cells
+    for ti, temp in enumerate(TEMPS):
+        t = TimingParams(*(jnp.asarray(write[ti, :, k]) for k in range(4)))
+        ok = charge.write_ok(cells, t, temp)
+        assert bool(jnp.all(ok)), f"unsafe write set at {temp} °C"
+
+
+def test_write_tras_is_tight(paper_fleet, result):
+    """One cycle below the programmed write tRAS fails the write predicate
+    (unless already at the 1-cycle grid floor): the set sits exactly at
+    its profiled requirement, not above and never below."""
+    write = np.asarray(result.write_timings())
+    cells = paper_fleet.cells
+    for ti, temp in enumerate(TEMPS):
+        tras = write[ti, :, 1]
+        shaved = jnp.asarray(tras - TCK_DDR3_1600_NS)
+        t = TimingParams(
+            jnp.asarray(write[ti, :, 0]), shaved,
+            jnp.asarray(write[ti, :, 2]), jnp.asarray(write[ti, :, 3]),
+        )
+        ok = np.asarray(charge.write_ok(cells, t, temp))
+        at_floor = tras <= TCK_DDR3_1600_NS + 1e-6
+        assert (~ok | at_floor).all(), f"write tRAS not tight at {temp} °C"
+
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed"
+)
+
+
+@needs_hypothesis
+@settings(max_examples=10, deadline=None)
+@given(st.floats(30.0, 85.0), st.sampled_from([1.0]))
+def test_split_invariants_property(temp, pattern):
+    """(a)+(b) at arbitrary temperatures on a sub-fleet: read ≤ old merged,
+    write set safe under the write predicate."""
+    cells, _ = dimm.sample_population(jax.random.PRNGKey(0))
+    sub = type(cells)(r=cells.r[:12], c=cells.c[:12], leak=cells.leak[:12])
+    res = fleet.sweep(sub, temps_c=(temp,), patterns=(pattern,))
+    read = np.asarray(res.read_timings())[0]
+    write = np.asarray(res.write_timings())[0]
+    old = np.asarray(res.merged_timings())[0].copy()
+    old[:, 1] = JEDEC_DDR3_1600.tras
+    assert (read <= old + 1e-6).all()
+    t = TimingParams(*(jnp.asarray(write[:, k]) for k in range(4)))
+    assert bool(jnp.all(charge.write_ok(sub, t, temp)))
+
+
+# ---------------------------------------------------------------------------
+# (c) JSON v1/v2/v3 round-trips, bit-exact
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def table(result):
+    return result.to_table()
+
+
+def test_v3_roundtrip_bit_exact(table):
+    again = DimmTimingTable.from_json(table.to_json())
+    assert again == table
+    np.testing.assert_array_equal(again.stack, table.stack)
+
+
+def test_v2_roundtrip_bit_exact(table):
+    import json
+
+    merged = table.stack.max(axis=2)                     # (N, B, 4)
+    v2 = json.dumps({
+        "schema_version": 2, "params": list(PARAM_NAMES),
+        "temp_bins": list(table.temp_bins), "stack": merged.tolist(),
+    })
+    again = DimmTimingTable.from_json(v2)
+    np.testing.assert_array_equal(again.stack[:, :, 0], merged)
+    np.testing.assert_array_equal(again.stack[:, :, 1], merged)
+    # Round-trip the loaded table through v3: still bit-exact.
+    np.testing.assert_array_equal(
+        DimmTimingTable.from_json(again.to_json()).stack, again.stack
+    )
+
+
+def test_v1_roundtrip_bit_exact(table):
+    import json
+
+    merged = table.stack.max(axis=2)
+    v1 = json.dumps({
+        "temp_bins": list(table.temp_bins),
+        "sets": [[dict(zip(PARAM_NAMES, [float(v) for v in row]))
+                  for row in per_dimm] for per_dimm in merged],
+    })
+    again = DimmTimingTable.from_json(v1)
+    np.testing.assert_array_equal(again.stack[:, :, 0], merged)
+    np.testing.assert_array_equal(again.stack[:, :, 1], merged)
+    np.testing.assert_array_equal(
+        DimmTimingTable.from_json(again.to_json()).stack, again.stack
+    )
+
+
+# ---------------------------------------------------------------------------
+# (d) the untested-tRAS sentinel is refused everywhere
+# ---------------------------------------------------------------------------
+def test_untested_write_tras_is_refused(paper_fleet):
+    """`write_mode_min_timings(tras_mode='untested')` yields a negative
+    sentinel, and every table-building path refuses it — the legacy
+    silent-JEDEC behaviour is unreachable."""
+    sub = paper_fleet.take(slice(0, 3))
+    w = profiler.write_mode_min_timings(sub.cells, 55.0, tras_mode="untested")
+    assert float(w[:, 1].max()) == profiler.WRITE_TRAS_UNTESTED_NS < 0.0
+
+    res = fleet.sweep(sub, temps_c=(55.0,), patterns=(1.0,),
+                      write_tras="untested")
+    with pytest.raises(ValueError, match="untested"):
+        res.write_timings()
+    with pytest.raises(ValueError, match="untested"):
+        res.stacked_timings()
+    with pytest.raises(ValueError, match="untested"):
+        res.merged_timings()
+    with pytest.raises(ValueError, match="untested"):
+        res.to_table()
+    # The read set is unaffected — only the write registers are untested.
+    assert np.asarray(res.read_timings()).min() > 0.0
+
+
+def test_unknown_tras_mode_rejected(paper_fleet):
+    with pytest.raises(ValueError, match="tras_mode"):
+        profiler.write_mode_min_timings(
+            paper_fleet.cells, 55.0, tras_mode="jedec"
+        )

@@ -1,4 +1,5 @@
-"""AL-DRAM controller: binning, hysteresis, fuse, persistence."""
+"""AL-DRAM controller: binning, hysteresis, fuse, persistence — with
+per-access-type register sets (read + write timing set per bin)."""
 
 import json
 
@@ -13,7 +14,12 @@ from repro.core.controller import (
     DimmTimingTable,
     TABLE_SCHEMA_VERSION,
 )
-from repro.core.timing import JEDEC_DDR3_1600, PARAM_NAMES
+from repro.core.timing import (
+    ACCESS_TYPES,
+    JEDEC_ACCESS,
+    JEDEC_DDR3_1600,
+    PARAM_NAMES,
+)
 
 
 def small_table():
@@ -26,13 +32,29 @@ def test_profile_table_monotone_in_temperature():
     table = small_table()
     for per_dimm in table.sets:
         for cold, warm in zip(per_dimm, per_dimm[1:]):
-            for p in ("trcd", "tras", "twr", "trp"):
-                assert getattr(cold, p) <= getattr(warm, p) + 1e-6
+            for access in ACCESS_TYPES:
+                for p in ("trcd", "tras", "twr", "trp"):
+                    assert getattr(cold.by_type(access), p) <= (
+                        getattr(warm.by_type(access), p) + 1e-6
+                    )
+
+
+def test_write_set_is_not_the_read_set():
+    """The whole point of the split: the write register set runs at its own
+    profiled margin — notably tRAS below the read set's (restore under
+    write drive is faster), never the old JEDEC pin."""
+    table = small_table()
+    for per_dimm in table.sets:
+        for entry in per_dimm:
+            assert entry.write.tras <= entry.read.tras + 1e-6
+            assert entry.write.tras < JEDEC_DDR3_1600.tras - 1e-6
 
 
 def test_lookup_beyond_bins_is_jedec():
     table = small_table()
-    assert table.lookup(0, 90.0) == JEDEC_DDR3_1600
+    assert table.lookup(0, 90.0) == JEDEC_ACCESS
+    assert table.lookup(0, 90.0).read == JEDEC_DDR3_1600
+    assert table.lookup(0, 90.0).write == JEDEC_DDR3_1600
 
 
 def test_json_roundtrip():
@@ -48,38 +70,77 @@ def test_json_schema_versioned():
     can keep old registers loadable (and unknown versions fail loudly)."""
     table = small_table()
     obj = json.loads(table.to_json())
-    assert obj["schema_version"] == TABLE_SCHEMA_VERSION
+    assert obj["schema_version"] == TABLE_SCHEMA_VERSION == 3
     assert obj["params"] == list(PARAM_NAMES)
+    assert obj["access_types"] == list(ACCESS_TYPES)
     bad = dict(obj, schema_version=99)
     with pytest.raises(ValueError, match="schema_version"):
         DimmTimingTable.from_json(json.dumps(bad))
     swapped = dict(obj, params=["tras", "trcd", "twr", "trp"])
     with pytest.raises(ValueError, match="parameter order"):
         DimmTimingTable.from_json(json.dumps(swapped))
+    flipped = dict(obj, access_types=["write", "read"])
+    with pytest.raises(ValueError, match="access-type order"):
+        DimmTimingTable.from_json(json.dumps(flipped))
 
 
 def test_json_v1_legacy_format_loads():
-    """PR-1 persisted tables (nested per-DIMM timing dicts, no version
-    field) must keep loading into the array-backed table."""
+    """PR-1 persisted tables (nested per-DIMM merged timing dicts, no
+    version field) must keep loading: the merged set is duplicated into
+    both access slots."""
     table = small_table()
+    merged = table.stack.max(axis=2)  # (N, B, 4) single-set view
     v1 = json.dumps({
         "temp_bins": list(table.temp_bins),
-        "sets": [[s.as_dict() for s in per_dimm] for per_dimm in table.sets],
+        "sets": [[dict(zip(PARAM_NAMES, [float(v) for v in row]))
+                  for row in per_dimm] for per_dimm in merged],
     })
     again = DimmTimingTable.from_json(v1)
-    assert again == table
+    assert again.temp_bins == table.temp_bins
+    assert again.stack.shape == table.stack.shape
+    for a in range(len(ACCESS_TYPES)):
+        np.testing.assert_array_equal(again.stack[:, :, a], merged)
+
+
+def test_json_v2_legacy_format_loads():
+    """PR-2 persisted tables (one merged (N, B, 4) stack, schema v2) load
+    with the merged set duplicated into both access slots, bit-exact."""
+    table = small_table()
+    merged = table.stack.max(axis=2)
+    v2 = json.dumps({
+        "schema_version": 2,
+        "params": list(PARAM_NAMES),
+        "temp_bins": list(table.temp_bins),
+        "stack": merged.tolist(),
+    })
+    again = DimmTimingTable.from_json(v2)
+    assert again.stack.shape == table.stack.shape
+    for a in range(len(ACCESS_TYPES)):
+        np.testing.assert_array_equal(again.stack[:, :, a], merged)
 
 
 def test_table_is_array_backed():
     table = small_table()
     assert isinstance(table.stack, np.ndarray)
-    assert table.stack.shape == (4, 3, 4)
+    assert table.stack.shape == (4, 3, 2, 4)
     assert table.stack.dtype == np.float32
     assert table.n_dimms == 4 and table.n_bins == 3
     # The nested-list view is a faithful projection of the stack.
     assert table.sets[2][1] == table.row(2, 1)
     with pytest.raises(ValueError, match="stack shape"):
         DimmTimingTable(temp_bins=(55.0,), stack=np.zeros((4, 2, 4)))
+    with pytest.raises(ValueError, match="stack shape"):
+        DimmTimingTable(temp_bins=(55.0, 70.0), stack=np.zeros((4, 1, 2, 4)))
+
+
+def test_table_refuses_untested_sentinel():
+    """A negative entry is the profiler's untested sentinel; programming it
+    must be impossible (the guard against the silent tRAS-at-JEDEC bug)."""
+    table = small_table()
+    poisoned = table.stack.copy()
+    poisoned[0, 0, 1, 1] = -1.0  # write-set tRAS "untested"
+    with pytest.raises(ValueError, match="untested"):
+        DimmTimingTable(temp_bins=table.temp_bins, stack=poisoned)
 
 
 def test_lookup_uses_shared_bin_search():
@@ -90,7 +151,7 @@ def test_lookup_uses_shared_bin_search():
     table = small_table()
     for t in (20.0, 55.0, 55.1, 70.0, 84.9, 90.0):
         b = bin_index(table.temp_bins, t)
-        want = table.sets[0][b] if b < table.n_bins else JEDEC_DDR3_1600
+        want = table.sets[0][b] if b < table.n_bins else JEDEC_ACCESS
         assert table.lookup(0, t) == want
     ctl = ALDRAMController(table, guard_band_c=5.0)
     assert ctl._bin_for(49.0) == bin_index(table.temp_bins, 54.0)
@@ -112,7 +173,8 @@ def test_hotter_switches_immediately_cooler_needs_hysteresis():
     ctl.observe(0, 78.0)
     assert ctl.bin_of(0) > cool_bin
     slow = ctl.current(0)
-    assert slow.tras >= fast.tras
+    assert slow.read.tras >= fast.read.tras
+    assert slow.write.tras >= fast.write.tras
     # One cool reading is NOT enough to come back.
     ctl.observe(0, 40.0)
     assert ctl.bin_of(0) > cool_bin
@@ -122,10 +184,10 @@ def test_error_fuses_to_jedec_permanently():
     table = small_table()
     ctl = ALDRAMController(table)
     ctl.report_error(2)
-    assert ctl.current(2) == JEDEC_DDR3_1600
+    assert ctl.current(2) == JEDEC_ACCESS
     for _ in range(20):
         ctl.observe(2, 30.0)
-    assert ctl.current(2) == JEDEC_DDR3_1600
+    assert ctl.current(2) == JEDEC_ACCESS
     assert ctl.fallback_count == 1
 
 
@@ -136,4 +198,4 @@ def test_guard_band_is_conservative():
     for _ in range(12):
         loose.observe(0, 52.0)
         tight.observe(0, 52.0)
-    assert tight.current(0).tras >= loose.current(0).tras
+    assert tight.current(0).read.tras >= loose.current(0).read.tras

@@ -134,11 +134,16 @@ def test_merged_timings_require_guarantee_pattern(paper_fleet):
     with pytest.raises(ValueError, match="guarantee pattern"):
         res.merged_timings()
     with pytest.raises(ValueError, match="guarantee pattern"):
+        res.read_timings()
+    with pytest.raises(ValueError, match="guarantee pattern"):
+        res.stacked_timings()
+    with pytest.raises(ValueError, match="guarantee pattern"):
         res.to_table()
 
 
 def test_controller_table_from_fleet(result, paper_fleet):
-    """DimmTimingTable built from the sweep == per-bin profiler merge."""
+    """DimmTimingTable built from the sweep == the per-bin profilers,
+    each access type at its own profiled margin (no merge)."""
     table = result.to_table()
     assert table.temp_bins == TEMPS
     assert len(table.sets) == paper_fleet.n_dimms
@@ -147,11 +152,24 @@ def test_controller_table_from_fleet(result, paper_fleet):
     for i in (0, 17, 114):
         got = table.sets[i][TEMPS.index(55.0)]
         for p in PARAM_NAMES:
-            want = max(float(read.timings[p][i]), float(write.timings[p][i]))
-            assert getattr(got, p) == pytest.approx(want, abs=1e-5)
+            assert getattr(got.read, p) == pytest.approx(
+                float(read.timings[p][i]), abs=1e-5)
+            assert getattr(got.write, p) == pytest.approx(
+                float(write.timings[p][i]), abs=1e-5)
     # And the sweep-built table is what profile() itself now produces.
     again = DimmTimingTable.profile(paper_fleet.cells, temp_bins=TEMPS)
     assert again.sets == table.sets
+
+
+def test_merged_shim_is_elementwise_max(result):
+    """The deprecated merged view == max over the access-type axis of the
+    stacked sets (a single register file safe for both access types)."""
+    merged = np.asarray(result.merged_timings())
+    stacked = np.asarray(result.stacked_timings())
+    np.testing.assert_allclose(merged, stacked.max(axis=-2), atol=0)
+    # With write tRAS actually profiled, even the merged set now reduces
+    # tRAS below JEDEC in the coolest swept temperature.
+    assert (merged[0, :, 1] < JEDEC_DDR3_1600.tras - 1e-6).all()
 
 
 def test_profile_preserves_exact_bin_edges(paper_fleet):
@@ -171,13 +189,20 @@ def test_profile_preserves_exact_bin_edges(paper_fleet):
 
 
 def test_altune_table_from_fleet(result, paper_fleet, tmp_path):
-    """The TPU-embodiment TimingTable ingests the same sweep directly."""
+    """The TPU-embodiment TimingTable ingests the same sweep directly,
+    one entry per (DIMM, temperature, access type)."""
     table = TimingTable.from_fleet(result, vendor=paper_fleet.vendor)
-    assert len(table.entries) == len(TEMPS) * paper_fleet.n_dimms
-    entry = table.get("dram_timing", "dimm00000", "vendor0", "T55")
-    assert entry is not None
-    assert set(entry["config"]) == set(PARAM_NAMES)
-    assert 0.0 < entry["margin"] < 1.0
+    assert len(table.entries) == len(TEMPS) * paper_fleet.n_dimms * 2
+    for access in ("read", "write"):
+        entry = table.get("dram_timing", "dimm00000", "vendor0", f"T55:{access}")
+        assert entry is not None
+        assert set(entry["config"]) == set(PARAM_NAMES)
+        assert 0.0 < entry["margin"] < 1.0
+    # The write set's own margin exceeds the read set's (tRAS under write
+    # drive restores faster), which the old merged entries could not show.
+    r = table.get("dram_timing", "dimm00000", "vendor0", "T55:read")
+    w = table.get("dram_timing", "dimm00000", "vendor0", "T55:write")
+    assert w["config"]["tras"] <= r["config"]["tras"] + 1e-6
     path = tmp_path / "fleet_table.json"
     table.save(path)
     assert len(TimingTable.load(path).entries) == len(table.entries)

@@ -52,14 +52,15 @@ def _loop_reference(table, params, trace, errors):
         hysteresis_steps=params.hysteresis_steps,
     )
     n_steps, n_dimms = trace.shape
-    rows = np.zeros((n_steps, n_dimms, 4), np.float32)
+    rows = np.zeros((n_steps, n_dimms, 2, 4), np.float32)
     bins = np.zeros((n_steps, n_dimms), np.int32)
     for s in range(n_steps):
         for d in range(n_dimms):
             if errors[s, d]:
                 ctl.report_error(d)
             t = ctl.observe(d, float(trace[s, d]))
-            rows[s, d] = [getattr(t, p) for p in PARAM_NAMES]
+            rows[s, d, 0] = [getattr(t.read, p) for p in PARAM_NAMES]
+            rows[s, d, 1] = [getattr(t.write, p) for p in PARAM_NAMES]
             b = ctl.bin_of(d)
             bins[s, d] = table.n_bins if b is None else b
     return ctl, rows, bins
@@ -140,7 +141,7 @@ def test_above_last_bin_excursion_selects_jedec(table):
                        np.float32)
     assert (np.asarray(res.bin_idx[3]) == table.n_bins).all()
     np.testing.assert_array_equal(np.asarray(res.timings[3]),
-                                  np.broadcast_to(jedec, (N_DIMMS, 4)))
+                                  np.broadcast_to(jedec, (N_DIMMS, 2, 4)))
     # Cool again: after hysteresis_steps calm readings we are back in bin 0.
     assert (np.asarray(res.bin_idx[-1]) == 0).all()
 
@@ -155,7 +156,7 @@ def test_error_fuses_forever_in_replay(table):
     assert not np.asarray(res.fused[:5, 2]).any()
     assert np.asarray(res.fused[5:, 2]).all()
     np.testing.assert_array_equal(np.asarray(res.timings[5:, 2]),
-                                  np.broadcast_to(jedec, (15, 4)))
+                                  np.broadcast_to(jedec, (15, 2, 4)))
     # Other DIMMs are unaffected.
     assert not np.asarray(res.fused[:, [0, 1, 3, 4]]).any()
 
@@ -173,10 +174,11 @@ def test_wrapper_replay_resumes_observe_loop(table):
     for s in range(30, 60):
         for d in range(N_DIMMS):
             t = hybrid.observe(d, float(trace[s, d]))
-            np.testing.assert_array_equal(
-                np.asarray([getattr(t, p) for p in PARAM_NAMES], np.float32),
-                rows_full[s, d],
+            got = np.asarray(
+                [[getattr(t.read, p) for p in PARAM_NAMES],
+                 [getattr(t.write, p) for p in PARAM_NAMES]], np.float32
             )
+            np.testing.assert_array_equal(got, rows_full[s, d])
 
 
 def test_init_state_shapes(table):
@@ -208,10 +210,14 @@ def test_trace_score_consistency(table):
     np.testing.assert_allclose(np.asarray(occ.sum(axis=-1)), 1.0, atol=1e-6)
 
     red = perfmodel.realized_latency_reductions(res.timings)
-    read_sums = np.asarray(res.timings[..., 0] + res.timings[..., 1]
-                           + res.timings[..., 3])
+    read_set = np.asarray(res.timings[..., 0, :])   # access axis: 0 = read
+    read_sums = read_set[..., 0] + read_set[..., 1] + read_set[..., 3]
     want = 1.0 - read_sums.mean(axis=0) / JEDEC_DDR3_1600.read_sum
     np.testing.assert_allclose(np.asarray(red["read"]), want, rtol=1e-5)
+    write_set = np.asarray(res.timings[..., 1, :])
+    write_sums = write_set[..., 0] + write_set[..., 2] + write_set[..., 3]
+    want_w = 1.0 - write_sums.mean(axis=0) / JEDEC_DDR3_1600.write_sum
+    np.testing.assert_allclose(np.asarray(red["write"]), want_w, rtol=1e-5)
 
     score = perfmodel.trace_score(table.stack, res)
     assert score["switches_total"] == res.total_switches
