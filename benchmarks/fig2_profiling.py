@@ -24,10 +24,10 @@ PAPER = {
 TEMPS = (85.0, 55.0)
 
 
-def run(verbose: bool = True):
+def run(verbose: bool = True, impl: str = "ref"):
     cells, vidx = dimm.sample_population(jax.random.PRNGKey(0))
     fl = fleet.from_population(cells, vidx)
-    res = fleet.sweep(fl, temps_c=TEMPS, patterns=(1.0,))
+    res = fleet.sweep(fl, temps_c=TEMPS, patterns=(1.0,), impl=impl)
     rows = []
     for ti, temp in enumerate(TEMPS):
         read = res.read[ti, 0]                      # (N, 4) read-mode minima

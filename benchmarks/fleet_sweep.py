@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core import fleet, perfmodel, profiler
 from repro.core.timing import PARAM_NAMES
+from repro.kernels.charge_sweep import ops as charge_sweep
 
 try:
     from benchmarks._json_out import write_rows_json
@@ -57,6 +58,28 @@ def run(
     jax.block_until_ready(res.read)
     t_fleet = time.perf_counter() - t0
 
+    # -- fused charge-sweep kernel: same sweep through impl="pallas" -------
+    # Off-TPU this runs the kernel in interpret mode (the parity
+    # configuration CI gates on), so the timing shows interpreter overhead
+    # rather than fused-kernel wall-clock; on a TPU backend it compiles for
+    # real. Either way the result must be bit-exact vs the ref sweep.
+    kres = fleet.sweep(fl, temps_c, patterns, impl="pallas")
+    jax.block_until_ready(kres.read)
+    t0 = time.perf_counter()
+    kres = fleet.sweep(fl, temps_c, patterns, impl="pallas")
+    jax.block_until_ready(kres.read)
+    t_kernel = time.perf_counter() - t0
+    kernel_err = max(
+        float(np.abs(np.asarray(kres.read) - np.asarray(res.read)).max()),
+        float(np.abs(np.asarray(kres.write) - np.asarray(res.write)).max()),
+        float(np.abs(np.asarray(kres.joint) - np.asarray(res.joint)).max()),
+    )
+    if kernel_err != 0.0:  # parity is the gate: CI must go red, not just log
+        raise AssertionError(
+            f"charge-sweep kernel diverged from the ref sweep: "
+            f"max|err| = {kernel_err} ns"
+        )
+
     # -- loop baseline: the seed's per-DIMM per-point execution model ------
     n_base = n_dimms if full_baseline else min(baseline_dimms, n_dimms)
     sub = fl.take(slice(0, n_base))
@@ -74,6 +97,7 @@ def run(
         float(np.abs(np.asarray(res.joint[:, :, idx]) - np.asarray(base_res.joint)).max()),
     )
 
+    interp = charge_sweep.default_interpret()
     rows = [
         ("fleet/n_dimms", float(n_dimms), ""),
         ("fleet/grid_points", float(grid_points), ""),
@@ -81,6 +105,14 @@ def run(
         ("fleet/loop_seconds_extrapolated", t_loop, ""),
         ("fleet/speedup_vs_loop", speedup, ">=10"),
         ("fleet/max_abs_error_vs_loop_ns", err, "<=1e-5"),
+        # Kernel-vs-ref section: the fused charge-sweep kernel against the
+        # pure-jnp grid search, same fleet, same grid, bit-exact by gate.
+        ("fleet/kernel_sweep_seconds", t_kernel,
+         "interpret mode" if interp else "compiled"),
+        ("fleet/kernel_vs_ref_time_ratio", t_kernel / t_fleet,
+         "interpreter overhead dominates off-TPU" if interp else ""),
+        ("fleet/kernel_max_abs_error_vs_ref_ns", kernel_err, "==0"),
+        ("fleet/kernel_parity_exact", 1.0 if kernel_err == 0.0 else 0.0, "==1"),
     ]
 
     summary = res.summary()
@@ -112,6 +144,9 @@ def run(
               f"{t_loop_measured:.2f} s for {n_base} DIMMs -> "
               f"{t_loop:.1f} s extrapolated | speedup {speedup:,.0f}x")
         print(f"# max |fleet - loop| = {err:.2e} ns")
+        print(f"# charge-sweep kernel ({'interpret' if interp else 'compiled'}): "
+              f"{t_kernel*1e3:.1f} ms, {t_kernel/t_fleet:.1f}x ref wall-clock, "
+              f"max |kernel - ref| = {kernel_err:.2e} ns (bit-exact gate)")
         for t, per_param in sorted(summary.items()):
             cells = ", ".join(
                 f"{p} {per_param[p][0]*100:.1f}/{per_param[p][1]*100:.1f}/"

@@ -41,6 +41,7 @@ temperatures × 7 patterns characterizes in well under a second on CPU
 
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Dict, NamedTuple, Sequence, Tuple
 
@@ -51,6 +52,7 @@ from jax import Array
 from repro.core import charge, dimm, profiler
 from repro.core.charge import CellParams, ChargeModelConstants, DEFAULT_CONSTANTS
 from repro.core.timing import PARAM_NAMES
+from repro.kernels.charge_sweep import ops as charge_sweep
 
 #: Default characterization temperatures (°C): the paper's operating points
 #: plus the JEDEC qualification corner.
@@ -199,6 +201,15 @@ class SweepResult(NamedTuple):
             mode's requirement. Now that write-mode tRAS is actually
             profiled, even the merged set reduces tRAS below JEDEC — but
             new consumers should take the split sets."""
+        warnings.warn(
+            "SweepResult.merged_timings() is a deprecated compat shim for "
+            "single-register-set consumers: it programs the elementwise max "
+            "of the read/write sets, re-inheriting each parameter's slower-"
+            "mode conservatism. Program the per-access-type sets instead "
+            "(stacked_timings() / read_timings() / write_timings()).",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         return jnp.maximum(self.read_timings(), self.write_timings())
 
     def table_entries(self):
@@ -278,6 +289,58 @@ def _sweep_grid(
     return over_grid(temps_c, patterns)
 
 
+@partial(
+    jax.jit,
+    static_argnames=("window_s", "consts", "write_tras", "interpret"),
+)
+def _sweep_grid_pallas(
+    cells: CellParams,
+    temps_c: Array,
+    patterns: Array,
+    window_s: float,
+    consts: ChargeModelConstants,
+    write_tras: str,
+    interpret: bool,
+) -> Tuple[Array, Array, Array]:
+    """The characterization study routed through the fused charge-sweep
+    kernel: read + write profiles of the ENTIRE (T, P, N) grid in ONE
+    kernel pass (the kernel evaluates all searches per candidate cycle,
+    carrying the per-cell charge-model invariants forward instead of
+    re-deriving them per candidate). Joint mode has no grid search — it
+    stays on the closed-form vmap path, bit-identical to `_sweep_grid`'s.
+    """
+    eff = charge.apply_pattern(
+        CellParams(
+            r=cells.r[None, None, :],
+            c=cells.c[None, None, :],
+            leak=cells.leak[None, None, :],
+        ),
+        patterns[None, :, None],
+    )
+    read, write = charge_sweep.sweep_min_timings(
+        eff, temps_c[:, None, None], window_s, consts,
+        impl="pallas", interpret=interpret,
+    )
+    if write_tras == "untested":
+        write = jnp.concatenate(
+            [
+                write[..., :1],
+                jnp.full_like(write[..., 1:2], profiler.WRITE_TRAS_UNTESTED_NS),
+                write[..., 2:],
+            ],
+            axis=-1,
+        )
+
+    def at_point(t: Array, p: Array) -> Array:
+        del p  # joint mode is pattern-independent; broadcast like _sweep_grid
+        return profiler.joint_min_timings(cells, t, 1.0, window_s, consts)
+
+    joint = jax.vmap(
+        jax.vmap(at_point, in_axes=(None, 0)), in_axes=(0, None)
+    )(temps_c, patterns)
+    return read, write, joint
+
+
 def sweep(
     fleet: Fleet | CellParams,
     temps_c: Sequence[float] = DEFAULT_TEMPS_C,
@@ -285,6 +348,8 @@ def sweep(
     window_s: float = charge.REFRESH_WINDOW_S,
     consts: ChargeModelConstants = DEFAULT_CONSTANTS,
     write_tras: str = "profiled",
+    impl: str = "ref",
+    interpret: bool | None = None,
 ) -> SweepResult:
     """Characterize a whole fleet in one jitted (vmap × vmap) call.
 
@@ -295,11 +360,36 @@ def sweep(
     through to :func:`repro.core.profiler.write_mode_min_timings`
     (``"untested"`` fills the write tRAS column with the refused sentinel —
     for tests of the refusal path, never for real tables).
+
+    ``impl="pallas"`` runs the read/write grid searches through the fused
+    charge-sweep kernel (:mod:`repro.kernels.charge_sweep`) — one kernel
+    pass for the whole (DIMM × temperature × pattern) grid, property-
+    tested bit-exact against the ``"ref"`` path and golden-gated against
+    the committed benchmark baselines. ``interpret`` forces/disables the
+    kernel's interpret mode (default: interpret everywhere but TPU).
+    Default stays ``"ref"`` until the parity gates have soaked.
     """
+    if write_tras not in profiler.WRITE_TRAS_MODES:
+        raise ValueError(
+            f"write_tras must be one of {profiler.WRITE_TRAS_MODES}, "
+            f"got {write_tras!r}"
+        )
+    if impl not in charge_sweep.IMPLS:
+        raise ValueError(
+            f"impl must be one of {charge_sweep.IMPLS}, got {impl!r}"
+        )
     cells = fleet.cells if isinstance(fleet, Fleet) else fleet
     t = jnp.asarray(temps_c, jnp.float32)
     p = jnp.asarray(patterns, jnp.float32)
-    read, write, joint = _sweep_grid(cells, t, p, float(window_s), consts, write_tras)
+    if impl == "pallas":
+        read, write, joint = _sweep_grid_pallas(
+            cells, t, p, float(window_s), consts, write_tras,
+            charge_sweep.default_interpret() if interpret is None else interpret,
+        )
+    else:
+        read, write, joint = _sweep_grid(
+            cells, t, p, float(window_s), consts, write_tras
+        )
     return SweepResult(
         temps_c=t, patterns=p, read=read, write=write, joint=joint,
         temps_exact=tuple(float(x) for x in temps_c),

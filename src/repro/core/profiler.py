@@ -28,12 +28,22 @@ with no Python data structures in the traced path. ``profile_*`` are thin
 dict-building wrappers kept for the single-(temp, pattern) API; the fleet
 engine (:mod:`repro.core.fleet`) vmaps the pure functions over the whole
 (DIMM × temperature × pattern) grid in one jitted call.
+
+**Kernel dispatch** (charge-sweep kernel): grid construction and the
+first-True-on-the-grid semantics live in
+:mod:`repro.kernels.charge_sweep.ref` (this module re-exports ``_grid`` /
+``_min_safe_on_grid`` as thin aliases), and the two grid-search functions
+take ``impl="ref"|"pallas"``: ``"ref"`` is the pure-jnp full-model search
+below, ``"pallas"`` routes through the fused one-pass kernel
+(:mod:`repro.kernels.charge_sweep.ops`, interpret mode off-TPU) which is
+property-tested bit-exact against it. Default stays ``"ref"`` until the
+parity gates have soaked; flipping the default is a one-line follow-up.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Mapping, Tuple
+from typing import Dict, Mapping, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +57,9 @@ from repro.core.timing import (
     TCK_DDR3_1600_NS,
     TimingParams,
 )
+from repro.kernels.charge_sweep import ops as charge_sweep
+from repro.kernels.charge_sweep import ref as charge_sweep_ref
+from repro.kernels.charge_sweep.ops import IMPLS
 
 #: Test data patterns, as effective-margin multipliers (1.0 = worst-case
 #: coupling pattern — the one all safety claims are made against).
@@ -77,27 +90,11 @@ class ProfileResult:
         return {k: (float(v.min()), float(v.max())) for k, v in self.reductions.items()}
 
 
-def _grid(param: str, tck: float = TCK_DDR3_1600_NS) -> Array:
-    """All candidate cycle-quantized values from 1 cycle up to JEDEC."""
-    jedec = getattr(JEDEC_DDR3_1600, param)
-    n = int(round(jedec / tck + 0.5))
-    return jnp.arange(1, n + 1, dtype=jnp.float32) * tck
-
-
-def _min_safe_on_grid(ok_at: Callable[[Array], Array], grid: Array) -> Array:
-    """Smallest grid value for which ``ok_at`` holds for each DIMM.
-
-    ``ok_at(t)`` maps a scalar candidate to a (n_dimms,) bool. Correctness
-    predicates are monotone in each timing, so the first passing grid point
-    is the minimum — exactly the paper's reduce-until-error methodology
-    (run in the safe direction).
-    """
-    ok = jax.vmap(ok_at)(grid)                      # (n_grid, n_dimms)
-    # First True along the grid axis; all-False falls back to JEDEC (last).
-    idx = jnp.argmax(ok, axis=0)
-    none_ok = ~ok.any(axis=0)
-    idx = jnp.where(none_ok, grid.shape[0] - 1, idx)
-    return grid[idx]
+# Grid construction and first-True-on-the-grid live in the kernel package
+# now (shared with the fused Pallas kernel); these aliases keep the
+# profiler's historical private API importable.
+_grid = charge_sweep_ref.param_grid
+_min_safe_on_grid = charge_sweep_ref.min_safe_on_grid
 
 
 # ---------------------------------------------------------------------------
@@ -115,37 +112,36 @@ def individual_min_timings(
     pattern: Array | float = 1.0,
     window_s: float = charge.REFRESH_WINDOW_S,
     consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+    *,
+    impl: str = "ref",
 ) -> Array:
     """Per-parameter minimal safe timings, others held at JEDEC (§1.5).
 
     Pure: returns a ``(n_dimms, 4)`` stack (``PARAM_NAMES`` order, ns,
     cycle-quantized). ``temp_c`` / ``pattern`` may be tracers — the fleet
     engine vmaps this over the (temperature × pattern) grid.
+
+    ``impl="pallas"`` runs the fused charge-sweep kernel instead of the
+    per-candidate full-model search (bit-exact; see
+    :mod:`repro.kernels.charge_sweep`). Note the kernel computes both
+    access modes in one pass — batch callers wanting both stacks should
+    use :func:`repro.kernels.charge_sweep.ops.sweep_min_timings` (as
+    ``fleet.sweep`` does) rather than paying two invocations.
     """
     eff = charge.apply_pattern(cells, pattern)
-    base = JEDEC_DDR3_1600
-
-    def ok_trcd(t: Array) -> Array:
-        return charge.read_ok(
-            eff, TimingParams(t, base.tras, base.twr, base.trp), temp_c, window_s, consts
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    if impl == "pallas":
+        read, _ = charge_sweep.sweep_min_timings(
+            eff, temp_c, window_s, consts, impl="pallas"
         )
-
-    def ok_tras(t: Array) -> Array:
-        return charge.read_ok(
-            eff, TimingParams(base.trcd, t, base.twr, base.trp), temp_c, window_s, consts
-        )
-
-    def ok_twr(t: Array) -> Array:
-        return charge.write_ok(
-            eff, TimingParams(base.trcd, base.tras, t, base.trp), temp_c, window_s, consts
-        )
-
-    def ok_trp(t: Array) -> Array:
-        return charge.read_ok(
-            eff, TimingParams(base.trcd, base.tras, base.twr, t), temp_c, window_s, consts
-        )
-
-    searchers = {"trcd": ok_trcd, "tras": ok_tras, "twr": ok_twr, "trp": ok_trp}
+        return read
+    searchers = {
+        "trcd": charge_sweep_ref.read_ok_at(eff, "trcd", temp_c, window_s, consts),
+        "tras": charge_sweep_ref.read_ok_at(eff, "tras", temp_c, window_s, consts),
+        "twr": charge_sweep_ref.write_ok_at(eff, "twr", temp_c, window_s, consts),
+        "trp": charge_sweep_ref.read_ok_at(eff, "trp", temp_c, window_s, consts),
+    }
     return jnp.stack(
         [_min_safe_on_grid(searchers[p], _grid(p)) for p in PARAM_NAMES], axis=-1
     )
@@ -169,6 +165,8 @@ def write_mode_min_timings(
     window_s: float = charge.REFRESH_WINDOW_S,
     consts: ChargeModelConstants = DEFAULT_CONSTANTS,
     tras_mode: str = "profiled",
+    *,
+    impl: str = "ref",
 ) -> Array:
     """Write-test minimal timings for all four parameters (Fig. 2b).
 
@@ -178,25 +176,29 @@ def write_mode_min_timings(
     ``tras_mode="untested"`` reproduces the legacy situation *explicitly*:
     the tRAS column is filled with :data:`WRITE_TRAS_UNTESTED_NS`, a
     negative sentinel that every table builder refuses — it can no longer
-    silently masquerade as a JEDEC requirement."""
+    silently masquerade as a JEDEC requirement. ``impl="pallas"`` runs the
+    fused charge-sweep kernel (bit-exact; the sentinel substitution
+    happens after profiling in either impl)."""
     if tras_mode not in WRITE_TRAS_MODES:
         raise ValueError(
             f"tras_mode must be one of {WRITE_TRAS_MODES}, got {tras_mode!r}"
         )
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
     eff = charge.apply_pattern(cells, pattern)
-    base = JEDEC_DDR3_1600
-
-    def ok(param: str) -> Callable[[Array], Array]:
-        def f(t: Array) -> Array:
-            kw = {p: getattr(base, p) for p in PARAM_NAMES}
-            kw[param] = t
-            return charge.write_ok(eff, TimingParams(**kw), temp_c, window_s, consts)
-
-        return f
-
-    cols = {
-        p: _min_safe_on_grid(ok(p), _grid(p)) for p in ("trcd", "tras", "twr", "trp")
-    }
+    if impl == "pallas":
+        _, write = charge_sweep.sweep_min_timings(
+            eff, temp_c, window_s, consts, impl="pallas"
+        )
+        cols = {p: write[..., i] for i, p in enumerate(PARAM_NAMES)}
+    else:
+        cols = {
+            p: _min_safe_on_grid(
+                charge_sweep_ref.write_ok_at(eff, p, temp_c, window_s, consts),
+                _grid(p),
+            )
+            for p in ("trcd", "tras", "twr", "trp")
+        }
     if tras_mode == "untested":
         cols["tras"] = jnp.broadcast_to(
             jnp.asarray(WRITE_TRAS_UNTESTED_NS, jnp.float32), cells.r.shape

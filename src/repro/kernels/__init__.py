@@ -1,3 +1,29 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Custom-kernel layer. One package per compute hot-spot, three files each:
+#
+#   <name>/kernel.py  the Pallas TPU kernel itself (pallas_call + body).
+#                     Docstring explains the fusion/layout insight and any
+#                     numerics contract (e.g. charge_sweep's bit-exactness
+#                     argument for WHY a cheaper recurrence was rejected).
+#   <name>/ref.py     the pure-jnp oracle. Not a toy: it is the semantics
+#                     definition the kernel is tested against, and shares
+#                     any constructions both paths must agree on (e.g. the
+#                     charge-sweep timing grids live ONLY in its ref.py).
+#   <name>/ops.py     the public entry point: jit-able wrapper that pads /
+#                     reshapes to tile boundaries, precomputes kernel
+#                     inputs, and (for dispatch-style packages) selects
+#                     impl="ref"|"pallas" with interpret=None auto-sensing
+#                     the backend (interpret mode everywhere but TPU).
+#
+# Testing convention — interpret-mode parity: every kernel gets a test
+# module that runs the kernel with interpret=True against ref.py on CPU,
+# so tier-1 exercises the exact kernel body on every backend. Elementwise
+# math kernels assert a dtype-scaled tolerance (tests/test_kernels.py);
+# decision kernels (index/argmin emitting, like charge_sweep) must be
+# BIT-EXACT — property-test them on random inputs plus the boundary cases
+# (tests/test_charge_sweep_kernel.py: eps-threshold corner cell, above-
+# grid fallback, sentinel substitution) and golden-gate them against the
+# committed benchmark baselines before flipping any impl default.
+#
+# Next kernel (ROADMAP): sharded replay — follow this layout; its ref is
+# repro.core.controller.replay and its parity gate is tests/test_replay.py
+# style bit-exactness over the scan.

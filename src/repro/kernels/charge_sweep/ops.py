@@ -1,0 +1,225 @@
+"""Dispatch + invariant precompute for the fused charge-sweep kernel.
+
+``sweep_min_indices`` / ``sweep_min_timings`` take effective cell
+parameters (data pattern already applied), a temperature and keyword
+config, and return both access-mode stacks at once — the kernel evaluates
+all seven searches in its single pass over the timing grid, so read-mode
+and write-mode profiles cost ONE invocation (the fleet engine's hot
+path). ``impl`` selects the execution path:
+
+* ``"ref"`` — the pure-jnp full-model grid search (:mod:`.ref`).
+* ``"pallas"`` — invariant hoisting + the fused kernel (:mod:`.kernel`).
+  ``interpret=None`` auto-selects interpret mode off-TPU, so CPU CI and
+  tier-1 exercise the very same kernel body that compiles for TPU.
+
+The invariants are computed with the *same* :mod:`repro.core.charge`
+functions the forward predicates call, then broadcast, flattened and
+padded to (8 × 128)-cell tiles. Padding cells carry benign invariants
+(1.0) and zero masks; their outputs are sliced away before returning.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core import charge
+from repro.core.charge import CellParams, ChargeModelConstants, DEFAULT_CONSTANTS
+from repro.core.timing import JEDEC_DDR3_1600, TCK_DDR3_1600_NS
+from repro.kernels.charge_sweep import ref
+from repro.kernels.charge_sweep.kernel import (
+    CELLS_PER_TILE,
+    N_INVARIANTS,
+    SweepScalars,
+    charge_sweep_tiled,
+)
+
+#: Accepted implementations for every ``impl=`` switch along the sweep
+#: path (here, :mod:`repro.core.profiler`, :func:`repro.core.fleet.sweep`).
+IMPLS: Tuple[str, str] = ("ref", "pallas")
+
+
+class SweepIndices(NamedTuple):
+    """Min-safe grid indices per access mode, columns in ``PARAM_NAMES``
+    order. ``read[..., 2] == write[..., 2]`` — tWR is the shared write-test
+    search."""
+
+    read: Array    # (..., 4) int32
+    write: Array   # (..., 4) int32
+
+
+def default_interpret() -> bool:
+    """Interpret mode everywhere except a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def kernel_scalars(consts: ChargeModelConstants = DEFAULT_CONSTANTS) -> SweepScalars:
+    """Fold the Python-scalar constants exactly as the forward predicates
+    fold them (same expressions ⇒ same f32 values at trace time)."""
+    return SweepScalars(
+        tck=TCK_DDR3_1600_NS,
+        ovh_rcd=consts.ovh_rcd,
+        ovh_ras=consts.ovh_ras,
+        ovh_wr=consts.ovh_wr,
+        ovh_rp=consts.ovh_rp,
+        thr_sense=consts.v_sense_target * (1.0 - charge._EPS),
+        one_minus_vrs=1.0 - consts.v_restore_start,
+        v_half=consts.v_half_swing,
+        v_over=consts.v_overdrive,
+        v_over_minus_vrs=consts.v_overdrive - consts.v_restore_start,
+    )
+
+
+def cell_invariants(
+    cells_eff: CellParams,
+    temp_c: Array | float,
+    window_s: float = charge.REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Tuple[Array, ...]:
+    """The per-cell quantities the grid loop carries forward, in
+    :data:`.kernel.INVARIANT_NAMES` order (each broadcastable to the
+    common (cells × temperature) shape).
+
+    Every line mirrors the corresponding expression inside
+    ``charge.read_ok`` / ``charge.write_ok`` — hoisted, not refactored —
+    so the kernel's per-candidate arithmetic is bit-identical to the ref
+    path's. The ``m_*`` masks pre-AND the three JEDEC-held parameters'
+    pass/fail per search: in the ref every candidate re-checks them; here
+    they are one bit per (cell, search).
+    """
+    eps = charge._EPS
+    base = JEDEC_DDR3_1600
+
+    dv0_r = charge.sense_dv0(cells_eff, temp_c, consts.v_full, window_s, consts)
+    rts = cells_eff.r * consts.tau_sa
+    t_sense_r = charge.sense_time(cells_eff, dv0_r, consts)
+    v_tgt = charge.restore_target(cells_eff, temp_c, window_s, consts)
+    thr_rest = v_tgt * (1.0 - eps)
+    rtr = cells_eff.r * consts.tau_restore
+    rtb = cells_eff.r * consts.tau_bl
+    delta_ok = jnp.minimum(
+        charge.tolerable_residual(cells_eff, temp_c, consts),
+        0.4 * consts.v_half_swing,
+    )
+    thr_trp = delta_ok * (1.0 + eps)
+    tau_wr = cells_eff.r * consts.tau_write * charge.drive_factor(temp_c, consts)
+    dv0_w = charge._wm_dv0(cells_eff, temp_c, window_s, consts)
+    t_sense_w = charge.sense_time(cells_eff, dv0_w, consts)
+    thr_trcd_w = charge.min_trcd_write(cells_eff, temp_c, window_s, consts) * (1.0 - eps)
+    thr_trp_w = charge.min_trp_write(cells_eff, temp_c, window_s, consts) * (1.0 - eps)
+
+    # Fixed-parameter components at JEDEC (the Python-float arithmetic on
+    # JEDEC/overhead constants folds in f64 exactly as in the predicates).
+    sense_r_j = dv0_r * jnp.exp((base.trcd - consts.ovh_rcd) / rts) >= \
+        consts.v_sense_target * (1.0 - eps)
+    rest_r_j = 1.0 - (1.0 - consts.v_restore_start) * jnp.exp(
+        -jnp.maximum(base.tras - consts.ovh_ras - t_sense_r, 0.0) / rtr
+    ) >= thr_rest
+    prech_r_j = consts.v_half_swing * jnp.exp(
+        -(base.trp - consts.ovh_rp) / rtb
+    ) <= thr_trp
+    wr_j = consts.v_overdrive * (
+        1.0 - jnp.exp(-(base.twr - consts.ovh_wr) / tau_wr)
+    ) >= thr_rest
+    tras_w_j = consts.v_overdrive - (
+        consts.v_overdrive - consts.v_restore_start
+    ) * jnp.exp(
+        -jnp.maximum(base.tras - consts.ovh_ras - t_sense_w, 0.0) / tau_wr
+    ) >= thr_rest
+    trcd_w_j = base.trcd >= thr_trcd_w
+    trp_w_j = base.trp >= thr_trp_w
+
+    def m(*bits: Array) -> Array:
+        out = bits[0]
+        for b in bits[1:]:
+            out = out & b
+        return out.astype(jnp.float32)
+
+    return (
+        dv0_r, rts, t_sense_r, thr_rest, rtr, rtb, thr_trp, tau_wr,
+        t_sense_w, thr_trcd_w, thr_trp_w,
+        m(rest_r_j, prech_r_j),            # m_r_trcd
+        m(sense_r_j, prech_r_j),           # m_r_tras
+        m(sense_r_j, rest_r_j),            # m_r_trp
+        m(wr_j, tras_w_j, trp_w_j),        # m_w_trcd
+        m(wr_j, trcd_w_j, trp_w_j),        # m_w_tras
+        m(tras_w_j, trcd_w_j, trp_w_j),    # m_w_twr
+        m(wr_j, tras_w_j, trcd_w_j),       # m_w_trp
+    )
+
+
+def _pallas_search_indices(
+    cells_eff: CellParams,
+    temp_c: Array | float,
+    window_s: float,
+    consts: ChargeModelConstants,
+    interpret: bool,
+) -> Array:
+    """All seven searches via the fused kernel: (…, 7) int32 indices."""
+    inv = cell_invariants(cells_eff, temp_c, window_s, consts)
+    shape = jnp.broadcast_shapes(*(jnp.shape(a) for a in inv))
+    n_cells = 1
+    for d in shape:
+        n_cells *= d
+    flat = jnp.stack(
+        [jnp.broadcast_to(a, shape).reshape(n_cells) for a in inv], axis=0
+    )
+    pad = (-n_cells) % CELLS_PER_TILE
+    if pad:
+        # Benign padding: unit invariants (no 0-divisors), zero masks.
+        lane = jnp.ones((N_INVARIANTS, pad), flat.dtype)
+        flat = jnp.concatenate([flat, lane.at[11:].set(0.0)], axis=1)
+    tiled = flat.reshape(N_INVARIANTS, -1, 128)
+    idx = charge_sweep_tiled(
+        tiled,
+        n_grid=ref.SEARCH_GRID_SIZES,
+        scal=kernel_scalars(consts),
+        interpret=interpret,
+    )
+    return jnp.moveaxis(idx.reshape(len(ref.SEARCH_NAMES), -1)[:, :n_cells], 0, -1) \
+        .reshape(*shape, len(ref.SEARCH_NAMES))
+
+
+def sweep_min_indices(
+    cells_eff: CellParams,
+    temp_c: Array | float,
+    window_s: float = charge.REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+    impl: str = "pallas",
+    interpret: bool | None = None,
+) -> SweepIndices:
+    """Min-safe grid indices for BOTH access modes in one pass.
+
+    ``cells_eff`` must carry the data-pattern factor already
+    (:func:`repro.core.charge.apply_pattern`); its leaves, ``temp_c`` and
+    any pattern axis broadcast together — the fleet engine passes the
+    whole (T, P, N) characterization grid as one call."""
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    if impl == "ref":
+        s = ref.search_min_indices(cells_eff, temp_c, window_s, consts)
+    else:
+        s = _pallas_search_indices(
+            cells_eff, temp_c, window_s, consts,
+            default_interpret() if interpret is None else interpret,
+        )
+    return SweepIndices(
+        read=s[..., jnp.asarray(ref.READ_STACK_SEARCHES)],
+        write=s[..., jnp.asarray(ref.WRITE_STACK_SEARCHES)],
+    )
+
+
+def sweep_min_timings(
+    cells_eff: CellParams,
+    temp_c: Array | float,
+    window_s: float = charge.REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+    impl: str = "pallas",
+    interpret: bool | None = None,
+) -> Tuple[Array, Array]:
+    """Both (…, 4) ns timing stacks (read-mode, write-mode) in one pass."""
+    idx = sweep_min_indices(cells_eff, temp_c, window_s, consts, impl, interpret)
+    return ref.indices_to_ns(idx.read), ref.indices_to_ns(idx.write)

@@ -1,0 +1,162 @@
+"""Pure-jnp reference for the charge-sweep grid search.
+
+This is the profiler's original execution model — ``_min_safe_on_grid``
+over the *forward* correctness predicates ``charge.read_ok`` /
+``charge.write_ok`` — factored out of :mod:`repro.core.profiler` so the
+fused Pallas kernel (:mod:`.kernel`), the dispatcher (:mod:`.ops`) and the
+profiler all share ONE grid construction and one first-True semantics.
+Per candidate timing it re-evaluates the full exponential charge model,
+which is exactly the redundancy the kernel removes; it remains the oracle
+the kernel is property-tested bit-exact against (tests/
+test_charge_sweep_kernel.py), because every accepted behaviour — the
+monotone first-True index, the all-False fall-back to the last grid point
+(JEDEC pin), the eps-sloped threshold comparisons — is defined HERE.
+
+The searched quantity is the min-safe grid *index* per (cell, parameter):
+the seven distinct searches are the three read-mode parameters (tRCD /
+tRAS / tRP under ``read_ok``, others at JEDEC) and all four write-mode
+parameters (under ``write_ok``); the paper's "individual" read stack takes
+its tWR column from the write test, so the two public (…, 4) stacks share
+that search.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core import charge
+from repro.core.charge import CellParams, ChargeModelConstants, DEFAULT_CONSTANTS
+from repro.core.timing import (
+    JEDEC_DDR3_1600,
+    PARAM_NAMES,
+    TCK_DDR3_1600_NS,
+    TimingParams,
+)
+
+#: The seven distinct grid searches, in kernel-output order. ``r_*`` run
+#: under ``read_ok`` (others at JEDEC), ``w_*`` under ``write_ok``.
+SEARCH_NAMES: Tuple[str, ...] = (
+    "r_trcd", "r_tras", "r_trp", "w_trcd", "w_tras", "w_twr", "w_trp"
+)
+
+#: Column order of the two public stacks, as kernel-output indices:
+#: the read stack is (r_trcd, r_tras, w_twr, r_trp) — tWR comes from the
+#: write test even in the paper's "individual" read-mode numbers.
+READ_STACK_SEARCHES: Tuple[int, int, int, int] = (0, 1, 5, 2)
+WRITE_STACK_SEARCHES: Tuple[int, int, int, int] = (3, 4, 5, 6)
+
+
+# ---------------------------------------------------------------------------
+# Grid construction (shared by ref, kernel and profiler)
+# ---------------------------------------------------------------------------
+def grid_size(param: str, tck: float = TCK_DDR3_1600_NS) -> int:
+    """Number of candidate cycle-quantized values from 1 cycle up to JEDEC."""
+    jedec = getattr(JEDEC_DDR3_1600, param)
+    return int(round(jedec / tck + 0.5))
+
+
+def param_grid(param: str, tck: float = TCK_DDR3_1600_NS) -> Array:
+    """All candidate values (ns) for one parameter, ascending."""
+    return jnp.arange(1, grid_size(param, tck) + 1, dtype=jnp.float32) * tck
+
+
+#: Grid lengths per parameter at the DDR3-1600 clock.
+GRID_SIZES: Dict[str, int] = {p: grid_size(p) for p in PARAM_NAMES}
+
+#: Grid length per search (searches inherit their parameter's grid).
+SEARCH_GRID_SIZES: Tuple[int, ...] = tuple(
+    GRID_SIZES[name.split("_", 1)[1]] for name in SEARCH_NAMES
+)
+
+
+def first_true_index(ok: Array) -> Array:
+    """First True along axis 0 of a (n_grid, ...) bool stack, as int32.
+
+    Correctness predicates are monotone in each timing, so the first
+    passing grid point is the minimum safe value. All-False columns fall
+    back to the LAST grid index — the above-grid case where even JEDEC
+    fails the model's threshold (e.g. beyond the 85 °C qualification
+    corner) pins to the most conservative programmable value.
+    """
+    idx = jnp.argmax(ok, axis=0)
+    none_ok = ~ok.any(axis=0)
+    return jnp.where(none_ok, ok.shape[0] - 1, idx).astype(jnp.int32)
+
+
+def min_safe_index_on_grid(ok_at: Callable[[Array], Array], grid: Array) -> Array:
+    """Index of the smallest grid value for which ``ok_at`` holds."""
+    return first_true_index(jax.vmap(ok_at)(grid))
+
+
+def min_safe_on_grid(ok_at: Callable[[Array], Array], grid: Array) -> Array:
+    """Smallest grid value for which ``ok_at`` holds (ns)."""
+    return grid[min_safe_index_on_grid(ok_at, grid)]
+
+
+def indices_to_ns(idx: Array) -> Array:
+    """Map a (…, 4) index stack (``PARAM_NAMES`` column order) to grid ns."""
+    return jnp.stack(
+        [param_grid(p)[idx[..., i]] for i, p in enumerate(PARAM_NAMES)], axis=-1
+    )
+
+
+# ---------------------------------------------------------------------------
+# The reference searches (full-model re-evaluation per candidate)
+# ---------------------------------------------------------------------------
+def read_ok_at(
+    cells_eff: CellParams,
+    param: str,
+    temp_c: Array | float,
+    window_s: float = charge.REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Callable[[Array], Array]:
+    """``ok_at(t)`` for a read-mode search of ``param``, others at JEDEC."""
+    base = JEDEC_DDR3_1600
+
+    def f(t: Array) -> Array:
+        kw = {p: getattr(base, p) for p in PARAM_NAMES}
+        kw[param] = t
+        return charge.read_ok(cells_eff, TimingParams(**kw), temp_c, window_s, consts)
+
+    return f
+
+
+def write_ok_at(
+    cells_eff: CellParams,
+    param: str,
+    temp_c: Array | float,
+    window_s: float = charge.REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Callable[[Array], Array]:
+    """``ok_at(t)`` for a write-mode search of ``param``, others at JEDEC."""
+    base = JEDEC_DDR3_1600
+
+    def f(t: Array) -> Array:
+        kw = {p: getattr(base, p) for p in PARAM_NAMES}
+        kw[param] = t
+        return charge.write_ok(cells_eff, TimingParams(**kw), temp_c, window_s, consts)
+
+    return f
+
+
+def search_min_indices(
+    cells_eff: CellParams,
+    temp_c: Array | float,
+    window_s: float = charge.REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Array:
+    """All seven searches as one (…, 7) int32 index stack (``SEARCH_NAMES``
+    order). ``cells_eff`` carries any data-pattern factor already applied
+    (:func:`repro.core.charge.apply_pattern`); leading axes broadcast."""
+    cols = []
+    for name in SEARCH_NAMES:
+        mode, param = name.split("_", 1)
+        ok_at = (read_ok_at if mode == "r" else write_ok_at)(
+            cells_eff, param, temp_c, window_s, consts
+        )
+        cols.append(min_safe_index_on_grid(ok_at, param_grid(param)))
+    return jnp.stack(cols, axis=-1)

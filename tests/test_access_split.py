@@ -173,6 +173,27 @@ def test_v1_roundtrip_bit_exact(table):
 
 
 # ---------------------------------------------------------------------------
+# The merged_timings deprecation shim cannot silently rot
+# ---------------------------------------------------------------------------
+def test_merged_timings_warns_and_is_elementwise_max(result):
+    """The PR 3 compat shim stays honest: it must WARN (so remaining
+    single-register-set consumers surface in logs, not in silently-
+    conservative tables) and must still equal the elementwise max of the
+    split sets — the documented merge semantics."""
+    with pytest.warns(DeprecationWarning, match="merged_timings"):
+        merged = np.asarray(result.merged_timings())
+    np.testing.assert_array_equal(
+        merged,
+        np.maximum(
+            np.asarray(result.read_timings()), np.asarray(result.write_timings())
+        ),
+    )
+    # The shim is shape-compatible with a pre-split consumer: one (T, N, 4)
+    # set, never the access-type-stacked (T, N, 2, 4) layout.
+    assert merged.shape == np.asarray(result.read_timings()).shape
+
+
+# ---------------------------------------------------------------------------
 # (d) the untested-tRAS sentinel is refused everywhere
 # ---------------------------------------------------------------------------
 def test_untested_write_tras_is_refused(paper_fleet):

@@ -1,0 +1,275 @@
+"""Charge-sweep kernel: interpret-mode parity + golden regression gates.
+
+The fused Pallas kernel (repro/kernels/charge_sweep) must be *bit-exact*
+against the pure-jnp reference grid search — same min-safe grid INDEX per
+(cell, parameter) for all four timing parameters, in BOTH access modes.
+The property tests drive random cells / temperatures / data patterns
+through both paths (kernel in interpret mode, so this holds on every
+backend tier-1 runs on), including:
+
+* above-grid cells (temperatures beyond the 85 °C qualification corner,
+  where even JEDEC fails the model's threshold and the search pins to the
+  last grid point), and
+* the ``WRITE_TRAS_UNTESTED_NS`` sentinel path (substituted after
+  profiling, identically in either impl, and refused by table builders).
+
+The golden tests pin the kernel to the repo's committed results: a
+``fleet.sweep(impl="pallas")`` must reproduce the
+``benchmarks/baselines/trace_eval_tiny.json`` regression numbers and emit
+byte-identical Fig. 2 CSV rows — so flipping the default impl in a
+follow-up PR cannot move any gated result.
+"""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import charge, controller, dimm, fleet, perfmodel, profiler, traces
+from repro.core.charge import CellParams, DEFAULT_CONSTANTS
+from repro.core.timing import JEDEC_DDR3_1600, PARAM_NAMES, TCK_DDR3_1600_NS
+from repro.kernels.charge_sweep import ops, ref
+from repro.kernels.charge_sweep.kernel import INVARIANT_NAMES, N_INVARIANTS
+
+BASELINES = pathlib.Path(__file__).resolve().parents[1] / "benchmarks" / "baselines"
+
+#: Process-corner box the random cells are drawn from: slightly WIDER than
+#: the vendor-screened population (repro.core.dimm), so the parity property
+#: also covers unscreened silicon near (and at) the JEDEC corner.
+R_RANGE = (1.0, DEFAULT_CONSTANTS.r_max)
+C_RANGE = (DEFAULT_CONSTANTS.c_min, 1.0)
+LEAK_RANGE = (0.4, 1.0)
+
+
+def random_cells(seed: int, n: int = 16) -> CellParams:
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return CellParams(
+        r=jax.random.uniform(ks[0], (n,), jnp.float32, *R_RANGE),
+        c=jax.random.uniform(ks[1], (n,), jnp.float32, *C_RANGE),
+        leak=jax.random.uniform(ks[2], (n,), jnp.float32, *LEAK_RANGE),
+    )
+
+
+def assert_index_parity(cells: CellParams, temp_c, pattern=1.0) -> ops.SweepIndices:
+    """Kernel (interpret) and ref must agree bit-exactly on min-safe grid
+    indices for all 4 params × both access modes; returns the indices."""
+    eff = charge.apply_pattern(cells, pattern)
+    r = ops.sweep_min_indices(eff, temp_c, impl="ref")
+    k = ops.sweep_min_indices(eff, temp_c, impl="pallas", interpret=True)
+    for mode in ("read", "write"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(k, mode)), np.asarray(getattr(r, mode)),
+            err_msg=f"{mode}-mode min-safe index mismatch "
+                    f"(temp={temp_c}, pattern={pattern})",
+        )
+    return k
+
+
+# ---------------------------------------------------------------------------
+# Parity properties (interpret mode ⇒ runs on every backend)
+# ---------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(
+    st.integers(0, 2**31 - 1),
+    st.floats(25.0, 95.0),
+    st.sampled_from(sorted(set(profiler.PATTERNS.values()))),
+)
+def test_kernel_matches_ref_bit_exact(seed, temp, pattern):
+    assert_index_parity(random_cells(seed), temp, pattern)
+
+
+def test_parity_at_paper_population_and_temps():
+    """The committed 115-DIMM population at the paper's operating points —
+    the exact inputs every benchmark and golden number flows from."""
+    cells, _ = dimm.sample_population(jax.random.PRNGKey(0))
+    for temp in (45.0, 55.0, 85.0):
+        assert_index_parity(cells, temp, 1.0)
+
+
+def test_parity_above_grid_pins_to_jedec():
+    """Beyond the qualification corner even JEDEC timings fail the model's
+    threshold: ref pins the search to the LAST grid point, and the kernel's
+    running first-True reduction must fall back identically."""
+    rnd = random_cells(7)
+    # Mix in the JEDEC-provisioned worst-case cell, which fails even JEDEC
+    # timings above 85 °C — a guaranteed above-grid column.
+    cells = CellParams(
+        r=jnp.concatenate([rnd.r, jnp.asarray([DEFAULT_CONSTANTS.r_max])]),
+        c=jnp.concatenate([rnd.c, jnp.asarray([DEFAULT_CONSTANTS.c_min])]),
+        leak=jnp.concatenate([rnd.leak, jnp.asarray([1.0])]),
+    )
+    idx = assert_index_parity(cells, 95.0, 1.0)
+    read = np.asarray(idx.read)
+    # Where no candidate (JEDEC included) passes, the search must sit
+    # exactly at the grid end for every read-mode parameter.
+    n_grid = [ref.grid_size(p) for p in PARAM_NAMES]
+    eff = charge.apply_pattern(cells, 1.0)
+    ok_at_jedec = np.asarray(charge.read_ok(eff, JEDEC_DDR3_1600, 95.0))
+    assert not ok_at_jedec[-1], "expected the corner cell above-grid at 95 °C"
+    for col in (0, 1, 3):  # trcd, tras, trp ride read_ok
+        assert (read[~ok_at_jedec, col] == n_grid[col] - 1).all()
+
+
+def test_parity_at_exact_jedec_corner_cell():
+    """The anchored worst-case cell (r_max, c_min, leak=1) sits exactly on
+    every threshold at 85 °C by construction — the eps-tolerance boundary
+    both paths must resolve the same way."""
+    corner = CellParams(
+        r=jnp.asarray([DEFAULT_CONSTANTS.r_max], jnp.float32),
+        c=jnp.asarray([DEFAULT_CONSTANTS.c_min], jnp.float32),
+        leak=jnp.asarray([1.0], jnp.float32),
+    )
+    for temp in (45.0, 85.0):
+        assert_index_parity(corner, temp, 1.0)
+
+
+def test_kernel_shares_twr_search_between_modes():
+    cells = random_cells(3)
+    k = ops.sweep_min_indices(
+        charge.apply_pattern(cells, 1.0), 55.0, impl="pallas", interpret=True
+    )
+    np.testing.assert_array_equal(
+        np.asarray(k.read[..., 2]), np.asarray(k.write[..., 2])
+    )
+
+
+def test_kernel_handles_non_tile_multiple_and_broadcast_grids():
+    """Padding path (cells not a multiple of 8×128) and a broadcast
+    (T, P, N) characterization grid in one call."""
+    cells = random_cells(11, n=13)
+    eff = charge.apply_pattern(
+        CellParams(
+            r=cells.r[None, None, :],
+            c=cells.c[None, None, :],
+            leak=cells.leak[None, None, :],
+        ),
+        jnp.asarray([1.0, 1.08], jnp.float32)[None, :, None],
+    )
+    temps = jnp.asarray([45.0, 85.0, 95.0], jnp.float32)[:, None, None]
+    r = ops.sweep_min_indices(eff, temps, impl="ref")
+    k = ops.sweep_min_indices(eff, temps, impl="pallas", interpret=True)
+    assert k.read.shape == (3, 2, 13, 4)
+    np.testing.assert_array_equal(np.asarray(k.read), np.asarray(r.read))
+    np.testing.assert_array_equal(np.asarray(k.write), np.asarray(r.write))
+
+
+# ---------------------------------------------------------------------------
+# Profiler / fleet integration of the impl switch
+# ---------------------------------------------------------------------------
+def test_profiler_impl_switch_is_value_exact():
+    cells = random_cells(5)
+    for temp in (45.0, 85.0):
+        a = profiler.individual_min_timings(cells, temp, 1.02)
+        b = profiler.individual_min_timings(cells, temp, 1.02, impl="pallas")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        c = profiler.write_mode_min_timings(cells, temp, 1.02)
+        d = profiler.write_mode_min_timings(cells, temp, 1.02, impl="pallas")
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(d))
+
+
+def test_write_untested_sentinel_matches_ref_and_is_refused():
+    """tras_mode='untested' substitutes the sentinel AFTER profiling in
+    either impl; the kernel path must carry it identically and every table
+    builder must still refuse it."""
+    cells = random_cells(9, n=6)
+    w_ref = profiler.write_mode_min_timings(cells, 55.0, tras_mode="untested")
+    w_pal = profiler.write_mode_min_timings(
+        cells, 55.0, tras_mode="untested", impl="pallas"
+    )
+    np.testing.assert_array_equal(np.asarray(w_ref), np.asarray(w_pal))
+    assert float(np.asarray(w_pal)[..., 1].max()) == profiler.WRITE_TRAS_UNTESTED_NS
+
+    res = fleet.sweep(
+        fleet.from_population(cells), temps_c=(55.0,), patterns=(1.0,),
+        write_tras="untested", impl="pallas",
+    )
+    with pytest.raises(ValueError, match="untested"):
+        res.write_timings()
+    with pytest.raises(ValueError, match="untested"):
+        res.to_table()
+
+
+def test_fleet_sweep_impl_parity_full_stacks():
+    fl = fleet.synthesize(jax.random.PRNGKey(2), 24)
+    r = fleet.sweep(fl, (45.0, 85.0), (1.0, 1.03))
+    k = fleet.sweep(fl, (45.0, 85.0), (1.0, 1.03), impl="pallas")
+    for name in ("read", "write", "joint"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r, name)), np.asarray(getattr(k, name)),
+            err_msg=f"fleet.sweep {name} stack diverges between impls",
+        )
+
+
+def test_unknown_impl_rejected_everywhere():
+    cells = random_cells(1, n=2)
+    with pytest.raises(ValueError, match="impl"):
+        profiler.individual_min_timings(cells, 55.0, impl="cuda")
+    with pytest.raises(ValueError, match="impl"):
+        profiler.write_mode_min_timings(cells, 55.0, impl="cuda")
+    with pytest.raises(ValueError, match="impl"):
+        fleet.sweep(fleet.from_population(cells), impl="cuda")
+    with pytest.raises(ValueError, match="impl"):
+        ops.sweep_min_indices(cells, 55.0, impl="cuda")
+
+
+# ---------------------------------------------------------------------------
+# Golden regression gates (kernel reproduces committed benchmark results)
+# ---------------------------------------------------------------------------
+def test_pallas_sweep_reproduces_trace_eval_tiny_baseline():
+    """`benchmarks/trace_eval.py --tiny` (diurnal, seed 0) end-to-end with
+    the kernel-profiled sweep: realized memory-intensive speedup must match
+    the committed baseline, and the coolest-bin read tRAS must sit below
+    JEDEC for every DIMM — the two gated symptoms. Flipping the default
+    impl cannot move either."""
+    base = json.loads((BASELINES / "trace_eval_tiny.json").read_text())
+    k_fleet, k_trace, k_err = jax.random.split(jax.random.PRNGKey(0), 3)
+    fl = fleet.synthesize(k_fleet, 64)
+    swp = fleet.sweep(
+        fl, temps_c=controller.DEFAULT_TEMP_BINS, patterns=(1.0,), impl="pallas"
+    )
+    table = swp.to_table()
+    trace = traces.generate("diurnal", k_trace, 64, 512, traces.DEFAULT_DT_S)
+    errors = traces.error_injections(k_err, 512, 64, 0.0)
+    res = controller.replay(table, trace, errors)
+    score = perfmodel.trace_score(table.stack, res)
+    got = score["speedup_realized_intensive_mean"]
+    want = base["speedup_realized_intensive_mean"]
+    assert abs(got - want) <= base["tolerance"], (got, want)
+    assert score["tras_below_jedec_coolest_frac"] == 1.0
+
+
+def test_pallas_sweep_emits_identical_fig2_rows():
+    """The Fig. 2 reproduction's CSV rows — the paper-facing numbers — are
+    identical under either impl, value for value."""
+    from benchmarks import fig2_profiling
+
+    rows_ref = fig2_profiling.run(verbose=False)
+    rows_pal = fig2_profiling.run(verbose=False, impl="pallas")
+    assert [name for name, _, _ in rows_ref] == [n for n, _, _ in rows_pal]
+    for (name, v_ref, _), (_, v_pal, _) in zip(rows_ref, rows_pal):
+        assert v_ref == v_pal, f"fig2 row {name}: ref {v_ref!r} != pallas {v_pal!r}"
+
+
+# ---------------------------------------------------------------------------
+# Kernel-package invariants
+# ---------------------------------------------------------------------------
+def test_grid_construction_is_shared():
+    """profiler's historical private helpers are the kernel package's —
+    one grid construction for ref, kernel and profiler."""
+    assert profiler._grid is ref.param_grid
+    assert profiler._min_safe_on_grid is ref.min_safe_on_grid
+    for p in PARAM_NAMES:
+        g = np.asarray(ref.param_grid(p))
+        assert g[0] == TCK_DDR3_1600_NS and len(g) == ref.grid_size(p)
+
+
+def test_invariant_stack_is_complete():
+    cells = random_cells(4, n=3)
+    inv = ops.cell_invariants(charge.apply_pattern(cells, 1.0), 55.0)
+    assert len(inv) == N_INVARIANTS == len(INVARIANT_NAMES)
+    for name, a in zip(INVARIANT_NAMES, inv):
+        assert np.isfinite(np.asarray(a)).all(), name
