@@ -1,0 +1,24 @@
+"""Pre-jax-import bootstrap for ``--sharded`` benchmark runs.
+
+Imports only os/sys, so it is safe to call before ``import jax`` — which
+is the whole point: ``--xla_force_host_platform_device_count`` is read
+when jax initializes its backend, so it must be in ``XLA_FLAGS`` before
+the first jax call. Shared by ``fleet_sweep.py`` and ``trace_eval.py``
+so the argv-sniffing logic cannot drift between them.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+
+def ensure_host_devices(n: int = 8) -> None:
+    """If ``--sharded`` was requested and XLA_FLAGS does not already pin a
+    host-platform device count, force ``n`` CPU host devices."""
+    if "--sharded" in sys.argv and \
+            "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}"
+        ).strip()

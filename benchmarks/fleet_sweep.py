@@ -7,17 +7,31 @@ at fleet scale, and measures the wall-clock speedup of the batched engine
 
   PYTHONPATH=src python benchmarks/fleet_sweep.py            # 1,152 DIMMs
   PYTHONPATH=src python benchmarks/fleet_sweep.py --tiny     # CI smoke run
+  PYTHONPATH=src python benchmarks/fleet_sweep.py --tiny --sharded  # 8 devices
 
 The loop baseline is timed on ``--baseline-dimms`` modules (default 24) and
 extrapolated linearly to the full fleet — running the seed pipeline on the
 whole fleet would take minutes-to-hours, which is the point. Pass
 ``--full-baseline`` to actually loop over every module.
+
+``--sharded`` adds the mesh section (``fleet/sharded_*`` rows): the same
+sweep shard_map-ped over a 1-D DIMM mesh spanning every visible device,
+hard-gated bit-exact against the single-device result. On CPU it forces
+``--xla_force_host_platform_device_count=8`` (unless XLA_FLAGS already
+pins a device count), so CI and laptops measure a real 8-way mesh.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+
+try:
+    from benchmarks._sharded_env import ensure_host_devices
+except ImportError:  # direct-script execution: benchmarks/ is sys.path[0]
+    from _sharded_env import ensure_host_devices
+
+ensure_host_devices()  # before jax initializes its backend
 
 import jax
 import numpy as np
@@ -45,28 +59,29 @@ def run(
     full_baseline: bool = False,
     seed: int = 0,
     verbose: bool = True,
+    sharded: bool = False,
 ):
     key = jax.random.PRNGKey(seed)
     fl = fleet.synthesize(key, n_dimms)
     grid_points = n_dimms * len(temps_c) * len(patterns)
 
-    # -- batched engine: compile once, then time the steady-state sweep ----
-    res = fleet.sweep(fl, temps_c, patterns)
+    # -- batched engine (pure-jnp ref impl): compile, then steady state ----
+    res = fleet.sweep(fl, temps_c, patterns, impl="ref")
     jax.block_until_ready(res.read)
     t0 = time.perf_counter()
-    res = fleet.sweep(fl, temps_c, patterns)
+    res = fleet.sweep(fl, temps_c, patterns, impl="ref")
     jax.block_until_ready(res.read)
     t_fleet = time.perf_counter() - t0
 
-    # -- fused charge-sweep kernel: same sweep through impl="pallas" -------
+    # -- fused charge-sweep kernel: the DEFAULT impl since PR 5 ------------
     # Off-TPU this runs the kernel in interpret mode (the parity
     # configuration CI gates on), so the timing shows interpreter overhead
     # rather than fused-kernel wall-clock; on a TPU backend it compiles for
     # real. Either way the result must be bit-exact vs the ref sweep.
-    kres = fleet.sweep(fl, temps_c, patterns, impl="pallas")
+    kres = fleet.sweep(fl, temps_c, patterns)
     jax.block_until_ready(kres.read)
     t0 = time.perf_counter()
-    kres = fleet.sweep(fl, temps_c, patterns, impl="pallas")
+    kres = fleet.sweep(fl, temps_c, patterns)
     jax.block_until_ready(kres.read)
     t_kernel = time.perf_counter() - t0
     kernel_err = max(
@@ -97,6 +112,43 @@ def run(
         float(np.abs(np.asarray(res.joint[:, :, idx]) - np.asarray(base_res.joint)).max()),
     )
 
+    # -- sharded section: DIMM axis shard_map-ped over every device --------
+    # The scaling row the ROADMAP's million-module target needs: the same
+    # default-impl sweep, distributed. Parity is the gate (bit-exact);
+    # wall-clock scaling is reported, not asserted (CI boxes oversubscribe
+    # host devices onto few cores, so speedup there is not meaningful).
+    shard_rows = []
+    if sharded:
+        from repro.core import shard
+
+        mesh = shard.fleet_mesh()
+        n_dev = shard.n_shards(mesh)
+        sres = fleet.sweep(fl, temps_c, patterns, mesh=mesh)
+        jax.block_until_ready(sres.read)
+        t0 = time.perf_counter()
+        sres = fleet.sweep(fl, temps_c, patterns, mesh=mesh)
+        jax.block_until_ready(sres.read)
+        t_sharded = time.perf_counter() - t0
+        shard_err = max(
+            float(np.abs(np.asarray(sres.read) - np.asarray(kres.read)).max()),
+            float(np.abs(np.asarray(sres.write) - np.asarray(kres.write)).max()),
+            float(np.abs(np.asarray(sres.joint) - np.asarray(kres.joint)).max()),
+        )
+        if shard_err != 0.0:  # parity gate: CI must go red, not just log
+            raise AssertionError(
+                f"sharded sweep diverged from single-device: "
+                f"max|err| = {shard_err} ns on {n_dev} devices"
+            )
+        shard_rows = [
+            ("fleet/sharded_n_devices", float(n_dev), ">=8 in CI"),
+            ("fleet/sharded_sweep_seconds", t_sharded, ""),
+            ("fleet/sharded_vs_single_device_ratio", t_kernel / t_sharded,
+             "scaling row; >1 = sharding wins"),
+            ("fleet/sharded_max_abs_error_vs_single_ns", shard_err, "==0"),
+            ("fleet/sharded_parity_exact",
+             1.0 if shard_err == 0.0 else 0.0, "==1"),
+        ]
+
     interp = charge_sweep.default_interpret()
     rows = [
         ("fleet/n_dimms", float(n_dimms), ""),
@@ -114,6 +166,7 @@ def run(
         ("fleet/kernel_max_abs_error_vs_ref_ns", kernel_err, "==0"),
         ("fleet/kernel_parity_exact", 1.0 if kernel_err == 0.0 else 0.0, "==1"),
     ]
+    rows.extend(shard_rows)
 
     summary = res.summary()
     for t, per_param in sorted(summary.items()):
@@ -147,6 +200,10 @@ def run(
         print(f"# charge-sweep kernel ({'interpret' if interp else 'compiled'}): "
               f"{t_kernel*1e3:.1f} ms, {t_kernel/t_fleet:.1f}x ref wall-clock, "
               f"max |kernel - ref| = {kernel_err:.2e} ns (bit-exact gate)")
+        if shard_rows:
+            print(f"# sharded sweep ({shard_rows[0][1]:.0f} devices): "
+                  f"{shard_rows[1][1]*1e3:.1f} ms, "
+                  f"{shard_rows[2][1]:.2f}x single-device, bit-exact")
         for t, per_param in sorted(summary.items()):
             cells = ", ".join(
                 f"{p} {per_param[p][0]*100:.1f}/{per_param[p][1]*100:.1f}/"
@@ -172,6 +229,11 @@ def main() -> None:
                     help="loop over every module instead of extrapolating")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: 48 DIMMs, 3 temps, worst pattern only")
+    ap.add_argument("--sharded", action="store_true",
+                    help="add the fleet/sharded_* section: the sweep "
+                         "shard_map-ped over all visible devices, gated "
+                         "bit-exact vs single-device (on CPU this forces "
+                         "8 host devices unless XLA_FLAGS pins a count)")
     ap.add_argument("--json", type=str, default=None,
                     help="also write rows to this JSON artifact path")
     ap.add_argument("--seed", type=int, default=0)
@@ -188,7 +250,7 @@ def main() -> None:
         if conflicts:
             ap.error(f"--tiny fixes the configuration; remove {', '.join(conflicts)}")
         rows = run(n_dimms=48, temps_c=(45.0, 55.0, 85.0), patterns=(1.0,),
-                   baseline_dimms=8, seed=args.seed)
+                   baseline_dimms=8, seed=args.seed, sharded=args.sharded)
     else:
         n_dimms = 1152 if args.n_dimms is None else args.n_dimms
         if n_dimms < 1:
@@ -206,6 +268,7 @@ def main() -> None:
             baseline_dimms=24 if args.baseline_dimms is None else args.baseline_dimms,
             full_baseline=args.full_baseline,
             seed=args.seed,
+            sharded=args.sharded,
         )
     for name, value, ref in rows:
         print(f"{name},{value:.6g},{ref}")

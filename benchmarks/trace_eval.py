@@ -25,6 +25,13 @@ Regression gate: ``--tiny`` (CI) loads the committed baseline JSON
 realized memory-intensive speedup drops below it, or if any DIMM's
 programmed read-set tRAS fails to sit below JEDEC in the coolest bin —
 the two observable symptoms of the old tRAS-at-JEDEC merge bug.
+
+``--sharded`` adds the mesh section (``trace/sharded_*`` rows): the same
+replay shard_map-ped over a 1-D DIMM mesh spanning every visible device
+(hard-gated bit-exact vs the single-device scan) plus the gather-free
+``trace_score(mesh=...)`` — local partials + psum, gated to match the
+single-device score. On CPU it forces 8 host devices unless XLA_FLAGS
+already pins a count.
 """
 
 from __future__ import annotations
@@ -33,6 +40,13 @@ import argparse
 import json
 import pathlib
 import time
+
+try:
+    from benchmarks._sharded_env import ensure_host_devices
+except ImportError:  # direct-script execution: benchmarks/ is sys.path[0]
+    from _sharded_env import ensure_host_devices
+
+ensure_host_devices()  # before jax initializes its backend
 
 import jax
 import numpy as np
@@ -60,6 +74,7 @@ def run(
     seed: int = 0,
     verbose: bool = True,
     regression_baseline: str | pathlib.Path | None = None,
+    sharded: bool = False,
 ):
     key = jax.random.PRNGKey(seed)
     k_fleet, k_trace, k_err = jax.random.split(key, 3)
@@ -116,6 +131,51 @@ def run(
     # -- scoring -----------------------------------------------------------
     score = perfmodel.trace_score(table.stack, res)
 
+    # -- sharded section: replay + gather-free scoring over the mesh -------
+    shard_rows = []
+    if sharded:
+        from repro.core import shard
+
+        mesh = shard.fleet_mesh()
+        n_dev = shard.n_shards(mesh)
+        sres = controller.replay(table, trace, errors, mesh=mesh)
+        jax.block_until_ready(sres.timings)
+        t0 = time.perf_counter()
+        sres = controller.replay(table, trace, errors, mesh=mesh)
+        jax.block_until_ready(sres.timings)
+        t_sharded = time.perf_counter() - t0
+        shard_err = float(
+            np.abs(np.asarray(sres.timings) - np.asarray(res.timings)).max()
+        )
+        replay_exact = shard_err == 0.0 and bool(
+            np.array_equal(np.asarray(sres.bin_idx), np.asarray(res.bin_idx))
+        ) and bool(
+            np.array_equal(np.asarray(sres.switched), np.asarray(res.switched))
+        )
+        if not replay_exact:  # parity gate: CI must go red, not just log
+            raise AssertionError(
+                f"sharded replay diverged from single-device scan: "
+                f"max|err| = {shard_err} ns on {n_dev} devices"
+            )
+        sscore = perfmodel.trace_score(table.stack, sres, mesh=mesh)
+        score_err = max(
+            abs(sscore[k] - score[k]) / max(abs(score[k]), 1.0)
+            for k in score
+        )
+        if score_err > 1e-4:  # psum partials: summation-order noise only
+            raise AssertionError(
+                f"sharded trace_score diverged: max rel err {score_err:.2e}"
+            )
+        shard_rows = [
+            ("trace/sharded_n_devices", float(n_dev), ">=8 in CI"),
+            ("trace/sharded_replay_seconds", t_sharded, ""),
+            ("trace/sharded_vs_single_device_ratio", t_scan / t_sharded,
+             "scaling row; >1 = sharding wins"),
+            ("trace/sharded_replay_parity_exact",
+             1.0 if replay_exact else 0.0, "==1"),
+            ("trace/sharded_score_max_rel_err", score_err, "<=1e-4"),
+        ]
+
     rows = [
         ("trace/scenario_" + scenario, 1.0, ""),
         ("trace/n_dimms", float(n_dimms), ""),
@@ -150,6 +210,7 @@ def run(
         ("trace/fused_dimms", float(np.asarray(res.state.fused).sum()),
          "0 unless error injection"),
     ]
+    rows.extend(shard_rows)
 
     # -- regression gate vs the committed baseline -------------------------
     if regression_baseline is not None:
@@ -212,6 +273,11 @@ def main() -> None:
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: 64 DIMMs x 512 steps, gated against the "
                          "committed regression baseline")
+    ap.add_argument("--sharded", action="store_true",
+                    help="add the trace/sharded_* section: replay + "
+                         "gather-free scoring over all visible devices, "
+                         "gated vs single-device (on CPU this forces 8 "
+                         "host devices unless XLA_FLAGS pins a count)")
     ap.add_argument("--regression-baseline", type=str, default=None,
                     help="baseline JSON for the realized-speedup gate "
                          "(default: the committed tiny baseline when --tiny)")
@@ -235,7 +301,7 @@ def main() -> None:
         rows = run(n_dimms=64, n_steps=512, scenario=args.scenario,
                    dt_s=args.dt_s, error_rate=args.error_rate,
                    baseline_dimms=8, baseline_steps=128, seed=args.seed,
-                   regression_baseline=gate)
+                   regression_baseline=gate, sharded=args.sharded)
     else:
         rows = run(
             n_dimms=1000 if args.n_dimms is None else args.n_dimms,
@@ -247,6 +313,7 @@ def main() -> None:
             baseline_steps=500 if args.baseline_steps is None else args.baseline_steps,
             seed=args.seed,
             regression_baseline=args.regression_baseline,
+            sharded=args.sharded,
         )
     for name, value, ref in rows:
         print(f"{name},{value:.6g},{ref}")

@@ -14,7 +14,9 @@ DRAM layer (faithful reproduction):
   traces      — parameterized thermal scenarios (diurnal, bursts, HVAC
                 failure, ...) for trace-driven controller evaluation
   perfmodel   — real-system performance evaluation analogue (Fig. 3) +
-                replay trace scoring
+                replay trace scoring (gather-free under a mesh)
+  shard       — multi-backend DIMM-axis sharding: shard_map engine,
+                padding + validity masks, the fleet ("dimm",) mesh
 
 TPU embodiment (the method, transferred — DESIGN.md §2):
   altune      — adaptive execution-parameter tuning for JAX/Pallas programs

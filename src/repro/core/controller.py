@@ -40,11 +40,17 @@ The same select-with-fallback state machine is reused by the TPU
 embodiment (:mod:`repro.core.altune.runtime`) through the shared scalar
 kernel in :mod:`repro.core.binning`; :func:`replay` is property-tested
 bit-exact against the wrapper's observe loop (tests/test_replay.py).
+Because every per-DIMM register is one column of a struct-of-arrays
+pytree, :func:`replay` also runs distributed: pass ``mesh=`` to shard the
+DIMM axis over a device mesh (:mod:`repro.core.shard`) — state, table
+stack and replay outputs stay partitioned, and results remain bit-exact
+vs the single-device scan.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 from typing import List, NamedTuple, Optional, Sequence, Tuple
 
@@ -53,7 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import Array
 
-from repro.core import charge
+from repro.core import charge, shard
 from repro.core.binning import advance_bin, bin_index
 from repro.core.charge import CellParams, ChargeModelConstants, DEFAULT_CONSTANTS
 from repro.core.timing import (
@@ -442,14 +448,34 @@ def replay(
     errors: Optional[Array] = None,
     params: ControllerParams = ControllerParams(),
     state: Optional[ControllerState] = None,
+    mesh=None,
 ) -> ReplayResult:
     """Replay whole temperature traces through the controller in ONE
     jitted ``lax.scan`` — n_dimms × n_steps transitions, no Python loop.
 
-    ``traces`` is ``(n_steps, n_dimms)`` °C; ``errors`` an optional
-    same-shaped bool mask of per-step error injections (each fuses its
-    DIMM to JEDEC from that step on). Bit-exact with feeding the same
-    observations to :meth:`ALDRAMController.observe` one at a time."""
+    Array contract:
+
+    * ``traces`` — ``(n_steps, n_dimms)`` °C observations.
+    * ``errors`` — optional same-shaped bool mask of per-step error
+      injections (each fuses its DIMM to JEDEC from that step on).
+    * ``state`` — optional starting :class:`ControllerState` (leaves
+      ``(n_dimms,)``); defaults to the boot state (most conservative
+      profiled bin).
+    * Result stacks: ``timings`` is ``(n_steps, n_dimms, 2, 4)`` realized
+      per-access rows, ``bin_idx`` / ``switched`` / ``fused`` are
+      ``(n_steps, n_dimms)``.
+
+    Bit-exact with feeding the same observations to
+    :meth:`ALDRAMController.observe` one at a time.
+
+    ``mesh`` — optional 1-D device mesh carrying the ``"dimm"`` axis
+    (:func:`repro.core.shard.fleet_mesh`). The table stack, the
+    ``ControllerState`` pytree, the trace/error columns and the
+    ``(S, N, 2, 4)`` replay timings all live distributed over the DIMM
+    axis; each device scans its contiguous block of DIMMs with the same
+    jitted scan, padding (edge replication) + output slicing handle
+    non-divisible fleet sizes. Sharded replays are BIT-EXACT vs
+    ``mesh=None`` (property-tested in tests/test_shard.py)."""
     traces = jnp.asarray(traces, jnp.float32)
     if traces.ndim != 2:
         raise ValueError(f"traces must be (n_steps, n_dimms), got {traces.shape}")
@@ -467,7 +493,7 @@ def replay(
             )
     if state is None:
         state = init_state(table.n_dimms, table.n_bins)
-    final, rows, switched, eff, fused = _replay_scan(
+    args = (
         jnp.asarray(table.stack),
         jnp.asarray(table.temp_bins, jnp.float32),
         ControllerParams(*(jnp.asarray(p) for p in params)),
@@ -475,7 +501,25 @@ def replay(
         traces,
         errors,
     )
+    if mesh is None:
+        final, rows, switched, eff, fused = _replay_scan(*args)
+    else:
+        run = _sharded_replay_runner(mesh, table.n_dimms)
+        final, rows, switched, eff, fused = run(*args)
     return ReplayResult(rows, eff, switched, fused, final)
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_replay_runner(mesh, n_dimms: int):
+    """Cached (pad → shard_map → slice) wrapper around the replay scan:
+    repeated sharded replays of the same (mesh, fleet size) hit the jit
+    cache instead of re-tracing the scan."""
+    return shard.sharded_dimm_map(
+        _replay_scan, mesh,
+        in_axes=(0, None, None, 0, 1, 1),
+        out_axes=(0, 1, 1, 1, 1),
+        n_dimms=n_dimms,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -569,13 +613,15 @@ class ALDRAMController:
         self._streak = np.asarray(state.cool_streak, np.int32).copy()
         self._fused = np.asarray(state.fused, bool).copy()
 
-    def replay(self, traces, errors=None) -> ReplayResult:
+    def replay(self, traces, errors=None, mesh=None) -> ReplayResult:
         """Advance this controller over whole traces in one jitted scan,
         then absorb the final registers and counters — equivalent to (and
-        ~100×+ faster than) calling :meth:`observe` per (step, DIMM)."""
+        ~100×+ faster than) calling :meth:`observe` per (step, DIMM).
+        ``mesh`` shards the DIMM axis as in the module-level
+        :func:`replay`."""
         result = replay(  # the module-level pure function, not this method
             self.table, traces, errors=errors, params=self.params,
-            state=self.state(),
+            state=self.state(), mesh=mesh,
         )
         self.load_state(result.state)
         self.switch_count += result.total_switches

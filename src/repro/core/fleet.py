@@ -37,10 +37,17 @@ Scaling note: grid-search cost is O(n_dimms · n_temps · n_patterns ·
 Σ grid sizes) fused into a handful of XLA kernels; 1,000+ modules × 5
 temperatures × 7 patterns characterizes in well under a second on CPU
 (see ``benchmarks/fleet_sweep.py`` for measured speedups vs the loop).
+Beyond one device, :func:`sweep` takes ``mesh=`` and shards the DIMM axis
+across a 1-D device mesh (:mod:`repro.core.shard`): each shard runs the
+same fused kernel on its contiguous block of modules, padding +
+validity-masking handle non-divisible fleet sizes, and the sharded result
+is bit-exact against the single-device sweep (property-tested and gated
+by ``benchmarks/fleet_sweep.py --sharded``).
 """
 
 from __future__ import annotations
 
+import functools
 import warnings
 from functools import partial
 from typing import Dict, NamedTuple, Sequence, Tuple
@@ -49,7 +56,7 @@ import jax
 import jax.numpy as jnp
 from jax import Array
 
-from repro.core import charge, dimm, profiler
+from repro.core import charge, dimm, profiler, shard
 from repro.core.charge import CellParams, ChargeModelConstants, DEFAULT_CONSTANTS
 from repro.core.timing import PARAM_NAMES
 from repro.kernels.charge_sweep import ops as charge_sweep
@@ -341,6 +348,39 @@ def _sweep_grid_pallas(
     return read, write, joint
 
 
+@functools.lru_cache(maxsize=32)
+def _sharded_sweep_runner(
+    mesh,
+    n_dimms: int,
+    temps: Tuple[float, ...],
+    patterns: Tuple[float, ...],
+    window_s: float,
+    consts: ChargeModelConstants,
+    write_tras: str,
+    impl: str,
+    interpret: bool,
+):
+    """Cached (pad → shard_map → slice) wrapper for one sweep
+    configuration: repeated sharded sweeps of the same (mesh, fleet size,
+    grid) hit the jit cache instead of re-tracing the whole study."""
+    t = jnp.asarray(temps, jnp.float32)
+    p = jnp.asarray(patterns, jnp.float32)
+    if impl == "pallas":
+
+        def grid_fn(c: CellParams):
+            return _sweep_grid_pallas(
+                c, t, p, window_s, consts, write_tras, interpret
+            )
+    else:
+
+        def grid_fn(c: CellParams):
+            return _sweep_grid(c, t, p, window_s, consts, write_tras)
+
+    return shard.sharded_dimm_map(
+        grid_fn, mesh, in_axes=(0,), out_axes=(2, 2, 2), n_dimms=n_dimms
+    )
+
+
 def sweep(
     fleet: Fleet | CellParams,
     temps_c: Sequence[float] = DEFAULT_TEMPS_C,
@@ -348,26 +388,44 @@ def sweep(
     window_s: float = charge.REFRESH_WINDOW_S,
     consts: ChargeModelConstants = DEFAULT_CONSTANTS,
     write_tras: str = "profiled",
-    impl: str = "ref",
+    impl: str = "pallas",
     interpret: bool | None = None,
+    mesh=None,
 ) -> SweepResult:
     """Characterize a whole fleet in one jitted (vmap × vmap) call.
 
     Equivalent to — and tested against — looping
     ``profiler.profile_individual`` / ``profile_write_mode`` /
     ``profile_joint`` over every (temperature, pattern) point, but with the
-    entire grid fused into one XLA computation. ``write_tras`` passes
-    through to :func:`repro.core.profiler.write_mode_min_timings`
-    (``"untested"`` fills the write tRAS column with the refused sentinel —
-    for tests of the refusal path, never for real tables).
+    entire grid fused into one XLA computation.
 
-    ``impl="pallas"`` runs the read/write grid searches through the fused
-    charge-sweep kernel (:mod:`repro.kernels.charge_sweep`) — one kernel
-    pass for the whole (DIMM × temperature × pattern) grid, property-
-    tested bit-exact against the ``"ref"`` path and golden-gated against
-    the committed benchmark baselines. ``interpret`` forces/disables the
-    kernel's interpret mode (default: interpret everywhere but TPU).
-    Default stays ``"ref"`` until the parity gates have soaked.
+    Args / contract:
+
+    * ``fleet`` — a :class:`Fleet` or bare :class:`CellParams`; every leaf
+      is ``(n_dimms,)``, the DIMM axis.
+    * ``temps_c`` / ``patterns`` — the ``(T,)`` / ``(P,)`` grid; the
+      result's ``read`` / ``write`` / ``joint`` stacks are
+      ``(T, P, n_dimms, 4)`` ns (``PARAM_NAMES`` order, cycle-quantized).
+    * ``write_tras`` — passes through to
+      :func:`repro.core.profiler.write_mode_min_timings` (``"untested"``
+      fills the write tRAS column with the refused sentinel — for tests of
+      the refusal path, never for real tables).
+    * ``impl`` — ``"pallas"`` (default) runs the read/write grid searches
+      through the fused charge-sweep kernel
+      (:mod:`repro.kernels.charge_sweep`): one kernel pass for the whole
+      (DIMM × temperature × pattern) grid, property-tested bit-exact
+      against ``"ref"`` (the pure-jnp full-model search, kept reachable
+      for oracle runs) and golden-gated against the committed benchmark
+      baselines. ``interpret`` forces/disables the kernel's interpret mode
+      (default: interpret everywhere but TPU).
+    * ``mesh`` — optional 1-D device mesh carrying the ``"dimm"`` axis
+      (:func:`repro.core.shard.fleet_mesh`). The DIMM axis is
+      ``shard_map``-ped across the mesh — each device sweeps a contiguous
+      block of modules with the very same jitted computation (the fused
+      kernel runs *locally* per shard) — with edge-replication padding for
+      fleet sizes that do not divide the device count (including
+      ``n_dimms < n_devices``). Sharded results are BIT-EXACT vs
+      ``mesh=None``.
     """
     if write_tras not in profiler.WRITE_TRAS_MODES:
         raise ValueError(
@@ -379,17 +437,26 @@ def sweep(
             f"impl must be one of {charge_sweep.IMPLS}, got {impl!r}"
         )
     cells = fleet.cells if isinstance(fleet, Fleet) else fleet
-    t = jnp.asarray(temps_c, jnp.float32)
-    p = jnp.asarray(patterns, jnp.float32)
-    if impl == "pallas":
-        read, write, joint = _sweep_grid_pallas(
-            cells, t, p, float(window_s), consts, write_tras,
-            charge_sweep.default_interpret() if interpret is None else interpret,
-        )
+    temps_key = tuple(float(x) for x in temps_c)
+    patterns_key = tuple(float(x) for x in patterns)
+    interp = charge_sweep.default_interpret() if interpret is None else interpret
+    t = jnp.asarray(temps_key, jnp.float32)
+    p = jnp.asarray(patterns_key, jnp.float32)
+    if mesh is None:
+        if impl == "pallas":
+            read, write, joint = _sweep_grid_pallas(
+                cells, t, p, float(window_s), consts, write_tras, interp
+            )
+        else:
+            read, write, joint = _sweep_grid(
+                cells, t, p, float(window_s), consts, write_tras
+            )
     else:
-        read, write, joint = _sweep_grid(
-            cells, t, p, float(window_s), consts, write_tras
+        run = _sharded_sweep_runner(
+            mesh, int(cells.r.shape[0]), temps_key, patterns_key,
+            float(window_s), consts, write_tras, impl, interp,
         )
+        read, write, joint = run(cells)
     return SweepResult(
         temps_c=t, patterns=p, read=read, write=write, joint=joint,
         temps_exact=tuple(float(x) for x in temps_c),

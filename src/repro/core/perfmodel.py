@@ -285,17 +285,25 @@ def _with_access_axis(timings: Array, split: Optional[bool] = None) -> Array:
     ``split=True`` asserts the stack already carries the access axis
     (read = 0, write = 1, the ``ACCESS_TYPES`` order); ``split=False``
     treats it as a merged set and duplicates it into both slots. With
-    ``split=None`` the shape decides: a trailing ``(2, 4)`` is taken as
-    split. That heuristic cannot distinguish a literal two-entry merged
-    ``(2, 4)`` stack — callers whose leading axes are arbitrary (a 2-DIMM
-    fleet, a 2-bin table) must pass ``split`` explicitly; the fixed-rank
-    entry points (``trace_score``, ``realized_latency_reductions``) decide
-    by rank and are unambiguous."""
+    ``split=None`` an unambiguous shape decides: a trailing axis of
+    extent != 2 is a merged stack. A trailing ``(2, 4)`` is AMBIGUOUS — it
+    could be an access-type axis or a merged stack whose leading axis
+    happens to have extent 2 (a 2-DIMM fleet, a 2-bin table) — and is
+    REFUSED: callers must pass ``split`` explicitly rather than have this
+    function guess. The fixed-rank entry points (``trace_score``,
+    ``realized_latency_reductions``) decide by rank and always pass it."""
     timings = jnp.asarray(timings, jnp.float32)
     if timings.shape[-1] != len(PARAM_NAMES):
         raise ValueError(f"timing stack must end in a 4-axis, got {timings.shape}")
     if split is None:
-        split = timings.ndim >= 2 and timings.shape[-2] == len(ACCESS_TYPES)
+        if timings.ndim >= 2 and timings.shape[-2] == len(ACCESS_TYPES):
+            raise ValueError(
+                f"ambiguous timing stack shape {timings.shape}: the trailing "
+                "(2, 4) could be a (read, write) access-type axis or a merged "
+                "stack with a leading axis of extent 2; pass split=True "
+                "(access axis) or split=False (merged) explicitly"
+            )
+        split = False
     if split:
         if timings.ndim < 2 or timings.shape[-2] != len(ACCESS_TYPES):
             raise ValueError(
@@ -410,6 +418,7 @@ def trace_score(
     cfg: SystemConfig = MULTI_CORE,
     claim: float = PAPER_CLAIM_SPEEDUP,
     workloads: Tuple[Workload, ...] = WORKLOADS,
+    mesh=None,
 ) -> Dict[str, float]:
     """Score a controller replay: realized latency/performance gains,
     switching activity, and degradation vs the paper's 14 % claim.
@@ -425,11 +434,24 @@ def trace_score(
     per-parameter realized reductions of each access-type set are
     reported as ``{access}_{param}_reduction_mean`` (the per-access-type
     register sets are the whole point — tRAS must show up reduced in the
-    read set, not pinned at JEDEC by a merge)."""
+    read set, not pinned at JEDEC by a merge).
+
+    ``mesh`` — optional 1-D ``"dimm"`` mesh
+    (:func:`repro.core.shard.fleet_mesh`): scoring then runs GATHER-FREE.
+    Stack and replay outputs stay partitioned over the DIMM axis (pass the
+    arrays of a ``replay(mesh=...)`` straight in); every reported figure —
+    per-bin occupancy, switch counts, realized reductions, realized
+    speedups — is computed as mask-weighted local partials combined with
+    ``psum`` / ``pmin``, so no per-DIMM array is ever gathered to one
+    device. Counts and integer-valued sums are exact; float means can
+    differ from ``mesh=None`` only by cross-shard summation order
+    (tested to ~1e-5 relative)."""
     stack = jnp.asarray(stack, jnp.float32)
     # Fixed-rank input: rank 4 = (N, B, 2, 4) split registers, rank 3 =
     # legacy merged (N, B, 4) — decided by rank, never by axis extent.
     stack = _with_access_axis(stack, split=(stack.ndim == 4))    # (N, B, 2, 4)
+    if mesh is not None:
+        return _trace_score_sharded(stack, replay, cfg, claim, workloads, mesh)
     n_dimms, n_bins = stack.shape[0], stack.shape[1]
     occ = time_in_bin(replay.bin_idx, n_bins)                    # (N, B+1)
     red = realized_latency_reductions(replay.timings)
@@ -468,6 +490,115 @@ def trace_score(
         for pi, param in enumerate(PARAM_NAMES):
             out[f"{access}_{param}_reduction_mean"] = float(per[:, pi].mean())
     return out
+
+
+def _trace_score_sharded(
+    stack: Array,
+    replay,
+    cfg: SystemConfig,
+    claim: float,
+    workloads: Tuple[Workload, ...],
+    mesh,
+) -> Dict[str, float]:
+    """Gather-free :func:`trace_score`: local partials + psum over the
+    ``"dimm"`` mesh axis.
+
+    Each shard scores its own block of DIMMs exactly like the
+    single-device path (occupancy, realized reductions, occupancy-weighted
+    speedups — all per-DIMM quantities), masks out padding lanes, and
+    contributes mask-weighted partial sums (and a ``pmin`` for the fleet
+    minimum). Only O(1) scalars cross devices."""
+    from repro.core import shard
+
+    n_dimms, n_bins = stack.shape[0], stack.shape[1]
+    n_steps = replay.bin_idx.shape[0]
+    timings = jnp.asarray(replay.timings, jnp.float32)
+    timings = _with_access_axis(timings, split=(timings.ndim == 4))
+    bin_idx = jnp.asarray(replay.bin_idx)
+    switched = jnp.asarray(replay.switched)
+    # Pre-padded validity mask: padding lanes (edge-replicated DIMMs) must
+    # weigh zero in every reduction, so the mask is built at padded length
+    # here rather than letting pad_dimm edge-replicate a True.
+    mask = shard.dimm_mask(n_dimms, shard.padded_size(n_dimms, shard.n_shards(mesh)))
+    run = _sharded_score_runner(mesh, n_dimms, n_bins, cfg, workloads)
+    (s_read, s_write, s_real, s_real_mem, real_min, s_switch,
+     s_jedec, s_cool, s_tras, s_read_params, s_write_params) = run(
+        stack, timings, bin_idx, switched, mask)
+    n = float(n_dimms)
+    out = {
+        "read_reduction_mean": float(s_read) / n,
+        "write_reduction_mean": float(s_write) / n,
+        "speedup_realized_mean": float(s_real) / n - 1.0,
+        "speedup_realized_min": float(real_min) - 1.0,
+        "speedup_realized_intensive_mean": float(s_real_mem) / n - 1.0,
+        "speedup_vs_claim": (float(s_real_mem) / n - 1.0) - claim,
+        "switches_total": float(s_switch),
+        "switches_per_dimm_mean": float(s_switch) / n,
+        "switches_per_kstep": float(s_switch) / (n_steps * n / 1000.0),
+        "time_at_jedec_frac": float(s_jedec) / n,
+        "time_in_coolest_bin_frac": float(s_cool) / n,
+        "tras_below_jedec_coolest_frac": float(s_tras) / n,
+    }
+    for access, sums in zip(ACCESS_TYPES, (s_read_params, s_write_params)):
+        arr = np.asarray(sums)
+        for pi, param in enumerate(PARAM_NAMES):
+            out[f"{access}_{param}_reduction_mean"] = float(arr[pi]) / n
+    return out
+
+
+@functools.lru_cache(maxsize=16)
+def _sharded_score_runner(
+    mesh,
+    n_dimms: int,
+    n_bins: int,
+    cfg: SystemConfig,
+    workloads: Tuple[Workload, ...],
+):
+    """Cached (pad → shard_map → slice) wrapper around the local scoring
+    partials: repeated sharded scores of the same configuration hit the
+    jit cache instead of re-tracing the IPC bisection."""
+    from repro.core import shard
+
+    def local(stack_l, timings_l, bin_l, switched_l, mask_l):
+        m = mask_l.astype(jnp.float32)
+        occ = time_in_bin(bin_l, n_bins)                         # (n_loc, B+1)
+        red = realized_latency_reductions(timings_l)
+        jedec_rows = jnp.broadcast_to(
+            jnp.asarray(list(JEDEC_DDR3_1600), jnp.float32),
+            (stack_l.shape[0], 1, 2, 4),
+        )
+        rows = jnp.concatenate([stack_l, jedec_rows], axis=1)    # (n_loc, B+1, 2, 4)
+        sp = fleet_speedups(rows, cfg, workloads, split=True)
+        sp_mem = fleet_speedups(rows, cfg, MEM_INTENSIVE_WORKLOADS, split=True)
+        realized = (occ * sp).sum(axis=-1)                       # (n_loc,)
+        realized_mem = (occ * sp_mem).sum(axis=-1)
+
+        def tot(x):
+            return shard.psum(jnp.sum(x * m))
+
+        per_access = tuple(
+            shard.psum(jnp.sum(red[f"{a}_params"] * m[:, None], axis=0))
+            for a in ACCESS_TYPES
+        )
+        return (
+            tot(red["read"]),
+            tot(red["write"]),
+            tot(realized),
+            tot(realized_mem),
+            shard.pmin(jnp.min(jnp.where(mask_l, realized, jnp.inf))),
+            # Switch COUNT stays integer through the psum: a float32
+            # accumulator would lose exactness above 2^24 switches, i.e.
+            # exactly at the fleet scales this layer exists for.
+            shard.psum(jnp.sum((switched_l & mask_l[None, :]).astype(jnp.int32))),
+            tot(occ[:, n_bins]),
+            tot(occ[:, 0]),
+            tot((stack_l[:, 0, 0, 1] < JEDEC_DDR3_1600.tras - 1e-6).astype(jnp.float32)),
+        ) + per_access
+
+    return shard.sharded_dimm_map(
+        local, mesh, in_axes=(0, 1, 1, 1, 0), out_axes=(None,) * 11,
+        n_dimms=n_dimms,
+    )
 
 
 def per_workload_speedups(

@@ -33,11 +33,13 @@ engine (:mod:`repro.core.fleet`) vmaps the pure functions over the whole
 first-True-on-the-grid semantics live in
 :mod:`repro.kernels.charge_sweep.ref` (this module re-exports ``_grid`` /
 ``_min_safe_on_grid`` as thin aliases), and the two grid-search functions
-take ``impl="ref"|"pallas"``: ``"ref"`` is the pure-jnp full-model search
-below, ``"pallas"`` routes through the fused one-pass kernel
-(:mod:`repro.kernels.charge_sweep.ops`, interpret mode off-TPU) which is
-property-tested bit-exact against it. Default stays ``"ref"`` until the
-parity gates have soaked; flipping the default is a one-line follow-up.
+take ``impl="ref"|"pallas"``: ``"pallas"`` (the DEFAULT, since the parity
+gates soaked in CI) routes through the fused one-pass kernel
+(:mod:`repro.kernels.charge_sweep.ops`, interpret mode off-TPU);
+``"ref"`` is the pure-jnp full-model search below, kept reachable — and
+tested — as the oracle the kernel is property-tested bit-exact against.
+The golden gates (committed benchmark baselines) pin that the flip moved
+no gated number.
 """
 
 from __future__ import annotations
@@ -113,7 +115,7 @@ def individual_min_timings(
     window_s: float = charge.REFRESH_WINDOW_S,
     consts: ChargeModelConstants = DEFAULT_CONSTANTS,
     *,
-    impl: str = "ref",
+    impl: str = "pallas",
 ) -> Array:
     """Per-parameter minimal safe timings, others held at JEDEC (§1.5).
 
@@ -121,8 +123,9 @@ def individual_min_timings(
     cycle-quantized). ``temp_c`` / ``pattern`` may be tracers — the fleet
     engine vmaps this over the (temperature × pattern) grid.
 
-    ``impl="pallas"`` runs the fused charge-sweep kernel instead of the
-    per-candidate full-model search (bit-exact; see
+    ``impl="pallas"`` (default) runs the fused charge-sweep kernel instead
+    of the per-candidate full-model search — bit-exact against
+    ``impl="ref"``, the pure-jnp oracle (see
     :mod:`repro.kernels.charge_sweep`). Note the kernel computes both
     access modes in one pass — batch callers wanting both stacks should
     use :func:`repro.kernels.charge_sweep.ops.sweep_min_timings` (as
@@ -166,7 +169,7 @@ def write_mode_min_timings(
     consts: ChargeModelConstants = DEFAULT_CONSTANTS,
     tras_mode: str = "profiled",
     *,
-    impl: str = "ref",
+    impl: str = "pallas",
 ) -> Array:
     """Write-test minimal timings for all four parameters (Fig. 2b).
 
@@ -176,9 +179,10 @@ def write_mode_min_timings(
     ``tras_mode="untested"`` reproduces the legacy situation *explicitly*:
     the tRAS column is filled with :data:`WRITE_TRAS_UNTESTED_NS`, a
     negative sentinel that every table builder refuses — it can no longer
-    silently masquerade as a JEDEC requirement. ``impl="pallas"`` runs the
-    fused charge-sweep kernel (bit-exact; the sentinel substitution
-    happens after profiling in either impl)."""
+    silently masquerade as a JEDEC requirement. ``impl="pallas"`` (default)
+    runs the fused charge-sweep kernel, ``"ref"`` the pure-jnp oracle
+    (bit-exact; the sentinel substitution happens after profiling in
+    either impl)."""
     if tras_mode not in WRITE_TRAS_MODES:
         raise ValueError(
             f"tras_mode must be one of {WRITE_TRAS_MODES}, got {tras_mode!r}"

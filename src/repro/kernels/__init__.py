@@ -24,6 +24,11 @@
 # grid fallback, sentinel substitution) and golden-gate them against the
 # committed benchmark baselines before flipping any impl default.
 #
-# Next kernel (ROADMAP): sharded replay — follow this layout; its ref is
-# repro.core.controller.replay and its parity gate is tests/test_replay.py
-# style bit-exactness over the scan.
+# Sharding composes ABOVE this layer: repro.core.shard partitions the
+# DIMM axis with shard_map and calls the same ops.py entry points per
+# shard (each shard pads to tile boundaries locally), so kernels never
+# see the mesh — fleet.sweep(mesh=..., impl="pallas") runs the fused
+# charge-sweep kernel independently on every device and stays bit-exact
+# (tests/test_shard.py). Sharded replay shipped the same way: its ref is
+# the single-device repro.core.controller.replay and its parity gate is
+# tests/test_replay.py-style bit-exactness over the scan.

@@ -16,6 +16,14 @@ The invariants are computed with the *same* :mod:`repro.core.charge`
 functions the forward predicates call, then broadcast, flattened and
 padded to (8 × 128)-cell tiles. Padding cells carry benign invariants
 (1.0) and zero masks; their outputs are sliced away before returning.
+
+Sharding contract: this layer is mesh-oblivious. ``cells_eff`` leaves,
+``temp_c`` and any pattern axis broadcast to one common cell shape, and
+every output cell is computed independently — so
+:mod:`repro.core.shard` can ``shard_map`` the DIMM axis ABOVE this entry
+point and simply call it per shard (each shard tiles and pads its own
+block; results are bit-exact vs the unsharded call). Nothing here reads
+device state except :func:`default_interpret`'s backend probe.
 """
 
 from __future__ import annotations
@@ -196,7 +204,12 @@ def sweep_min_indices(
     ``cells_eff`` must carry the data-pattern factor already
     (:func:`repro.core.charge.apply_pattern`); its leaves, ``temp_c`` and
     any pattern axis broadcast together — the fleet engine passes the
-    whole (T, P, N) characterization grid as one call."""
+    whole (T, P, N) characterization grid as one call (under a mesh, the
+    (T, P, N/D) per-shard grid). Returns a :class:`SweepIndices` pair of
+    ``(broadcast_shape, 4)`` int32 stacks (``PARAM_NAMES`` columns).
+    ``impl`` selects ``"pallas"`` (fused kernel, default) or ``"ref"``
+    (pure-jnp oracle); ``interpret=None`` auto-enables interpret mode on
+    every backend except TPU."""
     if impl not in IMPLS:
         raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
     if impl == "ref":
@@ -220,6 +233,8 @@ def sweep_min_timings(
     impl: str = "pallas",
     interpret: bool | None = None,
 ) -> Tuple[Array, Array]:
-    """Both (…, 4) ns timing stacks (read-mode, write-mode) in one pass."""
+    """Both ``(…, 4)`` ns timing stacks (read-mode, write-mode) in one
+    pass — :func:`sweep_min_indices` mapped through the shared candidate
+    grids (same broadcast/shape/impl/interpret contract)."""
     idx = sweep_min_indices(cells_eff, temp_c, window_s, consts, impl, interpret)
     return ref.indices_to_ns(idx.read), ref.indices_to_ns(idx.write)

@@ -1,0 +1,118 @@
+"""Shape-disambiguation guard + the write-tRAS closed form vs the grid.
+
+Two review follow-ups pinned here:
+
+* ``perfmodel._with_access_axis(split=None)`` must REFUSE ambiguous
+  shapes — a trailing ``(2, 4)`` could be an access-type axis or a merged
+  stack whose leading axis (a 2-DIMM fleet, a 2-bin table) happens to
+  have extent 2 — instead of silently guessing "access axis" as it used
+  to. Unambiguous shapes still infer; explicit ``split`` always wins.
+* ``charge.min_tras_write`` (the closed-form inverse of ``write_ok``'s
+  restore-under-write phase) was shipped in PR 3 but never tested against
+  the grid search that actually programs tables. The forward predicate
+  carries an eps-sloped threshold the closed form does not, so the
+  cycle-quantized closed form may sit at most ONE cycle above the grid
+  minimum — never below it (it must remain a sufficient tRAS).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import charge, dimm, perfmodel
+from repro.core.timing import JEDEC_DDR3_1600, TCK_DDR3_1600_NS, TimingParams
+from repro.kernels.charge_sweep import ref
+
+
+# ---------------------------------------------------------------------------
+# _with_access_axis ambiguity guard
+# ---------------------------------------------------------------------------
+def test_ambiguous_trailing_2x4_refused():
+    for shape in ((2, 4), (3, 2, 4), (5, 7, 2, 4)):
+        with pytest.raises(ValueError, match="ambiguous"):
+            perfmodel._with_access_axis(jnp.zeros(shape))
+
+
+def test_explicit_split_disambiguates():
+    two_dimm_merged = jnp.full((2, 4), 30.0)
+    dup = perfmodel._with_access_axis(two_dimm_merged, split=False)
+    assert dup.shape == (2, 2, 4)
+    np.testing.assert_array_equal(np.asarray(dup[..., 0, :]),
+                                  np.asarray(dup[..., 1, :]))
+    split_stack = jnp.full((3, 2, 4), 30.0)
+    out = perfmodel._with_access_axis(split_stack, split=True)
+    assert out.shape == (3, 2, 4)
+
+
+def test_unambiguous_shapes_still_infer_merged():
+    for shape in ((4,), (3, 4), (5, 3, 4)):
+        out = perfmodel._with_access_axis(jnp.zeros(shape))
+        assert out.shape == shape[:-1] + (2, 4)
+    with pytest.raises(ValueError, match="4-axis"):
+        perfmodel._with_access_axis(jnp.zeros((3, 5)))
+
+
+def test_evaluate_stack_two_dimm_fleet_needs_explicit_split():
+    """The motivating case: a 2-DIMM merged fleet must not be silently
+    reinterpreted as one DIMM's (read, write) pair."""
+    stack = jnp.asarray([list(JEDEC_DDR3_1600)] * 2, jnp.float32)  # (2, 4)
+    with pytest.raises(ValueError, match="ambiguous"):
+        perfmodel.evaluate_stack(stack, perfmodel.SINGLE_CORE)
+    ipc = perfmodel.evaluate_stack(stack, perfmodel.SINGLE_CORE, split=False)
+    assert ipc.shape == (2, len(perfmodel.WORKLOADS))
+    # Unambiguous fleets keep the convenient no-kwarg call working.
+    sp = perfmodel.fleet_speedups(jnp.asarray([list(JEDEC_DDR3_1600)] * 3))
+    np.testing.assert_allclose(np.asarray(sp), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# min_tras_write closed form vs the programming grid search
+# ---------------------------------------------------------------------------
+def _population(n=48):
+    cells, _ = dimm.sample_population(
+        jax.random.PRNGKey(7), n_dimms=n, split=(n - 2 * (n // 3), n // 3, n // 3)
+    )
+    return cells
+
+
+@pytest.mark.parametrize("temp_c", [45.0, 55.0, 85.0])
+def test_min_tras_write_closed_form_matches_grid(temp_c):
+    cells = _population()
+    closed = charge.min_tras_write(cells, temp_c)
+    quantized = jnp.clip(
+        jnp.ceil(closed / TCK_DDR3_1600_NS) * TCK_DDR3_1600_NS,
+        TCK_DDR3_1600_NS,
+        JEDEC_DDR3_1600.tras,
+    )
+    grid = ref.min_safe_on_grid(
+        ref.write_ok_at(cells, "tras", temp_c), ref.param_grid("tras")
+    )
+    gap = np.asarray(quantized - grid)
+    # Never below the grid minimum (the closed form must stay sufficient)…
+    assert gap.min() >= -1e-5, gap.min()
+    # …and at most one cycle above it (the predicate's eps slack).
+    assert gap.max() <= TCK_DDR3_1600_NS + 1e-5, gap.max()
+    # Forward consistency: programming the quantized closed form passes
+    # the very predicate the profiler tests (others at JEDEC).
+    ok = charge.write_ok(
+        cells,
+        TimingParams(
+            trcd=JEDEC_DDR3_1600.trcd,
+            tras=quantized,
+            twr=JEDEC_DDR3_1600.twr,
+            trp=JEDEC_DDR3_1600.trp,
+        ),
+        temp_c,
+    )
+    assert bool(np.asarray(ok).all())
+
+
+def test_min_tras_write_below_read_mode():
+    """The overdriven write restore converges faster than the sense-amp
+    tail: write-mode tRAS must undercut read-mode tRAS everywhere."""
+    cells = _population()
+    for temp_c in (45.0, 55.0, 85.0):
+        w = np.asarray(charge.min_tras_write(cells, temp_c))
+        r = np.asarray(charge.min_tras(cells, temp_c))
+        assert (w <= r + 1e-5).all(), temp_c

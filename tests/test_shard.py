@@ -1,0 +1,213 @@
+"""Sharded fleet pipeline ≡ single-device, bit for bit.
+
+The DIMM-axis sharding layer (:mod:`repro.core.shard`) must be invisible
+in the results: ``fleet.sweep(mesh=...)``, ``controller.replay(mesh=...)``
+and the padding/mask machinery they share may change WHERE per-DIMM work
+runs, never WHAT it computes. These tests pin that contract:
+
+* sharded sweep (both impls) and sharded replay are BIT-EXACT against the
+  single-device path for random fleet sizes, including sizes that do not
+  divide the device count and fleets smaller than the mesh;
+* padding is edge replication (benign values), masks mark exactly the
+  real DIMMs, and the pad/slice helpers round-trip;
+* the gather-free ``trace_score(mesh=...)`` matches the single-device
+  score — counts exactly, float means to summation-order tolerance.
+
+On a single-device environment every test still runs (a 1-lane mesh goes
+through the same shard_map machinery); the CI multi-device job re-runs
+this module under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+where padding, masking and the cross-device psums are all non-trivial.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import controller, fleet, perfmodel, shard, traces
+from repro.core.charge import CellParams
+
+TEMPS = (45.0, 55.0, 85.0)
+N_MAX = 11  # covers non-divisible sizes for any device count in {1,2,4,8}
+
+#: Fleet sizes exercised by the parity properties: 1 (degenerate), sizes
+#: below typical CI device counts (< 8), the device-count boundary, and a
+#: prime that divides nothing.
+SIZES = (1, 3, 5, 8, 11)
+
+
+# Module-level lazy singletons (not pytest fixtures: the hypothesis
+# fallback's @given produces a zero-arg wrapper, so property tests cannot
+# take fixture arguments).
+@functools.lru_cache(maxsize=None)
+def _mesh():
+    return shard.fleet_mesh()
+
+
+@functools.lru_cache(maxsize=None)
+def _fleet_full():
+    return fleet.synthesize(jax.random.PRNGKey(0), N_MAX)
+
+
+@functools.lru_cache(maxsize=None)
+def _sweep_full():
+    return fleet.sweep(_fleet_full(), TEMPS, (1.0,))
+
+
+@functools.lru_cache(maxsize=None)
+def _table_full():
+    return _sweep_full().to_table()
+
+
+def _subfleet(n):
+    return _fleet_full().take(slice(0, n))
+
+
+def _sub_table(n):
+    t = _table_full()
+    return controller.DimmTimingTable(temp_bins=t.temp_bins, stack=t.stack[:n])
+
+
+# ---------------------------------------------------------------------------
+# Padding / mask helpers
+# ---------------------------------------------------------------------------
+def test_padded_size_properties():
+    for n in range(1, 14):
+        for shards in range(1, 6):
+            p = shard.padded_size(n, shards)
+            assert p >= n and p % shards == 0 and p - n < shards, (n, shards, p)
+    with pytest.raises(ValueError):
+        shard.padded_size(0, 4)
+    with pytest.raises(ValueError):
+        shard.padded_size(4, 0)
+
+
+def test_pad_dimm_edge_replication():
+    a = jnp.arange(15, dtype=jnp.float32).reshape(5, 3)
+    p = shard.pad_dimm(a, 8)
+    assert p.shape == (8, 3)
+    np.testing.assert_array_equal(np.asarray(p[:5]), np.asarray(a))
+    for i in (5, 6, 7):  # padding lanes are copies of the last real DIMM
+        np.testing.assert_array_equal(np.asarray(p[i]), np.asarray(a[4]))
+    # axis=1 (trace layout: DIMM axis second)
+    t = jnp.arange(12, dtype=jnp.float32).reshape(4, 3)
+    pt = shard.pad_dimm(t, 5, axis=1)
+    assert pt.shape == (4, 5)
+    np.testing.assert_array_equal(np.asarray(pt[:, 4]), np.asarray(t[:, 2]))
+    # whole pytrees pad leaf-wise
+    cells = CellParams(r=jnp.ones(3), c=jnp.arange(3.0), leak=jnp.full(3, 2.0))
+    pc = shard.pad_dimm(cells, 4)
+    assert pc.r.shape == (4,) and float(pc.c[3]) == float(cells.c[2])
+    # already-at-target passes through; beyond-target refuses
+    np.testing.assert_array_equal(np.asarray(shard.pad_dimm(a, 5)), np.asarray(a))
+    with pytest.raises(ValueError):
+        shard.pad_dimm(a, 4)
+
+
+def test_dimm_mask_and_slice_roundtrip():
+    mask = shard.dimm_mask(5, 8)
+    np.testing.assert_array_equal(np.asarray(mask), [True] * 5 + [False] * 3)
+    a = jnp.arange(8.0)
+    np.testing.assert_array_equal(
+        np.asarray(shard.slice_dimm(shard.pad_dimm(a, 8), 5)), np.asarray(a[:5])
+    )
+
+
+def test_mesh_axis_validation():
+    assert shard.n_shards(_mesh()) == jax.device_count()
+    from repro.launch.mesh import auto_mesh
+
+    wrong = auto_mesh((jax.device_count(),), ("data",))
+    with pytest.raises(ValueError, match="dimm"):
+        shard.n_shards(wrong)
+    with pytest.raises(ValueError):
+        shard.fleet_mesh(0)
+    with pytest.raises(ValueError, match="host_platform_device_count"):
+        shard.fleet_mesh(jax.device_count() + 1)
+
+
+# ---------------------------------------------------------------------------
+# Sharded sweep parity (bit-exact)
+# ---------------------------------------------------------------------------
+@settings(max_examples=len(SIZES), deadline=None)
+@given(st.sampled_from(SIZES))
+def test_sharded_sweep_bit_exact(n):
+    """Default (pallas) sweep: sharded == single-device, every stack,
+    including N < n_devices and non-divisible N."""
+    fl = _subfleet(n)
+    ref = fleet.sweep(fl, TEMPS, (1.0,))
+    shd = fleet.sweep(fl, TEMPS, (1.0,), mesh=_mesh())
+    for name in ("read", "write", "joint"):
+        a, b = np.asarray(getattr(ref, name)), np.asarray(getattr(shd, name))
+        assert a.shape == b.shape == (len(TEMPS), 1, n, 4)
+        np.testing.assert_array_equal(a, b, err_msg=f"{name} n={n}")
+
+
+def test_sharded_sweep_ref_impl_bit_exact():
+    """The pure-jnp oracle path shards identically (impl stays reachable)."""
+    fl = _subfleet(5)
+    ref = fleet.sweep(fl, TEMPS, (1.0,), impl="ref")
+    shd = fleet.sweep(fl, TEMPS, (1.0,), impl="ref", mesh=_mesh())
+    np.testing.assert_array_equal(np.asarray(ref.read), np.asarray(shd.read))
+    np.testing.assert_array_equal(np.asarray(ref.write), np.asarray(shd.write))
+
+
+def test_sharded_sweep_matches_table_pipeline():
+    """A sharded sweep feeds the controller table byte-identically."""
+    shd = fleet.sweep(_fleet_full(), TEMPS, (1.0,), mesh=_mesh())
+    assert shd.to_table() == _table_full()
+
+
+# ---------------------------------------------------------------------------
+# Sharded replay parity (bit-exact)
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(SIZES), st.sampled_from([0.0, 0.02]))
+def test_sharded_replay_bit_exact(n, error_rate):
+    table = _sub_table(n)
+    k_t, k_e = jax.random.split(jax.random.PRNGKey(n))
+    trace = traces.generate("diurnal", k_t, n, 96)
+    errors = traces.error_injections(k_e, 96, n, error_rate)
+    ref = controller.replay(table, trace, errors)
+    shd = controller.replay(table, trace, errors, mesh=_mesh())
+    np.testing.assert_array_equal(np.asarray(ref.timings), np.asarray(shd.timings))
+    np.testing.assert_array_equal(np.asarray(ref.bin_idx), np.asarray(shd.bin_idx))
+    np.testing.assert_array_equal(np.asarray(ref.switched), np.asarray(shd.switched))
+    np.testing.assert_array_equal(np.asarray(ref.fused), np.asarray(shd.fused))
+    for leaf_ref, leaf_shd in zip(ref.state, shd.state):
+        np.testing.assert_array_equal(np.asarray(leaf_ref), np.asarray(leaf_shd))
+
+
+def test_sharded_replay_beyond_last_bin():
+    """The JEDEC beyond-last-bin sentinel survives sharding (hvac ramp)."""
+    n = 7
+    table = _sub_table(n)
+    trace = traces.generate("hvac_failure", jax.random.PRNGKey(3), n, 128)
+    ref = controller.replay(table, trace)
+    shd = controller.replay(table, trace, mesh=_mesh())
+    assert int(np.asarray(ref.bin_idx).max()) == table.n_bins  # sentinel hit
+    np.testing.assert_array_equal(np.asarray(ref.bin_idx), np.asarray(shd.bin_idx))
+    np.testing.assert_array_equal(np.asarray(ref.timings), np.asarray(shd.timings))
+
+
+# ---------------------------------------------------------------------------
+# Gather-free sharded trace scoring
+# ---------------------------------------------------------------------------
+@settings(max_examples=3, deadline=None)
+@given(st.sampled_from((1, 5, 11)))
+def test_sharded_trace_score_matches(n):
+    table = _sub_table(n)
+    trace = traces.generate("diurnal", jax.random.PRNGKey(n), n, 96)
+    res = controller.replay(table, trace)
+    s0 = perfmodel.trace_score(table.stack, res)
+    s1 = perfmodel.trace_score(table.stack, res, mesh=_mesh())
+    assert set(s0) == set(s1)
+    # Integer-valued quantities are exact across the psum.
+    for k in ("switches_total", "tras_below_jedec_coolest_frac"):
+        assert s0[k] == s1[k], k
+    # Float means may differ only by cross-shard summation order.
+    for k in s0:
+        assert np.isclose(s0[k], s1[k], rtol=1e-5, atol=1e-6), (k, s0[k], s1[k])
