@@ -1,0 +1,30 @@
+"""Fleet-controller service example: stream observations, read decisions.
+
+  PYTHONPATH=src python examples/serve_fleet.py [--n-dimms 64] [--sharded]
+
+Boots a synthetic fleet's timing registers, then feeds a day of diurnal
+telemetry through the streaming controller service chunk by chunk —
+per-access timing decisions come back per chunk, the running realized
+speedup is available at every point, and the service never holds more
+than O(n_dimms) state regardless of stream length.
+"""
+
+import argparse
+
+from repro.launch.serve_fleet import serve
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-dimms", type=int, default=64)
+    ap.add_argument("--n-steps", type=int, default=720)
+    ap.add_argument("--chunk", type=int, default=96)
+    ap.add_argument("--scenario", default="diurnal")
+    ap.add_argument("--error-rate", type=float, default=0.002)
+    ap.add_argument("--sharded", action="store_true")
+    args = ap.parse_args()
+    score = serve(
+        n_dimms=args.n_dimms, n_steps=args.n_steps, chunk=args.chunk,
+        scenario=args.scenario, error_rate=args.error_rate,
+        decisions=True, sharded=args.sharded,
+    )
+    print(f"speedup vs paper claim: {score['speedup_vs_claim'] * 100:+.2f} pp")

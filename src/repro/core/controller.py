@@ -44,7 +44,11 @@ Because every per-DIMM register is one column of a struct-of-arrays
 pytree, :func:`replay` also runs distributed: pass ``mesh=`` to shard the
 DIMM axis over a device mesh (:mod:`repro.core.shard`) — state, table
 stack and replay outputs stay partitioned, and results remain bit-exact
-vs the single-device scan.
+vs the single-device scan. For streams longer than device memory,
+:func:`replay_stream` (:mod:`repro.core.stream`) runs the SAME transition
+kernel in chunked scans that carry only the state pytree plus running
+score partials — final state, switch counts and score stay bit-exact vs
+:func:`replay` for every chunking.
 """
 
 from __future__ import annotations
@@ -509,6 +513,23 @@ def replay(
     return ReplayResult(rows, eff, switched, fused, final)
 
 
+def replay_stream(table, traces, errors=None, params=ControllerParams(),
+                  state=None, chunk_steps=None, mesh=None):
+    """Streamed (chunked-scan) replay: same state machine, O(n_dimms ·
+    chunk) device memory, no materialized history. Lazy delegate to
+    :func:`repro.core.stream.replay_stream` (stream imports this module,
+    so the import cannot be top-level); see there for the full contract —
+    final state, switch counts and score are bit-exact vs :func:`replay`
+    + ``trace_score`` for every chunking."""
+    from repro.core import stream as _stream
+
+    kwargs = {} if chunk_steps is None else {"chunk_steps": chunk_steps}
+    return _stream.replay_stream(
+        table, traces, errors=errors, params=params, state=state,
+        mesh=mesh, **kwargs,
+    )
+
+
 @functools.lru_cache(maxsize=32)
 def _sharded_replay_runner(mesh, n_dimms: int):
     """Cached (pad → shard_map → slice) wrapper around the replay scan:
@@ -627,4 +648,22 @@ class ALDRAMController:
         self.switch_count += result.total_switches
         if errors is not None:
             self.fallback_count += int(np.asarray(errors, bool).sum())
+        return result
+
+    def replay_stream(self, traces, errors=None, chunk_steps=None, mesh=None):
+        """Advance this controller over a temperature STREAM in chunked
+        scans — identical state/counter absorption to :meth:`replay`
+        (property-tested equal), but O(n_dimms · chunk) device memory and
+        no materialized history: ``traces`` may be a ``(n_steps,
+        n_dimms)`` array or any iterable of ``(temps_chunk, errors_chunk)``
+        pairs longer than memory allows. Returns a
+        :class:`repro.core.stream.StreamResult` (``.score()`` gives the
+        bit-exact ``trace_score`` dict)."""
+        result = replay_stream(
+            self.table, traces, errors=errors, params=self.params,
+            state=self.state(), chunk_steps=chunk_steps, mesh=mesh,
+        )
+        self.load_state(result.state)
+        self.switch_count += result.total_switches
+        self.fallback_count += result.errors_total
         return result

@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -159,7 +159,10 @@ def access_latency_ns(
     ``t`` — the merged single-register-file behaviour, to which this
     reduces exactly when the sets coincide). Reads are bound by
     tRCD/tRAS/tRP of the read set; write requests take their tRCD/tRP from
-    the write set and expose its tWR through the turnaround recovery."""
+    the write set, expose its tWR through the turnaround recovery, and —
+    like :func:`miss_service_ns`'s ``occ_write`` — are bound by the WRITE
+    set's tRAS residual when their row cycle is still open (the write
+    set's restore-under-write tRAS, not the read set's)."""
     tw = t if t_write is None else t_write
     h = f["row_hit"]
     wf = f["write_frac"]
@@ -170,7 +173,9 @@ def access_latency_ns(
     trp_eff = (1.0 - wf) * t.trp + wf * tw.trp
     t_hit = TCL_NS + TBURST_NS
     t_empty = trcd_eff + TCL_NS + TBURST_NS
-    ras_extra = cfg.ras_residual * jnp.maximum(t.tras - (t.trcd + TCL_NS + TBURST_NS), 0.0)
+    ras_read = jnp.maximum(t.tras - (t.trcd + TCL_NS + TBURST_NS), 0.0)
+    ras_write = jnp.maximum(tw.tras - (tw.trcd + TCL_NS + TBURST_NS), 0.0)
+    ras_extra = cfg.ras_residual * ((1.0 - wf) * ras_read + wf * ras_write)
     wr_extra = cfg.wr_turnaround * wf * tw.twr
     t_conf = trp_eff + trcd_eff + TCL_NS + TBURST_NS + ras_extra + wr_extra
     return h * t_hit + empty * t_empty + conflict * t_conf + cfg.ctrl_overhead_ns
@@ -412,6 +417,179 @@ def realized_latency_reductions(timings: Array) -> Dict[str, Array]:
     }
 
 
+class ScorePartials(NamedTuple):
+    """Running trace-score accumulators over the step axis (a jax pytree).
+
+    These are the mask-weighted per-DIMM partials every ``trace_score``
+    path reduces — and the ONLY thing a streaming replay
+    (:mod:`repro.core.stream`) has to carry to score a trace: no
+    materialized ``(n_steps, ...)`` history is ever needed.
+
+    * ``occupancy`` — ``(n_dimms, n_bins + 1)`` int32 step counts per
+      effective bin (last column = the beyond-last-bin JEDEC sentinel).
+      Integer, hence exact under any accumulation order.
+    * ``switches`` — ``(n_dimms,)`` int32 timing-set switch counts. Exact.
+    * ``timing_sums`` — ``(n_dimms, 2, 4)`` float32 sums of the realized
+      per-access timing rows (ns; axes = ``ACCESS_TYPES`` ×
+      ``PARAM_NAMES``). Realized timings are cycle-quantized — multiples
+      of tCK = 1.25 ns, itself exact in float32 — so these sums are EXACT
+      (independent of chunking / accumulation order) as long as
+      ``n_steps · max_timing < 2²⁴ · 1.25 ns``, i.e. ~600k steps at JEDEC
+      tRAS: a week of minute-cadence telemetry per accumulator. This
+      exactness is what makes streamed scores bit-identical to
+      materialized ones.
+    * ``n_steps`` — ``()`` int32 observations absorbed so far.
+    """
+
+    occupancy: Array    # (N, B+1) int32
+    switches: Array     # (N,) int32
+    timing_sums: Array  # (N, 2, 4) float32 ns
+    n_steps: Array      # () int32
+
+
+def trace_score_init(n_dimms: int, n_bins: int) -> ScorePartials:
+    """Zeroed accumulators for an ``n_dimms``-DIMM, ``n_bins``-bin fleet."""
+    return ScorePartials(
+        occupancy=jnp.zeros((n_dimms, n_bins + 1), jnp.int32),
+        switches=jnp.zeros((n_dimms,), jnp.int32),
+        timing_sums=jnp.zeros(
+            (n_dimms, len(ACCESS_TYPES), len(PARAM_NAMES)), jnp.float32
+        ),
+        n_steps=jnp.zeros((), jnp.int32),
+    )
+
+
+def trace_score_accumulate(
+    partials: ScorePartials,
+    timings: Array,
+    bin_idx: Array,
+    switched: Array,
+) -> ScorePartials:
+    """Absorb a ``(chunk, n_dimms, 2, 4)`` block of replay outputs
+    (legacy merged ``(chunk, n_dimms, 4)`` rows are duplicated).
+
+    Pure and jit/scan-safe: the streaming replay calls this inside its
+    ``lax.scan`` carry with ``chunk = 1`` slices, chunked callers once per
+    chunk, and the materialized :func:`trace_score` once with the whole
+    trace — by the exactness notes on :class:`ScorePartials`, all
+    chunkings produce bit-identical partials."""
+    timings = jnp.asarray(timings, jnp.float32)
+    timings = _with_access_axis(timings, split=(timings.ndim == 4))
+    n_bins1 = partials.occupancy.shape[-1]
+    occ = (bin_idx[:, :, None] == jnp.arange(n_bins1)).sum(axis=0)
+    return ScorePartials(
+        occupancy=partials.occupancy + occ.astype(jnp.int32),
+        switches=partials.switches + switched.sum(axis=0).astype(jnp.int32),
+        timing_sums=partials.timing_sums + timings.sum(axis=0),
+        n_steps=partials.n_steps + timings.shape[0],
+    )
+
+
+def _score_figures(
+    partials: ScorePartials,
+    stack: Array,
+    cfg: SystemConfig,
+    workloads: Tuple[Workload, ...],
+):
+    """Per-DIMM score figures from partials — the shared core of every
+    ``trace_score`` path (single-device, shard-local, streamed finalize).
+
+    Returns ``(occ (N, B+1) fractions, red dict, realized (N,),
+    realized_mem (N,), tras_flags (N,))``. IPC is evaluated once per
+    unique (DIMM, bin) register block and weighted by time-in-bin, so a
+    10⁷-transition day costs the same as a minute."""
+    n_steps = partials.n_steps.astype(jnp.float32)
+    occ = partials.occupancy.astype(jnp.float32) / n_steps       # (N, B+1)
+    sums = partials.timing_sums                                  # (N, 2, 4)
+    mean_rows = sums / n_steps
+    rs, ws = mean_rows[:, 0, :], mean_rows[:, 1, :]
+    read_mean = (sums[:, 0, 0] + sums[:, 0, 1] + sums[:, 0, 3]) / n_steps
+    write_mean = (sums[:, 1, 0] + sums[:, 1, 2] + sums[:, 1, 3]) / n_steps
+    jedec = jnp.asarray(list(JEDEC_DDR3_1600), jnp.float32)
+    red = {
+        "read": 1.0 - read_mean / JEDEC_DDR3_1600.read_sum,
+        "write": 1.0 - write_mean / JEDEC_DDR3_1600.write_sum,
+        "read_params": 1.0 - rs / jedec,
+        "write_params": 1.0 - ws / jedec,
+    }
+    jedec_rows = jnp.broadcast_to(jedec, (stack.shape[0], 1, 2, 4))
+    rows = jnp.concatenate([stack, jedec_rows], axis=1)          # (N, B+1, 2, 4)
+    sp = fleet_speedups(rows, cfg, workloads, split=True)        # (N, B+1)
+    sp_mem = fleet_speedups(rows, cfg, MEM_INTENSIVE_WORKLOADS, split=True)
+    realized = (occ * sp).sum(axis=-1)                           # (N,)
+    realized_mem = (occ * sp_mem).sum(axis=-1)
+    # Fraction of DIMMs whose *programmed* read-set tRAS sits below JEDEC
+    # in the coolest bin — 1.0 unless a merge bug reappears.
+    tras_flags = (
+        stack[:, 0, 0, 1] < JEDEC_DDR3_1600.tras - 1e-6
+    ).astype(jnp.float32)
+    return occ, red, realized, realized_mem, tras_flags
+
+
+def trace_score_finalize(
+    partials: ScorePartials,
+    stack: Array,
+    cfg: SystemConfig = MULTI_CORE,
+    claim: float = PAPER_CLAIM_SPEEDUP,
+    workloads: Tuple[Workload, ...] = WORKLOADS,
+    mesh=None,
+) -> Dict[str, float]:
+    """Final score dict from accumulated partials + the table's registers.
+
+    Produces exactly the :func:`trace_score` dict — ``trace_score`` is
+    ``init → accumulate(whole trace) → finalize``, and a streamed replay's
+    chunk-wise partials are bit-identical (see :class:`ScorePartials`), so
+    streamed and materialized scores agree bitwise. ``mesh`` runs the
+    per-DIMM finalize work gather-free over the ``"dimm"`` axis with
+    mask-weighted psums, composing with a streamed ``replay_stream(mesh=)``
+    whose partials stayed device-sharded."""
+    stack = jnp.asarray(stack, jnp.float32)
+    stack = _with_access_axis(stack, split=(stack.ndim == 4))    # (N, B, 2, 4)
+    n_dimms, n_bins = stack.shape[0], stack.shape[1]
+    if partials.occupancy.shape != (n_dimms, n_bins + 1):
+        raise ValueError(
+            f"partials occupancy shape {partials.occupancy.shape} does not "
+            f"match a {n_dimms}-DIMM, {n_bins}-bin table"
+        )
+    n_steps = int(partials.n_steps)
+    if n_steps <= 0:
+        raise ValueError("cannot finalize a score over zero observations")
+    if mesh is not None:
+        from repro.core import shard
+
+        mask = shard.dimm_mask(
+            n_dimms, shard.padded_size(n_dimms, shard.n_shards(mesh))
+        )
+        run = _sharded_finalize_runner(mesh, n_dimms, n_bins, cfg, workloads)
+        sums = run(partials.occupancy, partials.switches,
+                   partials.timing_sums, partials.n_steps, stack, mask)
+        return _score_dict_from_sums(sums, n_dimms, n_steps, claim)
+    occ, red, realized, realized_mem, tras_flags = _score_figures(
+        partials, stack, cfg, workloads
+    )
+    out = {
+        "read_reduction_mean": float(red["read"].mean()),
+        "write_reduction_mean": float(red["write"].mean()),
+        "speedup_realized_mean": float(realized.mean() - 1.0),
+        "speedup_realized_min": float(realized.min() - 1.0),
+        "speedup_realized_intensive_mean": float(realized_mem.mean() - 1.0),
+        # Degradation vs the paper's headline, on the claim's own cohort.
+        "speedup_vs_claim": float(realized_mem.mean() - 1.0) - claim,
+        "switches_total": float(partials.switches.sum()),
+        "switches_per_dimm_mean": float(partials.switches.mean()),
+        "switches_per_kstep": float(partials.switches.sum())
+        / (n_steps * n_dimms / 1000.0),
+        "time_at_jedec_frac": float(occ[:, n_bins].mean()),
+        "time_in_coolest_bin_frac": float(occ[:, 0].mean()),
+        "tras_below_jedec_coolest_frac": float(tras_flags.mean()),
+    }
+    for access in ACCESS_TYPES:
+        per = red[f"{access}_params"]                            # (N, 4)
+        for pi, param in enumerate(PARAM_NAMES):
+            out[f"{access}_{param}_reduction_mean"] = float(per[:, pi].mean())
+    return out
+
+
 def trace_score(
     stack: Array,
     replay,
@@ -426,26 +604,26 @@ def trace_score(
     ``stack`` is the table's ``(n_dimms, n_bins, 2, 4)`` per-access-type
     timing registers (a legacy merged ``(n_dimms, n_bins, 4)`` stack is
     duplicated); ``replay`` a :class:`repro.core.controller.ReplayResult`
-    (duck-typed: ``timings``, ``bin_idx``, ``switched``). The performance
-    figure is occupancy-weighted: IPC is evaluated once per *unique*
-    (DIMM, bin) register block — n_dimms × (n_bins+1) evaluations — then
-    weighted by time-in-bin, so scoring a 10⁷-transition day costs the
-    same as scoring a minute. Alongside the Fig. 2 sum reductions, the
-    per-parameter realized reductions of each access-type set are
-    reported as ``{access}_{param}_reduction_mean`` (the per-access-type
-    register sets are the whole point — tRAS must show up reduced in the
-    read set, not pinned at JEDEC by a merge).
+    (duck-typed: ``timings``, ``bin_idx``, ``switched``). Internally this
+    is the partial-accumulate/finalize split — :func:`trace_score_init` →
+    :func:`trace_score_accumulate` (the whole trace as one chunk) →
+    :func:`trace_score_finalize` — the same accumulators a streaming
+    replay carries, so streamed scores match this bitwise. Alongside the
+    Fig. 2 sum reductions, the per-parameter realized reductions of each
+    access-type set are reported as ``{access}_{param}_reduction_mean``
+    (the per-access-type register sets are the whole point — tRAS must
+    show up reduced in the read set, not pinned at JEDEC by a merge).
 
     ``mesh`` — optional 1-D ``"dimm"`` mesh
     (:func:`repro.core.shard.fleet_mesh`): scoring then runs GATHER-FREE.
     Stack and replay outputs stay partitioned over the DIMM axis (pass the
-    arrays of a ``replay(mesh=...)`` straight in); every reported figure —
-    per-bin occupancy, switch counts, realized reductions, realized
-    speedups — is computed as mask-weighted local partials combined with
-    ``psum`` / ``pmin``, so no per-DIMM array is ever gathered to one
-    device. Counts and integer-valued sums are exact; float means can
-    differ from ``mesh=None`` only by cross-shard summation order
-    (tested to ~1e-5 relative)."""
+    arrays of a ``replay(mesh=...)`` straight in); each shard accumulates
+    its block's :class:`ScorePartials` locally and contributes
+    mask-weighted partial sums combined with ``psum`` / ``pmin``, so no
+    per-DIMM array is ever gathered to one device. Counts and
+    integer-valued sums are exact; float means can differ from
+    ``mesh=None`` only by cross-shard summation order (tested to ~1e-5
+    relative)."""
     stack = jnp.asarray(stack, jnp.float32)
     # Fixed-rank input: rank 4 = (N, B, 2, 4) split registers, rank 3 =
     # legacy merged (N, B, 4) — decided by rank, never by axis extent.
@@ -453,77 +631,61 @@ def trace_score(
     if mesh is not None:
         return _trace_score_sharded(stack, replay, cfg, claim, workloads, mesh)
     n_dimms, n_bins = stack.shape[0], stack.shape[1]
-    occ = time_in_bin(replay.bin_idx, n_bins)                    # (N, B+1)
-    red = realized_latency_reductions(replay.timings)
-    jedec_rows = jnp.broadcast_to(
-        jnp.asarray(list(JEDEC_DDR3_1600), jnp.float32), (n_dimms, 1, 2, 4)
+    partials = trace_score_accumulate(
+        trace_score_init(n_dimms, n_bins),
+        replay.timings,
+        jnp.asarray(replay.bin_idx),
+        jnp.asarray(replay.switched),
     )
-    rows = jnp.concatenate([stack, jedec_rows], axis=1)          # (N, B+1, 2, 4)
-    sp = fleet_speedups(rows, cfg, workloads, split=True)        # (N, B+1)
-    sp_mem = fleet_speedups(rows, cfg, MEM_INTENSIVE_WORKLOADS, split=True)
-    realized = (occ * sp).sum(axis=-1)                           # (N,)
-    realized_mem = (occ * sp_mem).sum(axis=-1)
-    switches = replay.switched.sum(axis=0)
-    n_steps = replay.bin_idx.shape[0]
-    out = {
-        "read_reduction_mean": float(red["read"].mean()),
-        "write_reduction_mean": float(red["write"].mean()),
-        "speedup_realized_mean": float(realized.mean() - 1.0),
-        "speedup_realized_min": float(realized.min() - 1.0),
-        "speedup_realized_intensive_mean": float(realized_mem.mean() - 1.0),
-        # Degradation vs the paper's headline, on the claim's own cohort.
-        "speedup_vs_claim": float(realized_mem.mean() - 1.0) - claim,
-        "switches_total": float(replay.switched.sum()),
-        "switches_per_dimm_mean": float(switches.mean()),
-        "switches_per_kstep": float(replay.switched.sum())
-        / (n_steps * n_dimms / 1000.0),
-        "time_at_jedec_frac": float(occ[:, n_bins].mean()),
-        "time_in_coolest_bin_frac": float(occ[:, 0].mean()),
-        # Fraction of DIMMs whose *programmed* read-set tRAS sits below
-        # JEDEC in the coolest bin — 1.0 unless a merge bug reappears.
-        "tras_below_jedec_coolest_frac": float(
-            (stack[:, 0, 0, 1] < JEDEC_DDR3_1600.tras - 1e-6).mean()
-        ),
-    }
-    for access in ACCESS_TYPES:
-        per = red[f"{access}_params"]                            # (N, 4)
-        for pi, param in enumerate(PARAM_NAMES):
-            out[f"{access}_{param}_reduction_mean"] = float(per[:, pi].mean())
-    return out
+    return trace_score_finalize(partials, stack, cfg, claim, workloads)
 
 
-def _trace_score_sharded(
-    stack: Array,
-    replay,
+def _psum_score_partials(
+    partials: ScorePartials,
+    stack_l: Array,
+    mask_l: Array,
     cfg: SystemConfig,
-    claim: float,
     workloads: Tuple[Workload, ...],
-    mesh,
-) -> Dict[str, float]:
-    """Gather-free :func:`trace_score`: local partials + psum over the
-    ``"dimm"`` mesh axis.
-
-    Each shard scores its own block of DIMMs exactly like the
-    single-device path (occupancy, realized reductions, occupancy-weighted
-    speedups — all per-DIMM quantities), masks out padding lanes, and
-    contributes mask-weighted partial sums (and a ``pmin`` for the fleet
-    minimum). Only O(1) scalars cross devices."""
+) -> Tuple:
+    """Shard-local score figures → mask-weighted cross-device sums (the
+    body both sharded entry points run under ``shard_map``)."""
     from repro.core import shard
 
-    n_dimms, n_bins = stack.shape[0], stack.shape[1]
-    n_steps = replay.bin_idx.shape[0]
-    timings = jnp.asarray(replay.timings, jnp.float32)
-    timings = _with_access_axis(timings, split=(timings.ndim == 4))
-    bin_idx = jnp.asarray(replay.bin_idx)
-    switched = jnp.asarray(replay.switched)
-    # Pre-padded validity mask: padding lanes (edge-replicated DIMMs) must
-    # weigh zero in every reduction, so the mask is built at padded length
-    # here rather than letting pad_dimm edge-replicate a True.
-    mask = shard.dimm_mask(n_dimms, shard.padded_size(n_dimms, shard.n_shards(mesh)))
-    run = _sharded_score_runner(mesh, n_dimms, n_bins, cfg, workloads)
+    n_bins = stack_l.shape[1]
+    m = mask_l.astype(jnp.float32)
+    occ, red, realized, realized_mem, tras_flags = _score_figures(
+        partials, stack_l, cfg, workloads
+    )
+
+    def tot(x):
+        return shard.psum(jnp.sum(x * m))
+
+    per_access = tuple(
+        shard.psum(jnp.sum(red[f"{a}_params"] * m[:, None], axis=0))
+        for a in ACCESS_TYPES
+    )
+    return (
+        tot(red["read"]),
+        tot(red["write"]),
+        tot(realized),
+        tot(realized_mem),
+        shard.pmin(jnp.min(jnp.where(mask_l, realized, jnp.inf))),
+        # Switch COUNT stays integer through the psum: a float32
+        # accumulator would lose exactness above 2^24 switches, i.e.
+        # exactly at the fleet scales this layer exists for.
+        shard.psum(jnp.sum(jnp.where(mask_l, partials.switches, 0))),
+        tot(occ[:, n_bins]),
+        tot(occ[:, 0]),
+        tot(tras_flags),
+    ) + per_access
+
+
+def _score_dict_from_sums(
+    sums: Tuple, n_dimms: int, n_steps: int, claim: float
+) -> Dict[str, float]:
+    """Assemble the score dict from the 11 psum'd cross-shard sums."""
     (s_read, s_write, s_real, s_real_mem, real_min, s_switch,
-     s_jedec, s_cool, s_tras, s_read_params, s_write_params) = run(
-        stack, timings, bin_idx, switched, mask)
+     s_jedec, s_cool, s_tras, s_read_params, s_write_params) = sums
     n = float(n_dimms)
     out = {
         "read_reduction_mean": float(s_read) / n,
@@ -539,64 +701,80 @@ def _trace_score_sharded(
         "time_in_coolest_bin_frac": float(s_cool) / n,
         "tras_below_jedec_coolest_frac": float(s_tras) / n,
     }
-    for access, sums in zip(ACCESS_TYPES, (s_read_params, s_write_params)):
-        arr = np.asarray(sums)
+    for access, sums_a in zip(ACCESS_TYPES, (s_read_params, s_write_params)):
+        arr = np.asarray(sums_a)
         for pi, param in enumerate(PARAM_NAMES):
             out[f"{access}_{param}_reduction_mean"] = float(arr[pi]) / n
     return out
 
 
+def _trace_score_sharded(
+    stack: Array,
+    replay,
+    cfg: SystemConfig,
+    claim: float,
+    workloads: Tuple[Workload, ...],
+    mesh,
+) -> Dict[str, float]:
+    """Gather-free :func:`trace_score`: each shard accumulates its block's
+    :class:`ScorePartials` locally (full step axis, its slice of DIMMs),
+    then the SAME sharded finalize the streamed path uses
+    (:func:`trace_score_finalize` with ``mesh=``) masks out padding lanes
+    and combines mask-weighted partial sums (and a ``pmin`` for the fleet
+    minimum). Only O(1) scalars cross devices — and because accumulate and
+    finalize are the identical compiled programs a chunked
+    :func:`repro.core.stream.replay_stream` runs, streamed and
+    materialized sharded scores agree BITWISE (not just to tolerance)."""
+    n_dimms, n_bins = stack.shape[0], stack.shape[1]
+    timings = jnp.asarray(replay.timings, jnp.float32)
+    timings = _with_access_axis(timings, split=(timings.ndim == 4))
+    run = _sharded_accumulate_runner(mesh, n_dimms, n_bins)
+    partials = ScorePartials(*run(
+        timings, jnp.asarray(replay.bin_idx), jnp.asarray(replay.switched)
+    ))
+    return trace_score_finalize(partials, stack, cfg, claim, workloads, mesh=mesh)
+
+
 @functools.lru_cache(maxsize=16)
-def _sharded_score_runner(
+def _sharded_accumulate_runner(mesh, n_dimms: int, n_bins: int):
+    """Cached sharded whole-trace partial accumulation: each shard sums its
+    DIMM block's replay outputs into :class:`ScorePartials` leaves (the
+    per-shard sums are exact — see the class notes — so chunking and
+    sharding both commute with accumulation)."""
+    from repro.core import shard
+
+    def local(timings_l, bin_l, switched_l):
+        return tuple(trace_score_accumulate(
+            trace_score_init(timings_l.shape[1], n_bins),
+            timings_l, bin_l, switched_l,
+        ))
+
+    return shard.sharded_dimm_map(
+        local, mesh, in_axes=(1, 1, 1), out_axes=(0, 0, 0, None),
+        n_dimms=n_dimms,
+    )
+
+
+@functools.lru_cache(maxsize=16)
+def _sharded_finalize_runner(
     mesh,
     n_dimms: int,
     n_bins: int,
     cfg: SystemConfig,
     workloads: Tuple[Workload, ...],
 ):
-    """Cached (pad → shard_map → slice) wrapper around the local scoring
-    partials: repeated sharded scores of the same configuration hit the
-    jit cache instead of re-tracing the IPC bisection."""
+    """Cached gather-free finalize for already-accumulated partials (the
+    streamed path: :func:`trace_score_finalize` with ``mesh=``). Same
+    shard-local body as the materialized sharded scorer, so a streamed
+    score over the same mesh is bit-identical to the materialized one."""
     from repro.core import shard
 
-    def local(stack_l, timings_l, bin_l, switched_l, mask_l):
-        m = mask_l.astype(jnp.float32)
-        occ = time_in_bin(bin_l, n_bins)                         # (n_loc, B+1)
-        red = realized_latency_reductions(timings_l)
-        jedec_rows = jnp.broadcast_to(
-            jnp.asarray(list(JEDEC_DDR3_1600), jnp.float32),
-            (stack_l.shape[0], 1, 2, 4),
-        )
-        rows = jnp.concatenate([stack_l, jedec_rows], axis=1)    # (n_loc, B+1, 2, 4)
-        sp = fleet_speedups(rows, cfg, workloads, split=True)
-        sp_mem = fleet_speedups(rows, cfg, MEM_INTENSIVE_WORKLOADS, split=True)
-        realized = (occ * sp).sum(axis=-1)                       # (n_loc,)
-        realized_mem = (occ * sp_mem).sum(axis=-1)
-
-        def tot(x):
-            return shard.psum(jnp.sum(x * m))
-
-        per_access = tuple(
-            shard.psum(jnp.sum(red[f"{a}_params"] * m[:, None], axis=0))
-            for a in ACCESS_TYPES
-        )
-        return (
-            tot(red["read"]),
-            tot(red["write"]),
-            tot(realized),
-            tot(realized_mem),
-            shard.pmin(jnp.min(jnp.where(mask_l, realized, jnp.inf))),
-            # Switch COUNT stays integer through the psum: a float32
-            # accumulator would lose exactness above 2^24 switches, i.e.
-            # exactly at the fleet scales this layer exists for.
-            shard.psum(jnp.sum((switched_l & mask_l[None, :]).astype(jnp.int32))),
-            tot(occ[:, n_bins]),
-            tot(occ[:, 0]),
-            tot((stack_l[:, 0, 0, 1] < JEDEC_DDR3_1600.tras - 1e-6).astype(jnp.float32)),
-        ) + per_access
+    def local(occ_l, switches_l, timing_sums_l, n_steps, stack_l, mask_l):
+        partials = ScorePartials(occ_l, switches_l, timing_sums_l, n_steps)
+        return _psum_score_partials(partials, stack_l, mask_l, cfg, workloads)
 
     return shard.sharded_dimm_map(
-        local, mesh, in_axes=(0, 1, 1, 1, 0), out_axes=(None,) * 11,
+        local, mesh, in_axes=(0, 0, 0, None, 0, 0), out_axes=(None,) * 11,
         n_dimms=n_dimms,
     )
 

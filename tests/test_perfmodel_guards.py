@@ -67,6 +67,64 @@ def test_evaluate_stack_two_dimm_fleet_needs_explicit_split():
 
 
 # ---------------------------------------------------------------------------
+# Which register set's tRAS binds a conflict (split-set consistency)
+# ---------------------------------------------------------------------------
+def _feat(row_hit, write_frac):
+    return {
+        "row_hit": jnp.asarray([row_hit], jnp.float32),
+        "write_frac": jnp.asarray([write_frac], jnp.float32),
+    }
+
+
+def _with_tras(t, tras):
+    return TimingParams(trcd=t.trcd, tras=tras, twr=t.twr, trp=t.trp)
+
+
+def test_conflict_tras_binds_by_access_type():
+    """``access_latency_ns`` must charge each access type's conflicts the
+    tRAS residual of ITS OWN register set — the same binding
+    ``miss_service_ns`` uses (``occ_write``). Historically write-fraction
+    conflicts were charged the READ set's residual, silently taxing
+    writes with margin the write set had already shed."""
+    cfg = perfmodel.MULTI_CORE
+    t_read = _with_tras(JEDEC_DDR3_1600, 35.0)    # residual 2.5 ns
+    t_write = _with_tras(JEDEC_DDR3_1600, 27.5)   # residual 0 (< 32.5 ns)
+    writes = _feat(0.3, 1.0)
+    reads = _feat(0.3, 0.0)
+
+    # Pure-write conflicts: the READ set's tRAS must be inert...
+    lat = perfmodel.access_latency_ns(t_read, writes, cfg, t_write=t_write)
+    lat_read_relaxed = perfmodel.access_latency_ns(
+        _with_tras(t_read, 27.5), writes, cfg, t_write=t_write
+    )
+    np.testing.assert_array_equal(np.asarray(lat), np.asarray(lat_read_relaxed))
+    # ...and the WRITE set's tRAS must bind.
+    lat_write_hot = perfmodel.access_latency_ns(
+        t_read, writes, cfg, t_write=_with_tras(t_write, 35.0)
+    )
+    assert float(lat_write_hot[0]) > float(lat[0])
+
+    # Pure-read conflicts: the converse.
+    lat_r = perfmodel.access_latency_ns(t_read, reads, cfg, t_write=t_write)
+    lat_write_irrelevant = perfmodel.access_latency_ns(
+        t_read, reads, cfg, t_write=_with_tras(t_write, 35.0)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(lat_r), np.asarray(lat_write_irrelevant)
+    )
+    lat_read_hot = perfmodel.access_latency_ns(
+        _with_tras(t_read, 37.5), reads, cfg, t_write=t_write
+    )
+    assert float(lat_read_hot[0]) > float(lat_r[0])
+
+    # Coinciding sets reduce exactly to the merged single-register file.
+    for f in (writes, reads, _feat(0.4, 0.35)):
+        merged = perfmodel.access_latency_ns(t_read, f, cfg)
+        split_same = perfmodel.access_latency_ns(t_read, f, cfg, t_write=t_read)
+        np.testing.assert_array_equal(np.asarray(merged), np.asarray(split_same))
+
+
+# ---------------------------------------------------------------------------
 # min_tras_write closed form vs the programming grid search
 # ---------------------------------------------------------------------------
 def _population(n=48):

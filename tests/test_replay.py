@@ -181,6 +181,35 @@ def test_wrapper_replay_resumes_observe_loop(table):
             np.testing.assert_array_equal(got, rows_full[s, d])
 
 
+def test_sequential_replays_equal_concatenated(table):
+    """Two sequential ALDRAMController.replay calls over a split trace
+    absorb state and counters identically to one call over the
+    concatenation — the stateful-wrapper contract the streaming path
+    (chunked scans resuming from the carried state) is built on."""
+    rng = np.random.default_rng(23)
+    trace = _random_trace(rng, 90, N_DIMMS)
+    errors = rng.random(trace.shape) < 0.02
+    for split in (1, 37, 89):  # first-step, interior, last-step splits
+        one = ALDRAMController(table)
+        res_one = one.replay(trace, errors)
+        two = ALDRAMController(table)
+        res_a = two.replay(trace[:split], errors[:split])
+        res_b = two.replay(trace[split:], errors[split:])
+        assert two.switch_count == one.switch_count, split
+        assert two.fallback_count == one.fallback_count, split
+        np.testing.assert_array_equal(two._bin, one._bin)
+        np.testing.assert_array_equal(two._streak, one._streak)
+        np.testing.assert_array_equal(two._fused, one._fused)
+        np.testing.assert_array_equal(
+            np.concatenate([np.asarray(res_a.timings), np.asarray(res_b.timings)]),
+            np.asarray(res_one.timings),
+        )
+        np.testing.assert_array_equal(
+            np.concatenate([np.asarray(res_a.bin_idx), np.asarray(res_b.bin_idx)]),
+            np.asarray(res_one.bin_idx),
+        )
+
+
 def test_init_state_shapes(table):
     st0 = init_state(table.n_dimms, table.n_bins)
     assert st0.bin_idx.shape == (table.n_dimms,)

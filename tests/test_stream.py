@@ -1,0 +1,260 @@
+"""Streamed replay ≡ materialized replay + trace_score, bit for bit.
+
+The streaming layer (:mod:`repro.core.stream`) must be invisible in the
+results: chunking the step axis changes WHEN work is dispatched, never
+WHAT is computed. These properties pin that contract at every chunking —
+degenerate (chunk=1), ragged last chunk, and one-shot (chunk=n_steps) —
+with and without error injections:
+
+* the streamed final ``ControllerState``, per-DIMM switch counts and the
+  finalized score dict are BIT-EXACT vs materialized ``replay`` +
+  ``trace_score`` (exact dict equality, not tolerance), resting on the
+  cycle-quantization exactness argument documented on ``ScorePartials``;
+* ``mesh=`` streaming matches the materialized SHARDED score bitwise
+  (they share the accumulate/finalize compiled programs) and the
+  single-device score to psum summation-order tolerance;
+* the :class:`StreamingController` serving engine and the
+  ``ALDRAMController.replay_stream`` wrapper absorb state/counters
+  identically to their materialized counterparts.
+
+Runs tier-1 on one device (a 1-lane mesh still exercises the shard_map
+machinery); the CI multidevice job re-runs this module under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` where padding and
+pre-sharded ingestion are non-trivial.
+"""
+
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import controller, fleet, perfmodel, shard, stream, traces
+
+TEMPS = (45.0, 55.0, 85.0)
+N_MAX = 11  # covers non-divisible sizes for any device count in {1,2,4,8}
+N_STEPS = 72
+
+#: Fleet sizes: degenerate, below CI device counts, the boundary, a prime.
+SIZES = (1, 3, 5, 8, 11)
+
+
+# Module-level lazy singletons (not pytest fixtures: the hypothesis
+# fallback's @given produces a zero-arg wrapper, so property tests cannot
+# take fixture arguments).
+@functools.lru_cache(maxsize=None)
+def _mesh():
+    return shard.fleet_mesh()
+
+
+@functools.lru_cache(maxsize=None)
+def _table_full():
+    fl = fleet.synthesize(jax.random.PRNGKey(0), N_MAX)
+    return fleet.sweep(fl, TEMPS, (1.0,)).to_table()
+
+
+def _sub_table(n):
+    t = _table_full()
+    return controller.DimmTimingTable(temp_bins=t.temp_bins, stack=t.stack[:n])
+
+
+@functools.lru_cache(maxsize=None)
+def _trace(n, error_rate):
+    k_t, k_e = jax.random.split(jax.random.PRNGKey(17 * n + int(error_rate * 1e3)))
+    trace = np.asarray(traces.generate("diurnal", k_t, n, N_STEPS))
+    errors = np.asarray(traces.error_injections(k_e, N_STEPS, n, error_rate))
+    return trace, errors
+
+
+@functools.lru_cache(maxsize=None)
+def _materialized(n, error_rate):
+    trace, errors = _trace(n, error_rate)
+    res = controller.replay(_sub_table(n), trace, errors)
+    return res, perfmodel.trace_score(_sub_table(n).stack, res)
+
+
+def _assert_state_equal(a, b):
+    for name, la, lb in zip(("bin_idx", "cool_streak", "fused"), a, b):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb), err_msg=f"state.{name}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Chunking invariance vs the materialized ground truth
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from(SIZES), st.sampled_from([1, 17, N_STEPS]),
+       st.sampled_from([0.0, 0.02]))
+def test_streamed_bit_exact_vs_materialized(n, chunk, error_rate):
+    """Final state, switch counts and score dict: exact equality for
+    chunk sizes {1, ragged (17 ∤ 72), n_steps} × error rates {0, 0.02}."""
+    table = _sub_table(n)
+    trace, errors = _trace(n, error_rate)
+    ref, score_ref = _materialized(n, error_rate)
+    res = stream.replay_stream(table, trace, errors, chunk_steps=chunk)
+    _assert_state_equal(res.state, ref.state)
+    np.testing.assert_array_equal(
+        np.asarray(res.partials.switches), np.asarray(ref.switch_counts)
+    )
+    assert res.total_switches == ref.total_switches
+    assert res.n_steps == N_STEPS
+    assert res.errors_total == int(errors.sum())
+    assert res.score() == score_ref  # bitwise: every key, exact float equality
+
+
+def test_streamed_partials_match_whole_trace_accumulate():
+    """The scan's per-step accumulation reproduces the one-shot
+    accumulate bitwise — the ScorePartials exactness argument, pinned."""
+    n = 5
+    ref, _ = _materialized(n, 0.02)
+    one_shot = perfmodel.trace_score_accumulate(
+        perfmodel.trace_score_init(n, _sub_table(n).n_bins),
+        ref.timings, ref.bin_idx, ref.switched,
+    )
+    trace, errors = _trace(n, 0.02)
+    res = stream.replay_stream(_sub_table(n), trace, errors, chunk_steps=7)
+    for name, la, lb in zip(one_shot._fields, res.partials, one_shot):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb), err_msg=f"partials.{name}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Mesh composition
+# ---------------------------------------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(st.sampled_from(SIZES), st.sampled_from([0.0, 0.02]))
+def test_streamed_mesh_bit_exact(n, error_rate):
+    """Same-mesh streamed score ≡ materialized sharded score BITWISE
+    (shared accumulate/finalize programs); state bit-exact vs unsharded;
+    cross-mesh (vs single-device) only summation-order noise."""
+    table = _sub_table(n)
+    trace, errors = _trace(n, error_rate)
+    ref, score_single = _materialized(n, error_rate)
+    sref = controller.replay(table, trace, errors, mesh=_mesh())
+    score_sharded = perfmodel.trace_score(table.stack, sref, mesh=_mesh())
+    res = stream.replay_stream(table, trace, errors, chunk_steps=17,
+                               mesh=_mesh())
+    _assert_state_equal(res.state, ref.state)
+    np.testing.assert_array_equal(
+        np.asarray(res.partials.switches), np.asarray(ref.switch_counts)
+    )
+    assert res.score() == score_sharded
+    for k in score_single:
+        assert np.isclose(res.score()[k], score_single[k],
+                          rtol=1e-5, atol=1e-6), k
+
+
+def test_streamed_mesh_default_score_mesh_override():
+    """StreamResult.score() finalizes over the stream's own mesh by
+    default; passing another mesh (or finalizing by hand with mesh=None)
+    reuses the same partials."""
+    n = 5
+    trace, errors = _trace(n, 0.0)
+    res = stream.replay_stream(_sub_table(n), trace, errors, chunk_steps=17,
+                               mesh=_mesh())
+    _, score_single = _materialized(n, 0.0)
+    s_none = perfmodel.trace_score_finalize(res.partials, _sub_table(n).stack)
+    assert s_none == score_single  # exact: same partials, same finalize
+
+
+# ---------------------------------------------------------------------------
+# Iterator sources + the serving engine
+# ---------------------------------------------------------------------------
+def test_iterator_source_parity():
+    """A generator of (temps, errors) chunks scores identically to the
+    materialized array — the longer-than-memory ingestion path."""
+    n = 5
+    trace, errors = _trace(n, 0.02)
+    _, score_ref = _materialized(n, 0.02)
+    res = stream.replay_stream(
+        _sub_table(n),
+        ((t, e) for t, e in stream.iter_chunks(trace, errors, 13)),
+    )
+    assert res.score() == score_ref
+    assert res.errors_total == int(errors.sum())
+    with pytest.raises(ValueError, match="chunk iterable"):
+        stream.replay_stream(
+            _sub_table(n), iter([(trace, None)]), errors=errors
+        )
+
+
+def test_streaming_controller_incremental_decisions():
+    """The serving engine: chunk-by-chunk ingest with decisions returned
+    reproduces the materialized history exactly; running score matches at
+    the end; single-step 1-D ingestion works."""
+    n = 5
+    table = _sub_table(n)
+    trace, errors = _trace(n, 0.02)
+    ref, score_ref = _materialized(n, 0.02)
+    eng = stream.StreamingController(table)
+    rows, bins, switched = [], [], []
+    for t, e in stream.iter_chunks(trace, errors, 25):
+        r, b, s = eng.ingest(t, e, return_decisions=True)
+        rows.append(np.asarray(r))
+        bins.append(np.asarray(b))
+        switched.append(np.asarray(s))
+    np.testing.assert_array_equal(np.concatenate(rows), np.asarray(ref.timings))
+    np.testing.assert_array_equal(np.concatenate(bins), np.asarray(ref.bin_idx))
+    np.testing.assert_array_equal(
+        np.concatenate(switched), np.asarray(ref.switched)
+    )
+    assert eng.score() == score_ref
+    assert eng.total_switches == ref.total_switches
+    _assert_state_equal(eng.state, ref.state)
+    # One more single observation row, 1-D: absorbed as one step.
+    eng.ingest(trace[-1])
+    assert eng.n_steps == N_STEPS + 1
+
+
+def test_wrapper_replay_stream_absorbs_like_replay():
+    """ALDRAMController.replay_stream ≡ .replay in state and counters —
+    the stateful-wrapper contract the service relies on."""
+    n = 5
+    trace, errors = _trace(n, 0.02)
+    a = controller.ALDRAMController(_sub_table(n))
+    b = controller.ALDRAMController(_sub_table(n))
+    a.replay(trace, errors)
+    res = b.replay_stream(trace, errors, chunk_steps=17)
+    assert isinstance(res, stream.StreamResult)
+    assert b.switch_count == a.switch_count
+    assert b.fallback_count == a.fallback_count
+    np.testing.assert_array_equal(a._bin, b._bin)
+    np.testing.assert_array_equal(a._streak, b._streak)
+    np.testing.assert_array_equal(a._fused, b._fused)
+    # And the stream resumes where it left off, like observe after replay.
+    a.replay(trace)
+    b.replay_stream(trace)
+    np.testing.assert_array_equal(a._bin, b._bin)
+    assert b.switch_count == a.switch_count
+
+
+# ---------------------------------------------------------------------------
+# Validation / memory-model edges
+# ---------------------------------------------------------------------------
+def test_stream_validation():
+    table = _sub_table(3)
+    trace, _ = _trace(3, 0.0)
+    with pytest.raises(ValueError, match="chunk_steps"):
+        stream.replay_stream(table, trace, chunk_steps=0)
+    with pytest.raises(ValueError, match="n_steps, n_dimms"):
+        stream.replay_stream(table, np.zeros((4,), np.float32))
+    with pytest.raises(ValueError, match="DIMMs"):
+        stream.replay_stream(table, np.zeros((4, 5), np.float32))
+    with pytest.raises(ValueError, match="errors shape"):
+        stream.replay_stream(table, trace, errors=np.zeros((1, 3), bool))
+    with pytest.raises(ValueError, match="zero observations"):
+        stream.StreamingController(table).score()
+
+
+def test_stream_result_has_no_history():
+    """The whole point: a streamed result carries O(n_dimms) arrays only —
+    no leaf scales with n_steps."""
+    n = 5
+    trace, errors = _trace(n, 0.0)
+    res = stream.replay_stream(_sub_table(n), trace, errors, chunk_steps=9)
+    for leaf in jax.tree.leaves((res.state, res.partials)):
+        assert N_STEPS not in np.asarray(leaf).shape
+        assert np.asarray(leaf).size <= n * (len(TEMPS) + 5)
