@@ -33,3 +33,30 @@ def write_rows_json(
     out = pathlib.Path(path)
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(payload, indent=1, sort_keys=True))
+
+
+def write_bench_replay_json(
+    path: str | pathlib.Path,
+    config: Dict[str, object],
+    impls: Dict[str, Dict[str, float]],
+    meta: Dict[str, object] | None = None,
+) -> None:
+    """Consolidated ``BENCH_replay.json``: the replay throughput record CI
+    uploads so the perf trajectory is machine-readable across PRs.
+
+    One entry per chunk-scan implementation (``ref`` vs ``pallas``), each
+    carrying at least ``steps_per_sec``, ``dimm_steps_per_sec``,
+    ``seconds`` and ``peak_memory_bytes_est`` for the SAME workload
+    described by ``config`` (n_dimms / n_steps / chunk_steps / device),
+    so impl columns are directly comparable within a file and rows are
+    comparable across PRs. Optional per-chunk sweep timings ride along
+    under ``chunk_sweep`` inside each impl entry."""
+    payload = {
+        "benchmark": "replay",
+        "config": dict(config),
+        "meta": dict(meta or {}),
+        "impls": {name: dict(stats) for name, stats in impls.items()},
+    }
+    out = pathlib.Path(path)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(payload, indent=1, sort_keys=True))

@@ -13,7 +13,8 @@ day is scored faster than real time.
 
   PYTHONPATH=src python benchmarks/stream_replay.py           # 10⁶ × 1440
   PYTHONPATH=src python benchmarks/stream_replay.py --tiny    # CI smoke
-  PYTHONPATH=src python benchmarks/stream_replay.py --tiny --sharded
+  PYTHONPATH=src python benchmarks/stream_replay.py --tiny --sharded \
+      --chunk-sweep 24,96,512 --bench-json BENCH_replay.json
 
 Parity gates (the run fails hard, CI goes red — never just logs):
 
@@ -21,14 +22,25 @@ Parity gates (the run fails hard, CI goes red — never just logs):
   final state, per-DIMM switch counts and the full score dict must equal
   the materialized ``replay`` + ``trace_score`` BITWISE (==0 max error)
   for chunk sizes {ragged, 1, n_steps}.
+* the fused-kernel section repeats those gates with ``impl="pallas"``
+  (the one-pass step + lookup + score-accumulate Pallas kernel,
+  :mod:`repro.kernels.replay_step`) at the same chunkings, plus a
+  partials-leaf bitwise gate vs the ref stream, and times kernel vs ref
+  (``--chunk-sweep`` sweeps the step-tile size for both impls).
 * full scale (where materialized replay cannot run): two different
   chunkings of the same stream — the scan carry is the only state, so
-  re-chunking must reproduce state, partials and score bit-exactly.
+  re-chunking must reproduce state, partials and score bit-exactly
+  (``--impl pallas`` runs the whole thing through the fused kernel).
 * ``--sharded``: the same gates with the DIMM axis shard_map-ped over
   every visible device; the streamed sharded score must match the
   materialized sharded score bitwise (they share the accumulate/finalize
-  programs), and the sharded score must match single-device to psum
-  summation-order tolerance.
+  programs), the sharded PALLAS stream must match the same-mesh ref
+  stream bitwise (partials, state, score), and the sharded score must
+  match single-device to psum summation-order tolerance.
+
+``--bench-json`` additionally writes the consolidated ``BENCH_replay.json``
+throughput record (steps/sec, DIMM-steps/sec, peak-memory estimate, one
+entry per impl) that CI uploads as an artifact.
 """
 
 from __future__ import annotations
@@ -47,11 +59,12 @@ import jax
 import numpy as np
 
 from repro.core import controller, fleet, perfmodel, stream, traces
+from repro.kernels.replay_step import default_interpret
 
 try:
-    from benchmarks._json_out import write_rows_json
+    from benchmarks._json_out import write_bench_replay_json, write_rows_json
 except ImportError:  # direct-script execution: benchmarks/ is sys.path[0]
-    from _json_out import write_rows_json
+    from _json_out import write_bench_replay_json, write_rows_json
 
 #: Reference accelerator HBM (GiB) for the cannot-hold-in-memory rows —
 #: a generous single-device budget (A100-40G class has 40, v5e has 16).
@@ -136,8 +149,114 @@ def _assert_scores_equal(sa, sb, what, exact=True, rtol=1e-4):
     return err
 
 
+def _time_stream(table, trace, errors, chunk, impl, repeats=2):
+    """Best-of-N steady-state wall seconds for one streamed replay (the
+    first pass pays tracing/compile and is discarded)."""
+    best = float("inf")
+    for i in range(repeats + 1):
+        t0 = time.perf_counter()
+        res = stream.replay_stream(table, trace, errors, chunk_steps=chunk,
+                                   impl=impl)
+        jax.block_until_ready((res.state, tuple(res.partials)))
+        if i > 0:
+            best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _peak_mem_estimate(n_dimms, n_bins, chunk, impl):
+    """Rough peak device-resident bytes for one streamed chunk scan:
+    timing-register stack + carried state/partials + double-buffered
+    observation chunks. The pallas path pads the DIMM axis up to whole
+    1024-lane (8×128) tiles, so its footprint steps at tile boundaries."""
+    n = n_dimms
+    if impl == "pallas":
+        n = -(-n_dimms // 1024) * 1024
+    stack = n * n_bins * 2 * 4 * 4             # float32 timing registers
+    state = n * 3 * 4                          # bin / streak / fused
+    partials = n * ((n_bins + 1) + 1 + 2 * 4) * 4  # occ + switches + sums
+    buffers = 2 * chunk * n * (4 + 1)          # double-buffered temps+errs
+    return float(stack + state + partials + buffers)
+
+
+def _kernel_section(table, trace, errors, chunk, n_steps, ref, score_ref,
+                    sharded, chunk_sweep):
+    """Fused Pallas replay kernel: hard ==0 parity gates + kernel-vs-ref
+    timing. Parity at chunkings {ragged, 1, n_steps} vs the materialized
+    replay, partials-leaf bitwise vs the ref stream, and (``--sharded``)
+    bitwise vs the SAME-MESH ref stream. Throughput is reported, not
+    gated: off-TPU the kernel runs in interpret mode and loses by
+    construction; the speedup row says which regime produced it."""
+    n_dimms = table.n_dimms
+    for c in (chunk, 1, n_steps):
+        res = stream.replay_stream(table, trace, errors, chunk_steps=c,
+                                   impl="pallas")
+        for name, la, lb in zip(("bin_idx", "cool_streak", "fused"),
+                                res.state, ref.state):
+            if not np.array_equal(np.asarray(la), np.asarray(lb)):
+                raise AssertionError(
+                    f"kernel chunk={c}: state.{name} != materialized"
+                )
+        if not np.array_equal(np.asarray(res.partials.switches),
+                              np.asarray(ref.switch_counts)):
+            raise AssertionError(f"kernel chunk={c}: switch counts diverged")
+        _assert_scores_equal(res.score(), score_ref,
+                             f"kernel chunk={c} score", exact=True)
+    # Stronger than score equality: every partials leaf bitwise vs ref.
+    _assert_stream_equal(
+        stream.replay_stream(table, trace, errors, chunk_steps=chunk,
+                             impl="pallas"),
+        stream.replay_stream(table, trace, errors, chunk_steps=chunk),
+        "kernel vs ref stream",
+    )
+    interp = default_interpret()
+    rows = [
+        ("stream/kernel_parity_exact", 1.0, "==1 (hard gate)"),
+        ("stream/kernel_interpret_mode", float(interp),
+         "1 = no TPU, kernel interpreted"),
+    ]
+    bench = {}
+    for impl in ("ref", "pallas"):
+        dt = _time_stream(table, trace, errors, chunk, impl)
+        steps = n_steps / dt
+        bench[impl] = {
+            "seconds": dt,
+            "steps_per_sec": steps,
+            "dimm_steps_per_sec": steps * n_dimms,
+            "peak_memory_bytes_est":
+                _peak_mem_estimate(n_dimms, table.n_bins, chunk, impl),
+            "interpret_mode": bool(interp) and impl == "pallas",
+        }
+        rows.append((f"stream/{impl}_steps_per_sec", steps, ""))
+    speedup = bench["pallas"]["steps_per_sec"] / bench["ref"]["steps_per_sec"]
+    rows.append(("stream/kernel_vs_ref_speedup", speedup,
+                 "interpret mode, not meaningful" if interp
+                 else ">=1 (fused kernel)"))
+    for c in chunk_sweep:
+        for impl in ("ref", "pallas"):
+            steps = n_steps / _time_stream(table, trace, errors, c, impl,
+                                           repeats=1)
+            bench[impl].setdefault("chunk_sweep", {})[str(c)] = steps
+            rows.append((f"stream/{impl}_steps_per_sec_chunk{c}", steps,
+                         "step-tile sweep"))
+    if sharded:
+        from repro.core import shard
+
+        mesh = shard.fleet_mesh()
+        ps = stream.replay_stream(table, trace, errors, chunk_steps=chunk,
+                                  mesh=mesh, impl="pallas")
+        rs = stream.replay_stream(table, trace, errors, chunk_steps=chunk,
+                                  mesh=mesh)
+        _assert_stream_equal(ps, rs, "sharded kernel vs sharded ref stream")
+        _assert_scores_equal(ps.score(), rs.score(),
+                             "sharded kernel vs sharded ref score",
+                             exact=True)
+        rows.append(("stream/kernel_sharded_parity_exact", 1.0,
+                     "==1 (hard gate)"))
+    return rows, bench
+
+
 def run_tiny(chunk: int = 96, error_rate: float = 0.002, seed: int = 0,
-             sharded: bool = False, verbose: bool = True):
+             sharded: bool = False, verbose: bool = True, chunk_sweep=()):
     """CI smoke: small enough to ALSO run the materialized replay, so the
     streamed path is gated ==0 against the ground truth end to end."""
     n_dimms, n_steps = 64, 512
@@ -196,13 +315,23 @@ def run_tiny(chunk: int = 96, error_rate: float = 0.002, seed: int = 0,
     ]
     if sharded:
         rows += _sharded_section(table, trace, errors, chunk, score_ref)
+    krows, bench = _kernel_section(table, trace, errors, chunk, n_steps,
+                                   ref, score_ref, sharded, chunk_sweep)
+    rows += krows
     if verbose:
         print(f"# tiny: {n_dimms} x {n_steps}, chunks {sorted(results)} all "
               f"bit-exact vs materialized (state, switches, score)")
         print(f"# streamed {t_stream*1e3:.1f} ms vs materialized "
               f"{t_mat*1e3:.1f} ms; {results[chunk].errors_total} errors "
               f"injected")
-    return rows
+        print(f"# kernel (impl=pallas) bit-exact at all chunkings; "
+              f"ref {bench['ref']['steps_per_sec']:,.0f} vs pallas "
+              f"{bench['pallas']['steps_per_sec']:,.0f} steps/s"
+              + (" [interpret mode]" if bench["pallas"]["interpret_mode"]
+                 else ""))
+    bench_cfg = {"n_dimms": n_dimms, "n_steps": n_steps, "chunk_steps": chunk,
+                 "mode": "tiny"}
+    return rows, (bench_cfg, bench)
 
 
 def _sharded_section(table, trace, errors, chunk, score_single):
@@ -236,7 +365,7 @@ def _sharded_section(table, trace, errors, chunk, score_single):
 def run_full(n_dimms: int = 1_000_000, n_steps: int = 1440,
              chunk: int = 96, error_rate: float = 1e-5,
              dt_s: float = traces.DEFAULT_DT_S, seed: int = 0,
-             sharded: bool = False, verbose: bool = True):
+             sharded: bool = False, verbose: bool = True, impl: str = "ref"):
     """The north-star point: a fleet × trace length whose materialized
     replay history cannot exist on a device. Telemetry is generated
     chunkwise, streamed once (timed), then re-streamed under a different
@@ -265,7 +394,8 @@ def run_full(n_dimms: int = 1_000_000, n_steps: int = 1440,
         print(f"# streaming {n_dimms:,} x {n_steps} (chunk {chunk}) ...",
               flush=True)
     t0 = time.perf_counter()
-    res = stream.replay_stream(table, source(), chunk_steps=chunk, mesh=mesh)
+    res = stream.replay_stream(table, source(), chunk_steps=chunk, mesh=mesh,
+                               impl=impl)
     jax.block_until_ready(res.state)
     t_stream = time.perf_counter() - t0
     t0 = time.perf_counter()
@@ -274,7 +404,7 @@ def run_full(n_dimms: int = 1_000_000, n_steps: int = 1440,
 
     # The chunked reference: same stream, different chunking, ==0 gate.
     res2 = stream.replay_stream(table, _split_halves(source()),
-                                chunk_steps=chunk, mesh=mesh)
+                                chunk_steps=chunk, mesh=mesh, impl=impl)
     _assert_stream_equal(res, res2, "re-chunked stream")
     _assert_scores_equal(score, res2.score(), "re-chunked score", exact=True)
 
@@ -321,7 +451,17 @@ def run_full(n_dimms: int = 1_000_000, n_steps: int = 1440,
         print(f"# realized +{score['speedup_realized_mean']*100:.1f}% all, "
               f"+{score['speedup_realized_intensive_mean']*100:.1f}% "
               f"mem-intensive; re-chunked replay bit-exact")
-    return rows
+    bench_cfg = {"n_dimms": n_dimms, "n_steps": n_steps, "chunk_steps": chunk,
+                 "mode": "full"}
+    bench = {impl: {
+        "seconds": t_stream,
+        "steps_per_sec": n_steps / t_stream,
+        "dimm_steps_per_sec": transitions / t_stream,
+        "peak_memory_bytes_est":
+            _peak_mem_estimate(n_dimms, table.n_bins, chunk, impl),
+        "interpret_mode": impl == "pallas" and default_interpret(),
+    }}
+    return rows, (bench_cfg, bench)
 
 
 def main() -> None:
@@ -341,10 +481,23 @@ def main() -> None:
                     help="shard the DIMM axis over all visible devices (on "
                          "CPU forces 8 host devices unless XLA_FLAGS pins "
                          "a count) and gate sharded parity")
+    ap.add_argument("--impl", default="ref", choices=("ref", "pallas"),
+                    help="chunk-scan impl for the full-scale run (the tiny "
+                         "kernel section always times both)")
+    ap.add_argument("--chunk-sweep", type=str, default=None,
+                    help="comma list of step-tile sizes to time both impls "
+                         "at (tiny mode), e.g. 24,96,512")
     ap.add_argument("--json", type=str, default=None,
                     help="also write rows to this JSON artifact path")
+    ap.add_argument("--bench-json", type=str, default=None,
+                    help="write the consolidated BENCH_replay.json "
+                         "throughput record (per-impl steps/sec, "
+                         "DIMM-steps/sec, peak-memory estimate)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    sweep = tuple(
+        int(c) for c in args.chunk_sweep.split(",")
+    ) if args.chunk_sweep else ()
 
     if args.tiny:
         conflicts = [name for name, val in (
@@ -352,25 +505,27 @@ def main() -> None:
         ) if val is not None]
         if conflicts:
             ap.error(f"--tiny fixes the configuration; remove {', '.join(conflicts)}")
-        rows = run_tiny(
+        rows, (bench_cfg, bench) = run_tiny(
             chunk=args.chunk,
             error_rate=0.002 if args.error_rate is None else args.error_rate,
-            seed=args.seed, sharded=args.sharded,
+            seed=args.seed, sharded=args.sharded, chunk_sweep=sweep,
         )
     else:
-        rows = run_full(
+        rows, (bench_cfg, bench) = run_full(
             n_dimms=1_000_000 if args.n_dimms is None else args.n_dimms,
             n_steps=1440 if args.n_steps is None else args.n_steps,
             chunk=args.chunk,
             error_rate=1e-5 if args.error_rate is None else args.error_rate,
-            seed=args.seed, sharded=args.sharded,
+            seed=args.seed, sharded=args.sharded, impl=args.impl,
         )
     for name, value, ref in rows:
         print(f"{name},{value:.6g},{ref}")
+    meta = {"tiny": args.tiny, "sharded": args.sharded, "seed": args.seed}
     if args.json:
-        write_rows_json(args.json, "stream_replay", rows,
-                        meta={"tiny": args.tiny, "sharded": args.sharded,
-                              "seed": args.seed})
+        write_rows_json(args.json, "stream_replay", rows, meta=meta)
+    if args.bench_json:
+        bench_cfg["device"] = jax.devices()[0].platform
+        write_bench_replay_json(args.bench_json, bench_cfg, bench, meta=meta)
 
 
 if __name__ == "__main__":

@@ -392,6 +392,8 @@ def step(
     state: ControllerState,
     temps_c: Array,
     errors: Optional[Array] = None,
+    impl: str = "ref",
+    interpret: Optional[bool] = None,
 ) -> Tuple[ControllerState, Array, Array, Array]:
     """Advance the whole fleet one observation (pure; jit/scan-safe).
 
@@ -399,7 +401,21 @@ def step(
     temperature is considered, exactly like ``report_error`` followed by
     ``observe``. Returns ``(state, timing_rows (n_dimms, 2, 4),
     switched (n_dimms,), effective_bin (n_dimms,))`` — the timing rows
-    carry both access-type sets (read = 0, write = 1)."""
+    carry both access-type sets (read = 0, write = 1).
+
+    ``impl="pallas"`` runs the fused replay-step kernel for one chunk-1
+    launch (bit-exact vs the ref; requires concrete ``edges``/``params``
+    since the policy bakes into the kernel — don't select it inside an
+    outer jit trace). ``interpret=None`` auto-enables interpret mode
+    off-TPU."""
+    if impl not in ("ref", "pallas"):
+        raise ValueError(f"impl must be one of ('ref', 'pallas'), got {impl!r}")
+    if impl == "pallas":
+        from repro.kernels.replay_step import ops as replay_ops
+
+        return replay_ops.step_pallas(
+            stack, edges, params, state, temps_c, errors, interpret
+        )
     if errors is None:
         errors = jnp.zeros(temps_c.shape, bool)
     new_bin, new_streak, fused, rows, switched, eff = jax.vmap(
@@ -453,6 +469,7 @@ def replay(
     params: ControllerParams = ControllerParams(),
     state: Optional[ControllerState] = None,
     mesh=None,
+    impl: str = "ref",
 ) -> ReplayResult:
     """Replay whole temperature traces through the controller in ONE
     jitted ``lax.scan`` — n_dimms × n_steps transitions, no Python loop.
@@ -479,7 +496,24 @@ def replay(
     axis; each device scans its contiguous block of DIMMs with the same
     jitted scan, padding (edge replication) + output slicing handle
     non-divisible fleet sizes. Sharded replays are BIT-EXACT vs
-    ``mesh=None`` (property-tested in tests/test_shard.py)."""
+    ``mesh=None`` (property-tested in tests/test_shard.py).
+
+    ``impl`` — only ``"ref"`` is meaningful here: this function's whole
+    point is the dense ``(n_steps, n_dimms, 2, 4)`` history, which is
+    exactly what the fused kernel exists to avoid materializing. The
+    kwarg is validated for a uniform replay-path API and raises with a
+    pointer at :func:`replay_stream` (whose ``impl="pallas"`` is the
+    fused path)."""
+    if impl not in ("ref", "pallas"):
+        raise ValueError(f"impl must be one of ('ref', 'pallas'), got {impl!r}")
+    if impl == "pallas":
+        raise ValueError(
+            "replay(impl='pallas') is not supported: the dense per-step "
+            "timing history this function returns is what the fused "
+            "replay-step kernel exists to avoid materializing — use "
+            "replay_stream(impl='pallas') (final state + score partials, "
+            "bit-exact) instead"
+        )
     traces = jnp.asarray(traces, jnp.float32)
     if traces.ndim != 2:
         raise ValueError(f"traces must be (n_steps, n_dimms), got {traces.shape}")
@@ -514,19 +548,21 @@ def replay(
 
 
 def replay_stream(table, traces, errors=None, params=ControllerParams(),
-                  state=None, chunk_steps=None, mesh=None):
+                  state=None, chunk_steps=None, mesh=None, impl="ref",
+                  interpret=None):
     """Streamed (chunked-scan) replay: same state machine, O(n_dimms ·
     chunk) device memory, no materialized history. Lazy delegate to
     :func:`repro.core.stream.replay_stream` (stream imports this module,
     so the import cannot be top-level); see there for the full contract —
     final state, switch counts and score are bit-exact vs :func:`replay`
-    + ``trace_score`` for every chunking."""
+    + ``trace_score`` for every chunking, and ``impl="pallas"`` runs each
+    chunk through the fused replay-step kernel (also bit-exact)."""
     from repro.core import stream as _stream
 
     kwargs = {} if chunk_steps is None else {"chunk_steps": chunk_steps}
     return _stream.replay_stream(
         table, traces, errors=errors, params=params, state=state,
-        mesh=mesh, **kwargs,
+        mesh=mesh, impl=impl, interpret=interpret, **kwargs,
     )
 
 
@@ -650,18 +686,21 @@ class ALDRAMController:
             self.fallback_count += int(np.asarray(errors, bool).sum())
         return result
 
-    def replay_stream(self, traces, errors=None, chunk_steps=None, mesh=None):
+    def replay_stream(self, traces, errors=None, chunk_steps=None, mesh=None,
+                      impl="ref", interpret=None):
         """Advance this controller over a temperature STREAM in chunked
         scans — identical state/counter absorption to :meth:`replay`
         (property-tested equal), but O(n_dimms · chunk) device memory and
         no materialized history: ``traces`` may be a ``(n_steps,
         n_dimms)`` array or any iterable of ``(temps_chunk, errors_chunk)``
-        pairs longer than memory allows. Returns a
+        pairs longer than memory allows. ``impl="pallas"`` fuses each
+        chunk scan into the replay-step kernel (bit-exact). Returns a
         :class:`repro.core.stream.StreamResult` (``.score()`` gives the
         bit-exact ``trace_score`` dict)."""
         result = replay_stream(
             self.table, traces, errors=errors, params=self.params,
             state=self.state(), chunk_steps=chunk_steps, mesh=mesh,
+            impl=impl, interpret=interpret,
         )
         self.load_state(result.state)
         self.switch_count += result.total_switches

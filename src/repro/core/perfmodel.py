@@ -464,6 +464,8 @@ def trace_score_accumulate(
     timings: Array,
     bin_idx: Array,
     switched: Array,
+    impl: str = "ref",
+    interpret: Optional[bool] = None,
 ) -> ScorePartials:
     """Absorb a ``(chunk, n_dimms, 2, 4)`` block of replay outputs
     (legacy merged ``(chunk, n_dimms, 4)`` rows are duplicated).
@@ -472,7 +474,22 @@ def trace_score_accumulate(
     ``lax.scan`` carry with ``chunk = 1`` slices, chunked callers once per
     chunk, and the materialized :func:`trace_score` once with the whole
     trace — by the exactness notes on :class:`ScorePartials`, all
-    chunkings produce bit-identical partials."""
+    chunkings produce bit-identical partials.
+
+    ``impl="pallas"`` folds the block through the fused accumulate kernel
+    (:func:`repro.kernels.replay_step.ops.accumulate_chunk`) — one
+    VMEM-resident pass per DIMM tile instead of three reductions; equal
+    to the ref under the same quantization exactness the chunk-invariance
+    contract already relies on (int accumulators exact outright).
+    ``interpret=None`` auto-enables interpret mode off-TPU."""
+    if impl not in ("ref", "pallas"):
+        raise ValueError(f"impl must be one of ('ref', 'pallas'), got {impl!r}")
+    if impl == "pallas":
+        from repro.kernels.replay_step import ops as replay_ops
+
+        return replay_ops.accumulate_chunk(
+            partials, timings, bin_idx, switched, interpret
+        )
     timings = jnp.asarray(timings, jnp.float32)
     timings = _with_access_axis(timings, split=(timings.ndim == 4))
     n_bins1 = partials.occupancy.shape[-1]

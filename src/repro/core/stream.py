@@ -39,6 +39,12 @@ state machine:
   service (:mod:`repro.launch.serve_fleet`): ``ingest`` batched
   observation chunks (optionally returning the realized timings / bin
   decisions for programming hardware), ``score`` the stream so far.
+* **Fused kernel path**: ``impl="pallas"`` swaps each chunk scan for the
+  fused replay-step kernel (:mod:`repro.kernels.replay_step`) — step +
+  timing lookup + partials accumulation in one VMEM-resident pass per
+  DIMM tile, bit-exact vs the ref scan (same adds, same order). The
+  chunk-scan *semantics* live in :mod:`repro.kernels.replay_step.ref`;
+  this module aliases them.
 
 Chunk-size guidance: every distinct chunk length compiles its own scan,
 so feed uniform chunks (one trailing ragged chunk costs exactly one extra
@@ -64,17 +70,17 @@ from repro.core.controller import (
     ControllerState,
     DimmTimingTable,
     init_state,
-    step,
 )
 from repro.core.perfmodel import (
     MULTI_CORE,
     PAPER_CLAIM_SPEEDUP,
     WORKLOADS,
     ScorePartials,
-    trace_score_accumulate,
     trace_score_finalize,
     trace_score_init,
 )
+from repro.kernels.replay_step import ops as replay_ops
+from repro.kernels.replay_step import ref as _replay_ref
 
 #: Default step-axis chunk length. 256 minute-cadence observations ≈ 4 h
 #: of telemetry per dispatch; a 10⁶-DIMM float32 chunk is ~1 GB.
@@ -84,65 +90,65 @@ DEFAULT_CHUNK_STEPS: int = 256
 # ---------------------------------------------------------------------------
 # The jitted chunk scans (carry = state + partials, never a history)
 # ---------------------------------------------------------------------------
-def _chunk_body(stack, edges, params, state, partials, temps, errors):
-    """Scan one chunk, accumulating score partials per step in the carry."""
-
-    def body(carry, xs):
-        st, p = carry
-        temps_s, errs_s = xs
-        st, rows, switched, eff = step(stack, edges, params, st, temps_s, errs_s)
-        # rows[None]: one-step (1, N, 2, 4) block — by the quantization
-        # exactness argument this per-step accumulation order is
-        # bit-identical to summing the whole trace at once.
-        p = trace_score_accumulate(p, rows[None], eff[None], switched[None])
-        return (st, p), (rows, switched, eff)
-
-    (state, partials), (rows, switched, eff) = jax.lax.scan(
-        body, (state, partials), (temps, errors)
-    )
-    return state, partials, rows, switched, eff
-
-
-@jax.jit
-def _chunk_scan(stack, edges, params, state,
-                occupancy, switches, timing_sums, n_steps, temps, errors):
-    """Memory-bounded chunk scan: returns ONLY the carried pytrees —
-    per-step outputs are dead code the compiler drops, so peak memory is
-    the input chunk plus O(n_dimms) carry. Partials travel as separate
-    leaves (not a ScorePartials arg) so the sharded wrapper can give
-    ``n_steps`` a replicated axis spec."""
-    partials = ScorePartials(occupancy, switches, timing_sums, n_steps)
-    state, partials, _, _, _ = _chunk_body(
-        stack, edges, params, state, partials, temps, errors
-    )
-    return (state,) + tuple(partials)
-
-
-@jax.jit
-def _chunk_scan_emit(stack, edges, params, state,
-                     occupancy, switches, timing_sums, n_steps, temps, errors):
-    """Decision-emitting chunk scan (the serving path): additionally
-    returns the realized ``(chunk, N, 2, 4)`` timing rows, ``(chunk, N)``
-    switch flags and effective bins — O(chunk · n_dimms), bounded by the
-    chunk, for callers that program hardware from the decisions."""
-    partials = ScorePartials(occupancy, switches, timing_sums, n_steps)
-    state, partials, rows, switched, eff = _chunk_body(
-        stack, edges, params, state, partials, temps, errors
-    )
-    return (state,) + tuple(partials) + (rows, switched, eff)
+# The chunk-scan semantics moved to kernels/replay_step/ref.py when the
+# fused Pallas path landed (the kernel convention keeps ref + kernel side
+# by side); these aliases keep the SAME module-level jitted function
+# objects every streamed caller compiled against — program identity is
+# what the bitwise same-mesh parity gates rely on.
+_chunk_body = _replay_ref.chunk_body
+_chunk_scan = _replay_ref.chunk_scan
+_chunk_scan_emit = _replay_ref.chunk_scan_emit
 
 
 @functools.lru_cache(maxsize=32)
-def _sharded_chunk_runner(mesh, n_dimms: int, emit: bool):
+def _sharded_chunk_runner(mesh, n_dimms: int, emit: bool, impl: str = "ref",
+                          key=None):
     """Cached (pad → shard_map → slice) wrapper around the chunk scan:
     state and partials re-enter every chunk along the DIMM axis, so the
     same runner carries them across the whole stream without gathers
     (padding lanes accumulate edge-replica partials that the final slice
-    discards)."""
-    fn = _chunk_scan_emit if emit else _chunk_scan
+    discards). ``impl="pallas"`` composes the fused kernel BELOW the
+    mesh — each shard tiles and scans its own DIMM block locally, exactly
+    like the charge-sweep kernel — with ``key = (temp_bins, params,
+    interpret)`` identifying the kernel's static policy."""
+    if impl == "pallas":
+        fn = replay_ops.pallas_chunk_scan(*key)
+    else:
+        fn = _chunk_scan_emit if emit else _chunk_scan
     in_axes = (0, None, None, 0, 0, 0, 0, None, 1, 1)
     out_axes = (0, 0, 0, 0, None) + ((1, 1, 1) if emit else ())
     return shard.sharded_dimm_map(fn, mesh, in_axes, out_axes, n_dimms)
+
+
+def _chunk_runner(mesh, n_dimms: int, temp_bins, params: ControllerParams,
+                  emit: bool = False, impl: str = "ref",
+                  interpret: Optional[bool] = None):
+    """THE dispatch point for every chunk-scan call site (replay_stream
+    and StreamingController.ingest both route here).
+
+    ``impl="pallas"`` selects the fused replay-step kernel
+    (:mod:`repro.kernels.replay_step`) — bit-exact vs the ref by the
+    kernel's accumulation-order contract. The decision-EMITTING path
+    stays on the ref: materializing the per-step rows is precisely what
+    the kernel exists to avoid, and the partials it carries are
+    bit-identical either way."""
+    if impl not in replay_ops.IMPLS:
+        raise ValueError(
+            f"impl must be one of {replay_ops.IMPLS}, got {impl!r}"
+        )
+    if emit or impl == "ref":
+        fn, key = (_chunk_scan_emit if emit else _chunk_scan), None
+        impl = "ref"
+    else:
+        key = (
+            tuple(float(e) for e in temp_bins),
+            replay_ops.canonical_params(params),
+            replay_ops.default_interpret() if interpret is None else bool(interpret),
+        )
+        fn = replay_ops.pallas_chunk_scan(*key)
+    if mesh is None:
+        return fn
+    return _sharded_chunk_runner(mesh, n_dimms, emit, impl, key)
 
 
 # ---------------------------------------------------------------------------
@@ -271,6 +277,8 @@ def replay_stream(
     state: Optional[ControllerState] = None,
     chunk_steps: int = DEFAULT_CHUNK_STEPS,
     mesh=None,
+    impl: str = "ref",
+    interpret: Optional[bool] = None,
 ) -> StreamResult:
     """Replay a temperature stream in step-axis chunks, carrying only the
     controller state and the running score partials — O(n_dimms ·
@@ -293,7 +301,14 @@ def replay_stream(
     ``mesh`` — optional 1-D ``"dimm"`` mesh: every chunk scan runs
     sharded, state/partials stay partitioned between chunks, and incoming
     chunks are device_put pre-sharded (double-buffered against the
-    in-flight scan)."""
+    in-flight scan).
+
+    ``impl`` — ``"ref"`` (jitted scan of separate XLA ops) or
+    ``"pallas"`` (the fused replay-step kernel,
+    :mod:`repro.kernels.replay_step`: step + timing lookup + partials in
+    one VMEM-resident pass, bit-exact vs the ref). ``interpret=None``
+    auto-enables kernel interpret mode off-TPU. Under a mesh the kernel
+    runs locally per shard."""
     if state is None:
         state = init_state(table.n_dimms, table.n_bins)
     if hasattr(traces, "ndim") or hasattr(traces, "shape"):
@@ -325,10 +340,8 @@ def replay_stream(
     stack = jnp.asarray(table.stack)
     edges = jnp.asarray(table.temp_bins, jnp.float32)
     jparams = ControllerParams(*(jnp.asarray(p) for p in params))
-    if mesh is not None:
-        run = _sharded_chunk_runner(mesh, n, emit=False)
-    else:
-        run = _chunk_scan
+    run = _chunk_runner(mesh, n, table.temp_bins, params,
+                        emit=False, impl=impl, interpret=interpret)
 
     ingest = _Ingestor(n, mesh)
     n_chunks = 0
@@ -366,7 +379,12 @@ class StreamingController:
     retains only the O(n_dimms) state + partials. State/counter
     absorption is identical to
     :meth:`~repro.core.controller.ALDRAMController.replay` — the two
-    wrappers are interchangeable step for step."""
+    wrappers are interchangeable step for step.
+
+    ``impl="pallas"`` runs every non-decision-emitting chunk through the
+    fused replay-step kernel (bit-exact vs ``"ref"``);
+    ``return_decisions=True`` chunks always take the ref scan, which is
+    safe to mix freely — the carried partials are bit-identical."""
 
     def __init__(
         self,
@@ -374,10 +392,18 @@ class StreamingController:
         params: ControllerParams = ControllerParams(),
         state: Optional[ControllerState] = None,
         mesh=None,
+        impl: str = "ref",
+        interpret: Optional[bool] = None,
     ):
+        if impl not in replay_ops.IMPLS:
+            raise ValueError(
+                f"impl must be one of {replay_ops.IMPLS}, got {impl!r}"
+            )
         self.table = table
         self.params = params
         self.mesh = mesh
+        self.impl = impl
+        self.interpret = interpret
         self._stack = jnp.asarray(table.stack)
         self._edges = jnp.asarray(table.temp_bins, jnp.float32)
         self._jparams = ControllerParams(*(jnp.asarray(p) for p in params))
@@ -430,12 +456,10 @@ class StreamingController:
             if errors is not None:
                 errors = np.asarray(errors, bool)[None]
         temps_d, errors_d = self._ingest.stage(temps, errors)
-        if self.mesh is not None:
-            run = _sharded_chunk_runner(
-                self.mesh, self.table.n_dimms, emit=return_decisions
-            )
-        else:
-            run = _chunk_scan_emit if return_decisions else _chunk_scan
+        run = _chunk_runner(
+            self.mesh, self.table.n_dimms, self.table.temp_bins, self.params,
+            emit=return_decisions, impl=self.impl, interpret=self.interpret,
+        )
         out = run(self._stack, self._edges, self._jparams, self._state,
                   self._partials.occupancy, self._partials.switches,
                   self._partials.timing_sums, self._partials.n_steps,

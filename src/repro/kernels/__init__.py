@@ -32,3 +32,16 @@
 # (tests/test_shard.py). Sharded replay shipped the same way: its ref is
 # the single-device repro.core.controller.replay and its parity gate is
 # tests/test_replay.py-style bit-exactness over the scan.
+#
+# replay_step is the stateful-loop variant of the convention: its ref.py
+# OWNS the streaming chunk-scan semantics (core/stream.py aliases the
+# module-level jitted scans from there — program identity, not just
+# equal math, which the same-mesh bitwise score gates rely on), and the
+# kernel fuses the whole chunk loop (bin search + hysteresis/error-fuse
+# advance + timing gather + partials folds) into one VMEM-resident pass
+# per 1024-DIMM tile. Its bit-exactness argument is accumulation ORDER:
+# the kernel carries the same f32 running sums and adds the same row per
+# step as the ref scan, so parity is unconditional (no quantization
+# envelope needed). Parity gates: tests/test_replay_kernel.py (named
+# replay-kernel-parity CI step, single- and multi-device) and the kernel
+# section of benchmarks/stream_replay.py --tiny.

@@ -1,0 +1,17 @@
+"""Fused Pallas replay-step kernel (step + lookup + score partials).
+
+Follows the repo kernel convention (:mod:`repro.kernels`): :mod:`.ref`
+owns the semantics (the chunked-scan replay the streaming layer aliases),
+:mod:`.kernel` the Pallas body, :mod:`.ops` the layout + ``impl=``
+dispatch with interpret-mode parity off-TPU. See
+``docs/ARCHITECTURE.md`` §6 for the fusion story and the bit-exactness
+argument.
+"""
+
+from repro.kernels.replay_step.ops import (  # noqa: F401
+    IMPLS,
+    accumulate_chunk,
+    default_interpret,
+    pallas_chunk_scan,
+    step_pallas,
+)

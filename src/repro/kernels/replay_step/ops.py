@@ -1,0 +1,289 @@
+"""Dispatch + tiling for the fused replay-step kernel.
+
+Three entry points, each the ``impl="pallas"`` arm of an existing ref
+path:
+
+* :func:`pallas_chunk_scan` — a jitted drop-in for
+  :func:`.ref.chunk_scan` (same 10-argument signature, same return
+  tuple), used by :func:`repro.core.stream.replay_stream` and
+  :class:`~repro.core.stream.StreamingController`. The controller policy
+  (bin edges, guard band, hysteresis) is baked into the kernel as static
+  scalars; the traced ``edges``/``params`` arguments are accepted and
+  ignored so the sharded wrapper's axis specs stay identical to the ref's
+  — under a mesh the kernel simply runs per shard below
+  :func:`repro.core.shard.sharded_dimm_map`, exactly like the
+  charge-sweep kernel.
+* :func:`step_pallas` — one fused observation for
+  :func:`repro.core.controller.step`: a chunk-1 kernel launch against
+  zeroed partials, whose outputs reconstruct the full step return (the
+  one-step timing sums ARE the realized rows bit-for-bit).
+* :func:`accumulate_chunk` — fused
+  :func:`repro.core.perfmodel.trace_score_accumulate` over a materialized
+  decision block.
+
+Layout: the DIMM axis is zero-padded to 1024-DIMM (8 × 128) tiles and
+every per-DIMM operand is stacked on a leading axis (see
+:mod:`.kernel`). Padding lanes carry benign zeros — their accumulator
+columns are sliced away before returning. ``interpret=None`` auto-selects
+interpret mode off-TPU (shared :func:`default_interpret` probe), so CPU
+CI runs the same kernel body that compiles for TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from repro.core.controller import ControllerParams, ControllerState, _JEDEC_ROWS
+from repro.core.perfmodel import ScorePartials, _with_access_axis
+from repro.kernels.charge_sweep.ops import default_interpret
+from repro.kernels.replay_step.kernel import (
+    DIMMS_PER_TILE,
+    ROW_SLOTS,
+    ReplayScalars,
+    accumulate_tiled,
+    replay_chunk_tiled,
+)
+
+#: Accepted implementations for every ``impl=`` switch along the replay
+#: path (``controller.step``, ``stream.replay_stream``,
+#: ``perfmodel.trace_score_accumulate``, ``launch.serve_fleet``).
+IMPLS: Tuple[str, str] = ("ref", "pallas")
+
+__all__ = [
+    "IMPLS",
+    "default_interpret",
+    "replay_scalars",
+    "pallas_chunk_scan",
+    "step_pallas",
+    "accumulate_chunk",
+]
+
+
+def replay_scalars(
+    temp_bins: Tuple[float, ...], params: ControllerParams
+) -> ReplayScalars:
+    """Fold the controller policy into kernel statics, f32-round-tripped:
+    ``float(np.float32(x))`` is exact, so the kernel's f32 view of every
+    scalar is bit-identical to the ref path's traced
+    ``jnp.asarray(x, float32)``."""
+    return ReplayScalars(
+        edges=tuple(float(np.float32(e)) for e in temp_bins),
+        guard_band_c=float(np.float32(params.guard_band_c)),
+        hysteresis_c=float(np.float32(params.hysteresis_c)),
+        hysteresis_steps=int(params.hysteresis_steps),
+        jedec=tuple(float(v) for v in np.asarray(_JEDEC_ROWS).reshape(ROW_SLOTS)),
+    )
+
+
+def canonical_params(params: ControllerParams) -> ControllerParams:
+    """Hashable Python-scalar policy (lru/static-arg friendly)."""
+    return ControllerParams(
+        float(params.guard_band_c),
+        float(params.hysteresis_c),
+        int(params.hysteresis_steps),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Tiling helpers (jit-traceable; all shapes static)
+# ---------------------------------------------------------------------------
+def _padded(n: int) -> int:
+    return -(-n // DIMMS_PER_TILE) * DIMMS_PER_TILE
+
+
+def _tile_flat(a: Array, n_pad: int) -> Array:
+    """(N, ...) per-DIMM leading axis → (lead..., R, 128) tiles, zero-pad."""
+    a = jnp.pad(a, [(0, n_pad - a.shape[0])] + [(0, 0)] * (a.ndim - 1))
+    if a.ndim == 1:
+        return a.reshape(-1, 128)
+    lead = int(np.prod(a.shape[1:]))
+    return a.reshape(n_pad, lead).T.reshape(lead, -1, 128)
+
+
+def _untile(a: Array, n: int, trailing: Tuple[int, ...] = ()) -> Array:
+    """Inverse of :func:`_tile_flat` for one output block."""
+    if a.ndim == 2:
+        return a.reshape(-1)[:n]
+    lead = a.shape[0]
+    out = a.reshape(lead, -1).T[:n]
+    return out.reshape((n,) + trailing) if trailing else out
+
+
+def _tile_steps(a: Array, n_pad: int) -> Array:
+    """(chunk, N) step-major telemetry → (chunk, R, 128)."""
+    a = jnp.pad(a, ((0, 0), (0, n_pad - a.shape[1])))
+    return a.reshape(a.shape[0], -1, 128)
+
+
+# ---------------------------------------------------------------------------
+# The fused chunk scan (stream.replay_stream's impl="pallas" arm)
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=32)
+def _chunk_scan_runner(temp_bins, params, interpret: bool):
+    scal = replay_scalars(temp_bins, params)
+    n_bins = len(temp_bins)
+
+    @jax.jit
+    def run(stack, edges, jparams, state,
+            occupancy, switches, timing_sums, n_steps, temps, errors):
+        # edges/jparams are static in `scal`; kept as arguments so the
+        # sharded wrapper's in_axes match ref.chunk_scan exactly.
+        del edges, jparams
+        n = state.bin_idx.shape[0]
+        n_pad = _padded(n)
+        chunk = temps.shape[0]
+        state3 = jnp.stack(
+            [
+                jnp.pad(state.bin_idx.astype(jnp.int32), (0, n_pad - n)),
+                jnp.pad(state.cool_streak.astype(jnp.int32), (0, n_pad - n)),
+                jnp.pad(state.fused.astype(jnp.int32), (0, n_pad - n)),
+            ]
+        ).reshape(3, -1, 128)
+        occ = _tile_flat(occupancy.astype(jnp.int32), n_pad)
+        sw = _tile_flat(switches.astype(jnp.int32), n_pad)
+        sums = _tile_flat(timing_sums, n_pad)
+        stack_t = _tile_flat(jnp.asarray(stack, jnp.float32), n_pad)
+        temps_t = _tile_steps(jnp.asarray(temps, jnp.float32), n_pad)
+        errs_t = _tile_steps(errors.astype(jnp.float32), n_pad)
+        state3_o, occ_o, sw_o, sums_o = replay_chunk_tiled(
+            state3, occ, sw, sums, stack_t, temps_t, errs_t,
+            scal=scal, interpret=interpret,
+        )
+        new_state = ControllerState(
+            bin_idx=_untile(state3_o[0], n),
+            cool_streak=_untile(state3_o[1], n),
+            fused=_untile(state3_o[2], n) > 0,
+        )
+        return (
+            new_state,
+            _untile(occ_o, n, (n_bins + 1,)),
+            _untile(sw_o, n),
+            _untile(sums_o, n, (2, 4)),
+            n_steps + jnp.int32(chunk),
+        )
+
+    return run
+
+
+def pallas_chunk_scan(
+    temp_bins,
+    params: ControllerParams,
+    interpret: Optional[bool] = None,
+):
+    """A jitted callable with :func:`.ref.chunk_scan`'s exact signature
+    and return tuple ``(state, occupancy, switches, timing_sums,
+    n_steps)``, backed by the fused kernel. Cached per (bin edges,
+    policy, interpret) so repeated streams share compiled programs."""
+    return _chunk_scan_runner(
+        tuple(float(e) for e in temp_bins),
+        canonical_params(params),
+        default_interpret() if interpret is None else bool(interpret),
+    )
+
+
+# ---------------------------------------------------------------------------
+# One fused observation (controller.step's impl="pallas" arm)
+# ---------------------------------------------------------------------------
+def step_pallas(
+    stack: Array,
+    edges: Array,
+    params: ControllerParams,
+    state: ControllerState,
+    temps_c: Array,
+    errors: Optional[Array] = None,
+    interpret: Optional[bool] = None,
+):
+    """One fused fleet observation; same return contract as
+    :func:`repro.core.controller.step`.
+
+    Runs a chunk-1 kernel launch against zeroed partials: the one-step
+    occupancy is the one-hot of the effective bin, the switch counter is
+    the switch flag, and the one-step timing sums ARE the realized
+    ``(N, 2, 4)`` rows — all recovered bit-exactly from the partials."""
+    temp_bins = tuple(float(e) for e in np.asarray(edges))
+    n_bins = len(temp_bins)
+    n = state.bin_idx.shape[0]
+    if errors is None:
+        errors = jnp.zeros(jnp.shape(temps_c), bool)
+    run = pallas_chunk_scan(temp_bins, params, interpret)
+    zero = _zero_partials(n, n_bins)
+    out = run(
+        jnp.asarray(stack), jnp.asarray(edges, jnp.float32),
+        canonical_params(params), state,
+        zero.occupancy, zero.switches, zero.timing_sums, zero.n_steps,
+        jnp.asarray(temps_c, jnp.float32)[None], jnp.asarray(errors, bool)[None],
+    )
+    new_state, occ, switches, sums, _ = out
+    eff = jnp.argmax(occ, axis=-1).astype(jnp.int32)
+    return new_state, sums, switches > 0, eff
+
+
+def _zero_partials(n: int, n_bins: int) -> ScorePartials:
+    return ScorePartials(
+        occupancy=jnp.zeros((n, n_bins + 1), jnp.int32),
+        switches=jnp.zeros((n,), jnp.int32),
+        timing_sums=jnp.zeros((n, 2, 4), jnp.float32),
+        n_steps=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fused partials accumulation (perfmodel's impl="pallas" arm)
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=4)
+def _accumulate_runner(interpret: bool):
+    @jax.jit
+    def run(occupancy, switches, timing_sums, n_steps, timings, bins, switched):
+        s, n = bins.shape
+        n_pad = _padded(n)
+        occ_o, sw_o, sums_o = accumulate_tiled(
+            _tile_steps(bins.astype(jnp.int32), n_pad),
+            _tile_steps(switched.astype(jnp.int32), n_pad),
+            # (S, N, 2, 4) → (S · 8, N) slot-major, slot index s·8 + a·4 + p.
+            _tile_steps(timings.reshape(s, n, ROW_SLOTS).transpose(0, 2, 1)
+                        .reshape(s * ROW_SLOTS, n), n_pad),
+            _tile_flat(occupancy.astype(jnp.int32), n_pad),
+            _tile_flat(switches.astype(jnp.int32), n_pad),
+            _tile_flat(timing_sums, n_pad),
+            interpret=interpret,
+        )
+        n_bins1 = occupancy.shape[-1]
+        return (
+            _untile(occ_o, n, (n_bins1,)),
+            _untile(sw_o, n),
+            _untile(sums_o, n, (2, 4)),
+            n_steps + jnp.int32(s),
+        )
+
+    return run
+
+
+def accumulate_chunk(
+    partials: ScorePartials,
+    timings: Array,
+    bin_idx: Array,
+    switched: Array,
+    interpret: Optional[bool] = None,
+) -> ScorePartials:
+    """Fused :func:`repro.core.perfmodel.trace_score_accumulate`: one
+    kernel pass folds a ``(chunk, N)`` decision block into the running
+    partials. Occupancy/switches are int32 (exact); the f32 timing sums
+    equal the ref's ``timings.sum(axis=0)`` under the cycle-quantization
+    envelope that already makes chunked accumulation exact."""
+    timings = jnp.asarray(timings, jnp.float32)
+    timings = _with_access_axis(timings, split=(timings.ndim == 4))
+    run = _accumulate_runner(
+        default_interpret() if interpret is None else bool(interpret)
+    )
+    occ, sw, sums, n_steps = run(
+        partials.occupancy, partials.switches, partials.timing_sums,
+        partials.n_steps, timings, jnp.asarray(bin_idx),
+        jnp.asarray(switched),
+    )
+    return ScorePartials(occ, sw, sums, n_steps)

@@ -1,0 +1,82 @@
+"""Reference (pure-jnp) replay chunk scan — the semantics definition.
+
+This module OWNS the chunked-scan replay semantics the streaming layer
+(:mod:`repro.core.stream`) runs: one jitted ``lax.scan`` over a chunk of
+steps whose carry is only the :class:`~repro.core.controller.ControllerState`
+pytree plus the running :class:`~repro.core.perfmodel.ScorePartials`.
+Every per-step transition is the SAME vmapped
+:func:`repro.core.controller.step` the materialized replay scans, and the
+per-step :func:`~repro.core.perfmodel.trace_score_accumulate` order is
+bit-identical to summing the whole trace at once (cycle-quantization
+exactness — see :class:`~repro.core.perfmodel.ScorePartials`).
+
+The fused Pallas path (:mod:`.kernel` via :mod:`.ops`) must reproduce
+:func:`chunk_scan` bit-for-bit: final state, occupancy, switch counts and
+float32 timing sums. The fusion win is that the kernel never materializes
+the per-step ``(chunk, n_dimms, 2, 4)`` timing rows — here they exist as
+scan outputs that the compiler dead-code-eliminates in :func:`chunk_scan`
+(and are deliberately KEPT by :func:`chunk_scan_emit`, the
+decision-emitting serving path, which therefore stays on this ref).
+
+The jitted function objects below are module-level singletons on purpose:
+:mod:`repro.core.stream` aliases them (``stream._chunk_scan is
+ref.chunk_scan``), so every streamed caller — and through perfmodel's
+shared sharded accumulate/finalize runners, the materialized sharded
+scorer — keeps hitting the SAME compiled programs. Program identity, not
+just math, is what the bitwise same-mesh parity gates rely on.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.controller import step
+from repro.core.perfmodel import ScorePartials, trace_score_accumulate
+
+
+def chunk_body(stack, edges, params, state, partials, temps, errors):
+    """Scan one chunk, accumulating score partials per step in the carry."""
+
+    def body(carry, xs):
+        st, p = carry
+        temps_s, errs_s = xs
+        st, rows, switched, eff = step(stack, edges, params, st, temps_s, errs_s)
+        # rows[None]: one-step (1, N, 2, 4) block — by the quantization
+        # exactness argument this per-step accumulation order is
+        # bit-identical to summing the whole trace at once.
+        p = trace_score_accumulate(p, rows[None], eff[None], switched[None])
+        return (st, p), (rows, switched, eff)
+
+    (state, partials), (rows, switched, eff) = jax.lax.scan(
+        body, (state, partials), (temps, errors)
+    )
+    return state, partials, rows, switched, eff
+
+
+@jax.jit
+def chunk_scan(stack, edges, params, state,
+               occupancy, switches, timing_sums, n_steps, temps, errors):
+    """Memory-bounded chunk scan: returns ONLY the carried pytrees —
+    per-step outputs are dead code the compiler drops, so peak memory is
+    the input chunk plus O(n_dimms) carry. Partials travel as separate
+    leaves (not a ScorePartials arg) so the sharded wrapper can give
+    ``n_steps`` a replicated axis spec."""
+    partials = ScorePartials(occupancy, switches, timing_sums, n_steps)
+    state, partials, _, _, _ = chunk_body(
+        stack, edges, params, state, partials, temps, errors
+    )
+    return (state,) + tuple(partials)
+
+
+@jax.jit
+def chunk_scan_emit(stack, edges, params, state,
+                    occupancy, switches, timing_sums, n_steps, temps, errors):
+    """Decision-emitting chunk scan (the serving path): additionally
+    returns the realized ``(chunk, N, 2, 4)`` timing rows, ``(chunk, N)``
+    switch flags and effective bins — O(chunk · n_dimms), bounded by the
+    chunk, for callers that program hardware from the decisions."""
+    partials = ScorePartials(occupancy, switches, timing_sums, n_steps)
+    state, partials, rows, switched, eff = chunk_body(
+        stack, edges, params, state, partials, temps, errors
+    )
+    return (state,) + tuple(partials) + (rows, switched, eff)

@@ -12,11 +12,15 @@ only O(n_dimms) state + score partials no matter how long it runs, every
 chunk is one jitted scan (double-buffered host→device ingestion), and the
 running score is bit-exact vs materializing the whole history. Composes
 with the ``"dimm"`` device mesh (:mod:`repro.core.shard`) for fleets
-bigger than one device.
+bigger than one device, and with ``impl="pallas"`` for the fused
+replay-step kernel (:mod:`repro.kernels.replay_step`): non-decision
+chunks then run step + timing lookup + score accumulation in one
+VMEM-resident kernel pass, bit-exact vs the ref scan.
 
 Usage (demo driver feeding a synthetic scenario through the service):
   PYTHONPATH=src python -m repro.launch.serve_fleet \
-      --n-dimms 512 --n-steps 1440 --chunk 256 --scenario diurnal
+      --n-dimms 512 --n-steps 1440 --chunk 256 --scenario diurnal \
+      --impl pallas
 """
 
 from __future__ import annotations
@@ -53,8 +57,11 @@ class FleetControllerService:
         table: DimmTimingTable,
         params: ControllerParams = ControllerParams(),
         mesh=None,
+        impl: str = "ref",
     ):
-        self.engine = stream.StreamingController(table, params=params, mesh=mesh)
+        self.engine = stream.StreamingController(
+            table, params=params, mesh=mesh, impl=impl
+        )
 
     @property
     def table(self) -> DimmTimingTable:
@@ -99,6 +106,7 @@ def serve(
     sharded: bool = False,
     seed: int = 0,
     table: Optional[DimmTimingTable] = None,
+    impl: str = "ref",
 ) -> Dict[str, float]:
     """Demo driver: boot the service, stream a synthetic scenario through
     it chunk by chunk, report throughput + the running score."""
@@ -110,7 +118,7 @@ def serve(
         from repro.core import shard
 
         mesh = shard.fleet_mesh()
-    service = FleetControllerService(table, mesh=mesh)
+    service = FleetControllerService(table, mesh=mesh, impl=impl)
 
     k_t, k_e = jax.random.split(jax.random.fold_in(key, 1))
     trace = np.asarray(traces.generate(scenario, k_t, n_dimms, n_steps, dt_s=dt_s))
@@ -131,7 +139,7 @@ def serve(
     realtime = n_steps * dt_s / max(wall, 1e-9)
     print(
         f"[serve_fleet] {scenario}: {n_dimms} DIMMs × {n_steps} steps "
-        f"(chunk {chunk}{', sharded' if sharded else ''}"
+        f"(chunk {chunk}, impl {impl}{', sharded' if sharded else ''}"
         f"{', decisions' if decisions else ''}) | "
         f"{resp.get('n_chunks', 0)} chunks in {wall:.2f} s "
         f"({n_steps * n_dimms / max(wall, 1e-9):,.0f} obs/s, "
@@ -172,12 +180,15 @@ def main() -> None:
                     help="return per-chunk timing rows / bin decisions")
     ap.add_argument("--sharded", action="store_true",
                     help="shard the DIMM axis over the fleet mesh")
+    ap.add_argument("--impl", default="ref", choices=("ref", "pallas"),
+                    help="chunk-scan implementation (pallas = fused kernel)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve(
         n_dimms=args.n_dimms, n_steps=args.n_steps, chunk=args.chunk,
         scenario=args.scenario, error_rate=args.error_rate,
         decisions=args.decisions, sharded=args.sharded, seed=args.seed,
+        impl=args.impl,
     )
 
 

@@ -231,6 +231,67 @@ def test_wrapper_replay_stream_absorbs_like_replay():
     assert b.switch_count == a.switch_count
 
 
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([(25, 25, 22), (71, 1), (1, 70, 1), (13, 13, 13, 13, 13, 7)]),
+       st.sampled_from(["ref", "pallas"]))
+def test_ingest_ragged_chunk_partitions(partition, impl):
+    """ingest() over arbitrary uneven partitions of the step axis —
+    including a final chunk of a single step — absorbs identically to the
+    one-shot materialized replay, under both chunk-scan impls. Every
+    partition retraces the scan at a new chunk length; the carried
+    state/partials must be invisible to that."""
+    assert sum(partition) == N_STEPS
+    n = 5
+    table = _sub_table(n)
+    trace, errors = _trace(n, 0.02)
+    ref, score_ref = _materialized(n, 0.02)
+    eng = stream.StreamingController(table, impl=impl)
+    s = 0
+    for size in partition:
+        eng.ingest(trace[s:s + size], errors[s:s + size])
+        s += size
+    assert eng.n_steps == N_STEPS
+    assert eng.n_chunks == len(partition)
+    assert eng.errors_total == int(errors.sum())
+    assert eng.score() == score_ref
+    assert eng.total_switches == ref.total_switches
+    _assert_state_equal(eng.state, ref.state)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.sampled_from([1, 17]), st.sampled_from(["ref", "pallas"]))
+def test_ingest_errors_on_chunk_boundaries(chunk, impl):
+    """Error injections landing EXACTLY on chunk seams — the last step of
+    one ingest() call and the first step of the next — fuse to JEDEC
+    identically to the unchunked replay. The fuse flag crosses the chunk
+    boundary inside the carried ControllerState; a carry bug shows up
+    precisely here and nowhere else."""
+    n = 5
+    table = _sub_table(n)
+    trace, _ = _trace(n, 0.0)
+    errors = np.zeros((N_STEPS, n), bool)
+    # DIMM 0 errors on the final step of every chunk, DIMM 1 on the first
+    # step after every seam, DIMM 2 on both sides of one seam.
+    for s in range(chunk - 1, N_STEPS, chunk):
+        errors[s, 0] = True
+        if s + 1 < N_STEPS:
+            errors[s + 1, 1] = True
+    seam = min(2 * chunk, N_STEPS) - 1
+    errors[seam - 1:seam + 1, 2] = True
+    ref = controller.replay(table, trace, errors)
+    score_ref = perfmodel.trace_score(table.stack, ref)
+    eng = stream.StreamingController(table, impl=impl)
+    for t, e in stream.iter_chunks(trace, errors, chunk):
+        eng.ingest(t, e)
+    assert np.asarray(eng.state.fused)[:3].all()  # all three DIMMs fused
+    assert eng.errors_total == int(errors.sum())
+    assert eng.score() == score_ref
+    _assert_state_equal(eng.state, ref.state)
+    np.testing.assert_array_equal(
+        np.asarray(eng.partials.switches), np.asarray(ref.switch_counts)
+    )
+
+
 # ---------------------------------------------------------------------------
 # Validation / memory-model edges
 # ---------------------------------------------------------------------------
