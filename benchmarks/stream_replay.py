@@ -58,6 +58,7 @@ ensure_host_devices()  # before jax initializes its backend
 import jax
 import numpy as np
 
+from repro import analysis
 from repro.core import controller, fleet, perfmodel, stream, traces
 from repro.kernels.replay_step import default_interpret
 
@@ -288,11 +289,16 @@ def run_tiny(chunk: int = 96, error_rate: float = 0.002, seed: int = 0,
                              f"chunk={c} streamed score", exact=True)
         results[c] = res
 
-    # Timed steady-state streamed pass (compiled above) vs materialized.
-    t0 = time.perf_counter()
-    res = stream.replay_stream(table, trace, errors, chunk_steps=chunk)
-    jax.block_until_ready(res.state)
-    t_stream = time.perf_counter() - t0
+    # Timed steady-state streamed pass (compiled above) vs materialized,
+    # under the runtime sanitizers with retrace accounting: every hot
+    # runner must serve the timed pass from its compile cache — a
+    # nonzero lint/retrace_* row below is a retrace storm starting.
+    retrace = analysis.RetraceCounter()
+    with analysis.sanitize(), retrace:
+        t0 = time.perf_counter()
+        res = stream.replay_stream(table, trace, errors, chunk_steps=chunk)
+        jax.block_until_ready(res.state)
+        t_stream = time.perf_counter() - t0
     t0 = time.perf_counter()
     ref2 = controller.replay(table, trace, errors)
     jax.block_until_ready(ref2.timings)
@@ -313,6 +319,12 @@ def run_tiny(chunk: int = 96, error_rate: float = 0.002, seed: int = 0,
          score_ref["speedup_realized_intensive_mean"],
          f"paper claim {perfmodel.PAPER_CLAIM_SPEEDUP}"),
     ]
+    # Steady-state compile accounting (0 expected for every runner).
+    rows += list(retrace.rows(expected={n: 0 for n in retrace.runners}))
+    if retrace.total():
+        raise AssertionError(
+            f"steady-state retrace detected: {retrace.deltas}"
+        )
     if sharded:
         rows += _sharded_section(table, trace, errors, chunk, score_ref)
     krows, bench = _kernel_section(table, trace, errors, chunk, n_steps,
@@ -394,9 +406,10 @@ def run_full(n_dimms: int = 1_000_000, n_steps: int = 1440,
         print(f"# streaming {n_dimms:,} x {n_steps} (chunk {chunk}) ...",
               flush=True)
     t0 = time.perf_counter()
-    res = stream.replay_stream(table, source(), chunk_steps=chunk, mesh=mesh,
-                               impl=impl)
-    jax.block_until_ready(res.state)
+    with analysis.sanitize():  # rank-promotion raise over the whole stream
+        res = stream.replay_stream(table, source(), chunk_steps=chunk,
+                                   mesh=mesh, impl=impl)
+        jax.block_until_ready(res.state)
     t_stream = time.perf_counter() - t0
     t0 = time.perf_counter()
     score = res.score()
@@ -499,25 +512,30 @@ def main() -> None:
         int(c) for c in args.chunk_sweep.split(",")
     ) if args.chunk_sweep else ()
 
+    # One sanitize() scope over the whole run: jit cache keys include the
+    # guard config, so mixing sanitized and unsanitized regions would
+    # recompile every program at the boundary (and trip the retrace gate).
     if args.tiny:
         conflicts = [name for name, val in (
             ("--n-dimms", args.n_dimms), ("--n-steps", args.n_steps),
         ) if val is not None]
         if conflicts:
             ap.error(f"--tiny fixes the configuration; remove {', '.join(conflicts)}")
-        rows, (bench_cfg, bench) = run_tiny(
-            chunk=args.chunk,
-            error_rate=0.002 if args.error_rate is None else args.error_rate,
-            seed=args.seed, sharded=args.sharded, chunk_sweep=sweep,
-        )
+        with analysis.sanitize():
+            rows, (bench_cfg, bench) = run_tiny(
+                chunk=args.chunk,
+                error_rate=0.002 if args.error_rate is None else args.error_rate,
+                seed=args.seed, sharded=args.sharded, chunk_sweep=sweep,
+            )
     else:
-        rows, (bench_cfg, bench) = run_full(
-            n_dimms=1_000_000 if args.n_dimms is None else args.n_dimms,
-            n_steps=1440 if args.n_steps is None else args.n_steps,
-            chunk=args.chunk,
-            error_rate=1e-5 if args.error_rate is None else args.error_rate,
-            seed=args.seed, sharded=args.sharded, impl=args.impl,
-        )
+        with analysis.sanitize():
+            rows, (bench_cfg, bench) = run_full(
+                n_dimms=1_000_000 if args.n_dimms is None else args.n_dimms,
+                n_steps=1440 if args.n_steps is None else args.n_steps,
+                chunk=args.chunk,
+                error_rate=1e-5 if args.error_rate is None else args.error_rate,
+                seed=args.seed, sharded=args.sharded, impl=args.impl,
+            )
     for name, value, ref in rows:
         print(f"{name},{value:.6g},{ref}")
     meta = {"tiny": args.tiny, "sharded": args.sharded, "seed": args.seed}

@@ -1,0 +1,32 @@
+"""Runtime sanitizers: the dynamic half of the repro-lint story.
+
+:mod:`tools.repro_lint` catches convention violations the AST can see;
+this package catches the ones only a running program exposes — implicit
+host↔device transfers, silent rank promotion, NaNs born inside jitted
+code, and recompilation storms. Everything funnels through one context:
+
+    with repro.analysis.sanitize():
+        ...   # tier-1 tests, benchmarks
+
+``conftest.py`` wraps every test in it (env-overridable, see
+:func:`sanitize`); benchmarks wrap their measured region in it and
+report retrace counts as ``lint/retrace_*`` rows.
+"""
+
+from repro.analysis.retrace import (  # noqa: F401
+    RetraceCounter,
+    default_runners,
+)
+from repro.analysis.sanitizers import (  # noqa: F401
+    SanitizeConfig,
+    config_from_env,
+    sanitize,
+)
+
+__all__ = [
+    "RetraceCounter",
+    "SanitizeConfig",
+    "config_from_env",
+    "default_runners",
+    "sanitize",
+]

@@ -1,0 +1,97 @@
+"""Retrace counter: recompilation accounting for the named hot runners.
+
+jax recompiles a jitted function whenever it sees a new (shape, dtype,
+static-args) signature. A retrace in steady state is always a bug — a
+non-canonical static (the hashable-but-fresh failure mode the
+static-hashability lint hunts), a shape leak, or a weak-type flip — and
+it silently turns a microsecond dispatch into a multi-second compile.
+
+``RetraceCounter`` samples ``jit(...)._cache_size()`` for a named set of
+runners and reports per-runner deltas over a scope::
+
+    with RetraceCounter() as rc:
+        run_replay_three_ways()
+    assert rc.deltas["replay.chunk_scan"] == 3   # one compile per chunking
+
+The default runner set is the repo's steady-state hot paths: the replay
+chunk scans and the fleet sweep grids. Benchmarks surface the same
+deltas as ``lint/retrace_<name>`` rows (value = observed compiles,
+ref = expected), so a retrace storm shows up in benchmark JSON diffs,
+not just in local debugging.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Mapping, Optional, Tuple
+
+#: A jitted callable exposing ``_cache_size()`` (every ``jax.jit`` result).
+Jitted = Callable
+
+
+def default_runners() -> Dict[str, Jitted]:
+    """The steady-state hot runners worth watching, by stable name."""
+    from repro.core import fleet
+    from repro.kernels.replay_step import ref as replay_ref
+
+    return {
+        "replay.chunk_scan": replay_ref.chunk_scan,
+        "replay.chunk_scan_emit": replay_ref.chunk_scan_emit,
+        "fleet.sweep_grid": fleet._sweep_grid,
+        "fleet.sweep_grid_pallas": fleet._sweep_grid_pallas,
+    }
+
+
+def _cache_size(fn: Jitted) -> int:
+    size = getattr(fn, "_cache_size", None)
+    if size is None:
+        raise TypeError(
+            f"{fn!r} exposes no _cache_size(): RetraceCounter only tracks "
+            "jax.jit-wrapped callables"
+        )
+    return int(size())
+
+
+class RetraceCounter:
+    """Context manager measuring compile-cache growth per named runner."""
+
+    def __init__(self, runners: Optional[Mapping[str, Jitted]] = None):
+        self.runners: Dict[str, Jitted] = dict(
+            runners if runners is not None else default_runners()
+        )
+        self._baseline: Dict[str, int] = {}
+        self.deltas: Dict[str, int] = {}
+
+    def snapshot(self) -> Dict[str, int]:
+        return {name: _cache_size(fn) for name, fn in self.runners.items()}
+
+    def __enter__(self) -> "RetraceCounter":
+        self._baseline = self.snapshot()
+        self.deltas = {}
+        return self
+
+    def __exit__(self, *exc) -> None:
+        now = self.snapshot()
+        self.deltas = {
+            name: now[name] - self._baseline[name] for name in self.runners
+        }
+
+    def total(self) -> int:
+        return sum(self.deltas.values())
+
+    def rows(
+        self, expected: Optional[Mapping[str, int]] = None
+    ) -> Tuple[Tuple[str, float, float], ...]:
+        """Benchmark rows ``(lint/retrace_<name>, observed, expected)``.
+
+        ``expected`` defaults to the observed value (informational row);
+        pass explicit expectations to make a downstream diff meaningful.
+        """
+        expected = dict(expected or {})
+        return tuple(
+            (
+                f"lint/retrace_{name}",
+                float(delta),
+                float(expected.get(name, delta)),
+            )
+            for name, delta in sorted(self.deltas.items())
+        )

@@ -1,0 +1,118 @@
+"""``sanitize()``: one context manager wiring jax's runtime guards.
+
+Three guards, each a jax config scope, composed so callers never wire
+them individually:
+
+* ``transfer_guard`` — implicit host↔device transfers. ``"disallow"``
+  is the strict setting, but it rejects *compile-time* constant
+  transfers too (even a scalar ``1.0`` inside jit), so it is only
+  usable around pre-compiled steady-state regions with device-resident
+  data — exactly how ``tests/test_sanitizers.py`` exercises it. The
+  suite-wide default is therefore ``"allow"``; hot paths opt into
+  strictness locally.
+* ``numpy_rank_promotion`` — implicit rank promotion (``(n, 4)`` op
+  ``(4,)``) silently broadcasts under numpy rules and has repeatedly
+  hidden axis bugs; ``"raise"`` is the suite default (the whole tree
+  runs clean under it — broadcasts are explicit now).
+* ``debug_nans`` — re-runs jitted computations op-by-op when a NaN
+  appears. Expensive, so off by default; flip on when hunting.
+
+Environment overrides (read by :func:`config_from_env`, used by
+conftest):
+
+* ``REPRO_SANITIZE=0``            — disable the whole context
+* ``REPRO_TRANSFER_GUARD=<mode>`` — allow | log | disallow (and _explicit variants)
+* ``REPRO_RANK_PROMOTION=<mode>`` — allow | warn | raise
+* ``REPRO_DEBUG_NANS=1``          — enable NaN debugging
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import jax
+
+_TRANSFER_MODES = (
+    "allow", "log", "disallow", "log_explicit", "disallow_explicit",
+)
+_RANK_MODES = ("allow", "warn", "raise")
+
+
+@dataclass(frozen=True)
+class SanitizeConfig:
+    """Resolved guard settings for one :func:`sanitize` scope."""
+
+    transfer_guard: str = "allow"
+    rank_promotion: str = "raise"
+    debug_nans: bool = False
+    enabled: bool = True
+
+    def __post_init__(self) -> None:
+        if self.transfer_guard not in _TRANSFER_MODES:
+            raise ValueError(
+                f"transfer_guard={self.transfer_guard!r}: "
+                f"expected one of {_TRANSFER_MODES}"
+            )
+        if self.rank_promotion not in _RANK_MODES:
+            raise ValueError(
+                f"rank_promotion={self.rank_promotion!r}: "
+                f"expected one of {_RANK_MODES}"
+            )
+
+
+def config_from_env(**overrides) -> SanitizeConfig:
+    """The environment-driven config conftest and benchmarks use."""
+    cfg = dict(
+        enabled=os.environ.get("REPRO_SANITIZE", "1") != "0",
+        transfer_guard=os.environ.get("REPRO_TRANSFER_GUARD", "allow"),
+        rank_promotion=os.environ.get("REPRO_RANK_PROMOTION", "raise"),
+        debug_nans=os.environ.get("REPRO_DEBUG_NANS", "0") == "1",
+    )
+    cfg.update(overrides)
+    return SanitizeConfig(**cfg)
+
+
+@contextlib.contextmanager
+def sanitize(
+    config: Optional[SanitizeConfig] = None,
+    *,
+    transfer_guard: Optional[str] = None,
+    rank_promotion: Optional[str] = None,
+    debug_nans: Optional[bool] = None,
+) -> Iterator[SanitizeConfig]:
+    """Enter the configured guard scopes (a no-op when disabled).
+
+    Keyword arguments override individual fields of ``config`` (which
+    defaults to :func:`config_from_env`), so a strict steady-state block
+    inside an otherwise-default suite reads::
+
+        with analysis.sanitize(transfer_guard="disallow"):
+            run_precompiled_loop()
+    """
+    cfg = config or config_from_env()
+    kw = {}
+    if transfer_guard is not None:
+        kw["transfer_guard"] = transfer_guard
+    if rank_promotion is not None:
+        kw["rank_promotion"] = rank_promotion
+    if debug_nans is not None:
+        kw["debug_nans"] = debug_nans
+    if kw:
+        cfg = SanitizeConfig(
+            transfer_guard=kw.get("transfer_guard", cfg.transfer_guard),
+            rank_promotion=kw.get("rank_promotion", cfg.rank_promotion),
+            debug_nans=kw.get("debug_nans", cfg.debug_nans),
+            enabled=cfg.enabled,
+        )
+    if not cfg.enabled:
+        yield cfg
+        return
+    with contextlib.ExitStack() as stack:
+        stack.enter_context(jax.transfer_guard(cfg.transfer_guard))
+        stack.enter_context(jax.numpy_rank_promotion(cfg.rank_promotion))
+        if cfg.debug_nans:
+            stack.enter_context(jax.debug_nans(True))
+        yield cfg

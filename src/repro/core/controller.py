@@ -335,8 +335,14 @@ class ControllerState(NamedTuple):
     fused: Array        # (..., ) bool
 
 
+@functools.partial(jax.jit, static_argnames=("n_dimms", "n_bins"))
 def init_state(n_dimms: int, n_bins: int) -> ControllerState:
-    """Boot state: every DIMM in the most conservative *profiled* bin."""
+    """Boot state: every DIMM in the most conservative *profiled* bin.
+
+    Jitted (both args static) so steady-state callers — e.g. a
+    ``replay_stream`` loop inside a ``jax.transfer_guard("disallow")``
+    scope — materialize the constants from the compile cache instead of
+    an implicit host→device transfer per call."""
     return ControllerState(
         bin_idx=jnp.full((n_dimms,), n_bins - 1, jnp.int32),
         cool_streak=jnp.zeros((n_dimms,), jnp.int32),

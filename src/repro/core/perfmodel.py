@@ -364,7 +364,8 @@ def fleet_speedups(
     jedec = jnp.asarray([list(JEDEC_DDR3_1600)], jnp.float32)
     base = evaluate_stack(jedec, cfg, workloads, split=False)[0]
     ipc = evaluate_stack(timings, cfg, workloads, split=split)
-    return jnp.exp(jnp.log(ipc / base).mean(axis=-1))
+    ratio = ipc / jnp.broadcast_to(base, jnp.shape(ipc))
+    return jnp.exp(jnp.log(ratio).mean(axis=-1))
 
 
 # ---------------------------------------------------------------------------
@@ -388,7 +389,8 @@ def time_in_bin(bin_idx: Array, n_bins: int) -> Array:
     ``bin_idx`` is the ``(n_steps, n_dimms)`` effective-row trace from
     :class:`repro.core.controller.ReplayResult` (``n_bins`` = the JEDEC
     sentinel); returns ``(n_dimms, n_bins + 1)`` fractions summing to 1."""
-    return (bin_idx[:, :, None] == jnp.arange(n_bins + 1)).mean(axis=0)
+    bins = jnp.arange(n_bins + 1)[None, None, :]
+    return (bin_idx[:, :, None] == bins).mean(axis=0)
 
 
 def realized_latency_reductions(timings: Array) -> Dict[str, Array]:
@@ -412,8 +414,8 @@ def realized_latency_reductions(timings: Array) -> Dict[str, Array]:
     return {
         "read": 1.0 - read.mean(axis=0) / JEDEC_DDR3_1600.read_sum,
         "write": 1.0 - write.mean(axis=0) / JEDEC_DDR3_1600.write_sum,
-        "read_params": 1.0 - rs.mean(axis=0) / jedec,
-        "write_params": 1.0 - ws.mean(axis=0) / jedec,
+        "read_params": 1.0 - rs.mean(axis=0) / jedec[None, :],
+        "write_params": 1.0 - ws.mean(axis=0) / jedec[None, :],
     }
 
 
@@ -447,8 +449,13 @@ class ScorePartials(NamedTuple):
     n_steps: Array      # () int32
 
 
+@functools.partial(jax.jit, static_argnames=("n_dimms", "n_bins"))
 def trace_score_init(n_dimms: int, n_bins: int) -> ScorePartials:
-    """Zeroed accumulators for an ``n_dimms``-DIMM, ``n_bins``-bin fleet."""
+    """Zeroed accumulators for an ``n_dimms``-DIMM, ``n_bins``-bin fleet.
+
+    Jitted (both args static): zero-filling is then a compile-time
+    constant, so re-initializing partials inside a strict
+    ``transfer_guard`` scope stays legal once warm."""
     return ScorePartials(
         occupancy=jnp.zeros((n_dimms, n_bins + 1), jnp.int32),
         switches=jnp.zeros((n_dimms,), jnp.int32),
@@ -493,7 +500,7 @@ def trace_score_accumulate(
     timings = jnp.asarray(timings, jnp.float32)
     timings = _with_access_axis(timings, split=(timings.ndim == 4))
     n_bins1 = partials.occupancy.shape[-1]
-    occ = (bin_idx[:, :, None] == jnp.arange(n_bins1)).sum(axis=0)
+    occ = (bin_idx[:, :, None] == jnp.arange(n_bins1)[None, None, :]).sum(axis=0)
     return ScorePartials(
         occupancy=partials.occupancy + occ.astype(jnp.int32),
         switches=partials.switches + switched.sum(axis=0).astype(jnp.int32),
@@ -526,8 +533,8 @@ def _score_figures(
     red = {
         "read": 1.0 - read_mean / JEDEC_DDR3_1600.read_sum,
         "write": 1.0 - write_mean / JEDEC_DDR3_1600.write_sum,
-        "read_params": 1.0 - rs / jedec,
-        "write_params": 1.0 - ws / jedec,
+        "read_params": 1.0 - rs / jedec[None, :],
+        "write_params": 1.0 - ws / jedec[None, :],
     }
     jedec_rows = jnp.broadcast_to(jedec, (stack.shape[0], 1, 2, 4))
     rows = jnp.concatenate([stack, jedec_rows], axis=1)          # (N, B+1, 2, 4)

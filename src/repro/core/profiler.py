@@ -234,13 +234,20 @@ def joint_min_timings(
     raw = jnp.stack(
         [jnp.broadcast_to(t, cells.r.shape) for t in (trcd, tras, twr, trp)], axis=-1
     )
-    jedec = jnp.asarray(JEDEC_VEC, jnp.float32)
-    return jnp.minimum(jnp.ceil(raw / tck) * tck, jedec)
+    quantized = jnp.ceil(raw / tck) * tck
+    # Explicit broadcast: (..., 4) vs (4,) trips jax_numpy_rank_promotion.
+    jedec = jnp.broadcast_to(
+        jnp.asarray(JEDEC_VEC, jnp.float32), quantized.shape
+    )
+    return jnp.minimum(quantized, jedec)
 
 
 def stack_reductions(timings: Array) -> Array:
     """Fractional reduction vs JEDEC for a ``(..., 4)`` timing stack."""
-    return 1.0 - timings / jnp.asarray(JEDEC_VEC, jnp.float32)
+    jedec = jnp.broadcast_to(
+        jnp.asarray(JEDEC_VEC, jnp.float32), jnp.shape(timings)
+    )
+    return 1.0 - timings / jedec
 
 
 def _unstack(timings: Array) -> Dict[str, Array]:

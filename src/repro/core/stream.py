@@ -337,9 +337,13 @@ def replay_stream(
 
     n = table.n_dimms
     partials = trace_score_init(n, table.n_bins)
-    stack = jnp.asarray(table.stack)
-    edges = jnp.asarray(table.temp_bins, jnp.float32)
-    jparams = ControllerParams(*(jnp.asarray(p) for p in params))
+    # Explicit staging: these host tables cross to the device exactly once
+    # per stream, and device_put keeps that legal under
+    # jax.transfer_guard("disallow") scopes (implicit jnp.asarray
+    # transfers are what the guard exists to catch).
+    stack = jax.device_put(np.asarray(table.stack))
+    edges = jax.device_put(np.asarray(table.temp_bins, np.float32))
+    jparams = ControllerParams(*(jax.device_put(p) for p in params))
     run = _chunk_runner(mesh, n, table.temp_bins, params,
                         emit=False, impl=impl, interpret=interpret)
 

@@ -106,8 +106,11 @@ def diurnal(
     skew = skew_c * jax.random.uniform(
         k_skew, (n_dimms,), jnp.float32, -1.0, 1.0
     )
-    wave = swing_c * jnp.sin(2.0 * jnp.pi * t_s / period_s + phase)
-    out = base_c + skew + wave + _sensor_noise(k_noise, (n_steps, n_dimms), noise_c)
+    wave = swing_c * jnp.sin(2.0 * jnp.pi * t_s / period_s + phase[None, :])
+    out = (
+        base_c + skew[None, :] + wave
+        + _sensor_noise(k_noise, (n_steps, n_dimms), noise_c)
+    )
     return enforce_drift_bound(jnp.maximum(out, MIN_AMBIENT_C), dt_s)
 
 
@@ -126,7 +129,7 @@ def cold_start(
     steady = diurnal(key, n_dimms, n_steps, dt_s, **diurnal_kw)
     t_s = jnp.arange(n_steps, dtype=jnp.float32)[:, None] * dt_s
     settle = jnp.exp(-t_s / settle_tau_s)
-    out = steady + (start_c - steady[0]) * settle
+    out = steady + (start_c - steady[0])[None, :] * settle
     return enforce_drift_bound(out, dt_s)
 
 

@@ -39,7 +39,8 @@ def init_rmsnorm(d: int) -> Dict[str, Array]:
 def rmsnorm(params: Dict[str, Array], x: Array, eps: float = 1e-6) -> Array:
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
-    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + params["scale"])
+    scale = jnp.broadcast_to(1.0 + params["scale"], xf.shape)
+    y = xf * jax.lax.rsqrt(var + eps) * scale
     return y.astype(x.dtype)
 
 

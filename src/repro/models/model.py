@@ -139,7 +139,10 @@ def lm_loss(
     lse = jax.scipy.special.logsumexp(lf, axis=-1)
     # Label pick via masked reduction: unlike take_along_axis, this keeps
     # the vocab axis sharded (no cross-shard gather of the logits).
-    vocab_iota = jnp.arange(lf.shape[-1], dtype=labels.dtype)
+    vocab_iota = jnp.broadcast_to(
+        jnp.arange(lf.shape[-1], dtype=labels.dtype),
+        lab.shape + (lf.shape[-1],),
+    )
     picked = jnp.sum(
         jnp.where(vocab_iota == lab[..., None], lf, 0.0), axis=-1
     )

@@ -71,7 +71,8 @@ def _block_diag_linear(x: Array, w: Array, b: Array, n_heads: int) -> Array:
     drh = w.shape[1]
     xh = x.astype(jnp.float32).reshape(shape[:-1] + (n_heads, drh))
     y = jnp.einsum("...hd,hde->...he", xh, w)
-    return y.reshape(shape[:-1] + (n_heads * drh,)) + b
+    yr = y.reshape(shape[:-1] + (n_heads * drh,))
+    return yr + jnp.broadcast_to(b, yr.shape)
 
 
 def rglru_scan(
@@ -81,7 +82,8 @@ def rglru_scan(
     Returns (h (B,S,dr) fp32→x.dtype, final state (B,dr) fp32)."""
     r = jax.nn.sigmoid(_block_diag_linear(x, p["w_a"], p["b_a"], cfg.n_heads))
     i = jax.nn.sigmoid(_block_diag_linear(x, p["w_i"], p["b_i"], cfg.n_heads))
-    log_a = -cfg.rglru_c * jax.nn.softplus(p["lam"]) * r  # (B,S,dr) fp32
+    lam = jnp.broadcast_to(jax.nn.softplus(p["lam"]), r.shape)
+    log_a = -cfg.rglru_c * lam * r  # (B,S,dr) fp32
     a = jnp.exp(log_a)
     # √(1−a²) computed stably from log a.
     beta = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12))
@@ -103,7 +105,7 @@ def rglru_step(p: Dict, x1: Array, cfg: ModelConfig, h_prev: Array) -> Tuple[Arr
     """One-token update. x1: (B, dr); h_prev: (B, dr) fp32."""
     r = jax.nn.sigmoid(_block_diag_linear(x1, p["w_a"], p["b_a"], cfg.n_heads))
     i = jax.nn.sigmoid(_block_diag_linear(x1, p["w_i"], p["b_i"], cfg.n_heads))
-    log_a = -cfg.rglru_c * jax.nn.softplus(p["lam"]) * r
+    log_a = -cfg.rglru_c * jnp.broadcast_to(jax.nn.softplus(p["lam"]), r.shape) * r
     a = jnp.exp(log_a)
     beta = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12))
     h_new = a * h_prev + beta * (i * x1.astype(jnp.float32))

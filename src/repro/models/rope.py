@@ -23,7 +23,8 @@ def _rot_half_pairs(x: Array) -> Array:
 def _angles(positions: Array, dim: int, theta: float) -> Array:
     """(…, S) → (…, S, dim/2) rotation angles."""
     inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
-    return positions.astype(jnp.float32)[..., None] * inv_freq
+    pos = positions.astype(jnp.float32)[..., None]
+    return pos * jnp.broadcast_to(inv_freq, pos.shape[:-1] + inv_freq.shape)
 
 
 def _apply(x: Array, ang: Array) -> Array:

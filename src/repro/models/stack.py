@@ -166,11 +166,13 @@ def _mlstm_decode(p, h, cfg, cache):
     q = (xc @ p["wq"]).reshape(b, nh, dh)
     k = (xc @ p["wk"]).reshape(b, nh, dh) * (dh**-0.5)
     v = (xm[:, 0] @ p["wv"]).reshape(b, nh, dh)
-    gates = xc.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]
+    gates = xc.astype(jnp.float32) @ p["w_gates"]
+    gates = gates + jnp.broadcast_to(p["b_gates"], gates.shape)
     i_log, f_raw = jnp.split(gates, 2, axis=-1)
     f_log = jax.nn.log_sigmoid(f_raw)
     state, hv = xlstm.mlstm_step(cache.state, q, k, v, i_log, f_log)
-    hflat = hv.reshape(b, 1, di).astype(h.dtype) + p["skip"] * xc[:, None]
+    skip = jnp.broadcast_to(p["skip"], xc[:, None].shape) * xc[:, None]
+    hflat = hv.reshape(b, 1, di).astype(h.dtype) + skip
     out = (hflat * jax.nn.silu(gate)) @ p["w_down"]
     return out, xlstm.MLSTMCache(state=state, conv=window[:, 1:])
 

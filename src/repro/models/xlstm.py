@@ -203,13 +203,14 @@ def mlstm_block_forward(
     q = (xc @ p["wq"]).reshape(b, s, h, dh)
     k = (xc @ p["wk"]).reshape(b, s, h, dh) * (dh**-0.5)
     v = (xm @ p["wv"]).reshape(b, s, h, dh)
-    gates = xc.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]  # (B,S,2H)
+    gates = xc.astype(jnp.float32) @ p["w_gates"]  # (B,S,2H)
+    gates = gates + jnp.broadcast_to(p["b_gates"], gates.shape)
     i_log, f_raw = jnp.split(gates, 2, axis=-1)
     f_log = jax.nn.log_sigmoid(f_raw)
 
     state = cache.state if cache is not None else mlstm_zero_state(b, h, dh)
     hseq, final = mlstm_chunked(q, k, v, i_log, f_log, state, cfg.chunk_len)
-    hflat = hseq.reshape(b, s, di) + p["skip"] * xc
+    hflat = hseq.reshape(b, s, di) + jnp.broadcast_to(p["skip"], xc.shape) * xc
     out = (hflat * jax.nn.silu(gate)) @ p["w_down"]
     if return_cache:
         new_conv = (
@@ -278,7 +279,8 @@ def slstm_scan(
     b, s, d = x.shape
     h = cfg.n_heads
     dh = d // h
-    zx = (x @ p["w_x"] + p["b"]).astype(jnp.float32)  # (B,S,4d)
+    zb = x @ p["w_x"]
+    zx = (zb + jnp.broadcast_to(p["b"], zb.shape)).astype(jnp.float32)  # (B,S,4d)
     zx = jnp.moveaxis(zx.reshape(b, s, 4, h, dh), 1, 0)  # (S,B,4,H,dh)
 
     r = p["r"].astype(jnp.float32)

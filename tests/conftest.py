@@ -29,6 +29,8 @@ overrides winning.
 
 import os
 
+import pytest
+
 os.environ.setdefault("JAX_DISABLE_MOST_OPTIMIZATIONS", "1")
 
 _cache_dir = os.environ.get("REPRO_JAX_CACHE_DIR")
@@ -36,3 +38,20 @@ if _cache_dir:
     os.environ.setdefault("JAX_COMPILATION_CACHE_DIR", _cache_dir)
     os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0")
     os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES", "-1")
+
+
+@pytest.fixture(autouse=True)
+def _sanitized():
+    """Every tier-1 test runs under ``repro.analysis.sanitize()``.
+
+    Defaults (overridable via REPRO_SANITIZE / REPRO_TRANSFER_GUARD /
+    REPRO_RANK_PROMOTION / REPRO_DEBUG_NANS — see repro.analysis):
+    rank promotion raises, transfer guard allows (the strict "disallow"
+    mode rejects compile-time constant transfers, so it is only usable
+    around pre-compiled regions — tests/test_sanitizers.py exercises it
+    that way), NaN debugging off.
+    """
+    from repro import analysis
+
+    with analysis.sanitize() as cfg:
+        yield cfg

@@ -1,0 +1,12 @@
+# Seeded violation for accum-order: post-hoc jnp.sum over stacked scan
+# outputs instead of carrying the sum (S <- S + row) inside the scan.
+import jax.numpy as jnp
+from jax import lax
+
+
+def total_energy(rows):
+    def body(carry, row):
+        return carry, row * row
+
+    carry, squares = lax.scan(body, 0.0, rows)
+    return jnp.sum(squares)          # reassociable reduction over ys

@@ -1,0 +1,4 @@
+# Seeded violation for deprecated-api: internal use of the deprecated
+# SweepResult.merged_timings() shim.
+def programmed_set(result):
+    return result.merged_timings()

@@ -1,0 +1,13 @@
+# Seeded violations for traced-escape: host concretization of traced
+# values inside jit-reachable code.
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bad(x):
+    threshold = float(x.mean())      # float() on a traced value
+    host = np.asarray(x)             # np.asarray on a traced value
+    first = x[0].item()              # .item() on a traced value
+    return jnp.where(x > threshold, host.sum(), first)

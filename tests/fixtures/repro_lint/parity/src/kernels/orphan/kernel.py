@@ -1,0 +1,7 @@
+# Seeded violation: a Pallas kernel with no sibling ref.py/ops.py and no
+# tests/test_*_kernel.py parity gate (parity-convention).
+import jax.experimental.pallas as pl  # noqa: F401
+
+
+def orphan_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0

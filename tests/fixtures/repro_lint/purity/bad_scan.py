@@ -1,0 +1,20 @@
+# Seeded violations for scan-purity: numpy call on a traced value,
+# Python control flow on a traced argument, and a mutable-global closure
+# inside a lax.scan body.
+import numpy as np
+import jax.numpy as jnp
+from jax import lax
+
+HISTORY = []  # mutable module global closed over by the body
+
+
+def body(carry, x):
+    if x > 0:                    # Python `if` on a traced argument
+        carry = carry + x
+    y = np.sqrt(x)               # numpy at trace time on a traced value
+    HISTORY.append(1)            # closure over a mutable global
+    return carry, y
+
+
+def run(xs):
+    return lax.scan(body, jnp.float32(0.0), xs)

@@ -1,0 +1,20 @@
+# Seeded violations for static-hashability: an unhashable default on a
+# static arg of a jitted def, and functools.partial binding a list
+# literal onto a jitted runner.
+import functools
+from functools import partial
+
+import jax
+
+
+@partial(jax.jit, static_argnames=("sizes",))
+def runner(x, sizes=[8, 16]):       # noqa: B006 — the violation under test
+    return x * sizes[0]
+
+
+@jax.jit
+def grid(x, spec):
+    return x
+
+
+bound = functools.partial(grid, spec={"tiles": 4})

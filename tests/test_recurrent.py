@@ -88,6 +88,6 @@ def test_decay_in_unit_interval():
     x = jax.random.normal(jax.random.PRNGKey(3), (1, 8, cfg.d_model))
     r = jax.nn.sigmoid(rglru._block_diag_linear(
         x @ p["w_x_branch"], p["w_a"], p["b_a"], cfg.n_heads))
-    log_a = -cfg.rglru_c * jax.nn.softplus(p["lam"]) * r
+    log_a = -cfg.rglru_c * jnp.broadcast_to(jax.nn.softplus(p["lam"]), r.shape) * r
     a = jnp.exp(log_a)
     assert float(a.min()) > 0.0 and float(a.max()) < 1.0

@@ -1,0 +1,163 @@
+"""The lint linted: every check fires on its seeded fixture, the real
+tree is clean, and allowlist hygiene is enforced.
+
+The fixture corpus (tests/fixtures/repro_lint/<check>/) holds one
+deliberately-broken snippet per check; each must drive the CLI to a
+non-zero exit naming that check. The clean-tree gate is the same command
+CI runs: ``python -m tools.repro_lint src tests benchmarks`` from the
+repo root must exit 0.
+"""
+
+import io
+import contextlib
+import pathlib
+import textwrap
+
+import pytest
+
+from tools.repro_lint import run_lint
+from tools.repro_lint.__main__ import main
+from tools.repro_lint.allowlist import Allowlist
+from tools.repro_lint.registry import all_checks, get_check
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+FIXTURES = REPO_ROOT / "tests" / "fixtures" / "repro_lint"
+
+#: check name -> (fixture subdir, scan path within it)
+FIXTURE_CASES = {
+    "parity-convention": ("parity", "src"),
+    "scan-purity": ("purity", "bad_scan.py"),
+    "traced-escape": ("escapes", "bad_escape.py"),
+    "static-hashability": ("statics", "bad_static.py"),
+    "accum-order": ("accumulation", "bad_accum.py"),
+    "deprecated-api": ("deprecated", "bad_deprecated.py"),
+}
+
+
+def _run_cli(argv):
+    out = io.StringIO()
+    with contextlib.redirect_stdout(out), contextlib.redirect_stderr(out):
+        code = main(argv)
+    return code, out.getvalue()
+
+
+# ---------------------------------------------------------------------------
+# Each seeded fixture violation fails the CLI with its check's name
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("check", sorted(FIXTURE_CASES))
+def test_fixture_violation_fails_cli(check):
+    subdir, scan = FIXTURE_CASES[check]
+    root = FIXTURES / subdir
+    code, out = _run_cli(
+        [str(root / scan), "--repo-root", str(root), "--include-fixtures"]
+    )
+    assert code != 0, f"{check} fixture scanned clean:\n{out}"
+    assert f"[{check}]" in out, f"expected a {check} finding, got:\n{out}"
+
+
+@pytest.mark.parametrize("check", sorted(FIXTURE_CASES))
+def test_fixture_violation_found_by_its_own_check_alone(check):
+    """The finding comes from the targeted check, not a neighbour."""
+    subdir, scan = FIXTURE_CASES[check]
+    root = FIXTURES / subdir
+    findings = run_lint(
+        [str(root / scan)], repo_root=root, include_fixtures=True,
+        checks=[check], flag_unused_allowlist=False,
+    )
+    assert findings, f"{check} did not fire on its fixture"
+    assert {f.check for f in findings} == {check}
+
+
+def test_fixtures_cover_every_registered_check():
+    assert set(FIXTURE_CASES) == {name for name, _ in all_checks()}
+
+
+# ---------------------------------------------------------------------------
+# The real tree is clean (the CI gate, in-process)
+# ---------------------------------------------------------------------------
+def test_clean_tree_exits_zero():
+    code, out = _run_cli(
+        ["src", "tests", "benchmarks", "--repo-root", str(REPO_ROOT)]
+    ) if pathlib.Path.cwd() == REPO_ROOT else _run_cli(
+        [str(REPO_ROOT / "src"), str(REPO_ROOT / "tests"),
+         str(REPO_ROOT / "benchmarks"), "--repo-root", str(REPO_ROOT)]
+    )
+    assert code == 0, f"repro-lint found violations in the tree:\n{out}"
+
+
+def test_default_scan_excludes_fixture_corpus():
+    """The seeded violations must not leak into a default scan."""
+    findings = run_lint(
+        [str(REPO_ROOT / "tests")], repo_root=REPO_ROOT,
+        flag_unused_allowlist=False,
+    )
+    assert not any("fixtures/repro_lint" in f.path for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# Allowlist hygiene
+# ---------------------------------------------------------------------------
+def test_committed_allowlist_entries_all_have_reasons():
+    allow = Allowlist.load(REPO_ROOT / "lint_allowlist.toml")
+    assert not allow.invalid, f"reason-less entries: {allow.invalid}"
+    assert allow.entries, "expected committed waivers (seed kernels)"
+    assert all(e.reason.strip() for e in allow.entries)
+
+
+def test_reasonless_allowlist_entry_is_a_finding(tmp_path):
+    (tmp_path / "lint_allowlist.toml").write_text(textwrap.dedent("""
+        [[allow]]
+        check = "deprecated-api"
+        path = "x.py"
+    """))
+    (tmp_path / "x.py").write_text("y = obj.merged_timings()\n")
+    findings = run_lint([str(tmp_path / "x.py")], repo_root=tmp_path)
+    checks = {f.check for f in findings}
+    assert "allowlist-invalid" in checks
+    assert "deprecated-api" in checks  # the invalid entry waives nothing
+
+
+def test_stale_allowlist_entry_is_a_finding(tmp_path):
+    (tmp_path / "lint_allowlist.toml").write_text(textwrap.dedent("""
+        [[allow]]
+        check = "deprecated-api"
+        path = "never_existed.py"
+        reason = "stale on purpose"
+    """))
+    (tmp_path / "x.py").write_text("y = 1\n")
+    findings = run_lint([str(tmp_path / "x.py")], repo_root=tmp_path)
+    assert {f.check for f in findings} == {"allowlist-unused"}
+
+
+def test_allowlist_waives_matching_finding(tmp_path):
+    (tmp_path / "lint_allowlist.toml").write_text(textwrap.dedent("""
+        [[allow]]
+        check = "deprecated-api"
+        path = "x.py"
+        symbol = "merged_timings"
+        reason = "fixture waiver"
+    """))
+    (tmp_path / "x.py").write_text("y = obj.merged_timings()\n")
+    findings = run_lint([str(tmp_path / "x.py")], repo_root=tmp_path)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# Infrastructure details worth pinning
+# ---------------------------------------------------------------------------
+def test_syntax_error_is_a_parse_error_finding(tmp_path):
+    (tmp_path / "broken.py").write_text("def f(:\n")
+    findings = run_lint([str(tmp_path / "broken.py")], repo_root=tmp_path)
+    assert [f.check for f in findings] == ["parse-error"]
+
+
+def test_unknown_check_name_raises():
+    with pytest.raises(KeyError):
+        get_check("not-a-check")
+
+
+def test_cli_list_checks():
+    code, out = _run_cli(["--list-checks"])
+    assert code == 0
+    for name in FIXTURE_CASES:
+        assert name in out

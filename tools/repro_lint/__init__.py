@@ -1,0 +1,89 @@
+"""repro-lint: AST static analysis enforcing this repo's conventions.
+
+The conventions the tier-1 suite *assumes* but cannot itself see —
+kernel/ref/ops parity triples, pure scan bodies, no host concretization
+in traced code, hashable jit statics, carried-sum accumulation order,
+no internal calls into deprecated shims — become machine-checked here.
+
+Usage::
+
+    python -m tools.repro_lint src tests benchmarks
+
+Programmatic::
+
+    from tools.repro_lint import run_lint
+    findings = run_lint(["src"], repo_root=Path("."))
+
+Checks self-register via :mod:`tools.repro_lint.registry`; waivers live
+in ``lint_allowlist.toml`` (see :mod:`tools.repro_lint.allowlist`).
+The runtime half of the story — transfer guards, rank-promotion raise,
+NaN debugging and the retrace counter — lives in :mod:`repro.analysis`.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from tools.repro_lint.allowlist import DEFAULT_ALLOWLIST, Allowlist
+from tools.repro_lint.context import LintContext
+from tools.repro_lint.findings import Finding
+from tools.repro_lint.registry import all_checks
+
+__all__ = ["run_lint", "Finding", "LintContext"]
+
+
+def run_lint(
+    paths: Sequence[str],
+    repo_root: Optional[Path] = None,
+    allowlist_path: Optional[Path] = None,
+    checks: Optional[Sequence[str]] = None,
+    include_fixtures: bool = False,
+    flag_unused_allowlist: bool = True,
+) -> List[Finding]:
+    """Run every registered check over ``paths``; return unwaived findings.
+
+    Findings come back sorted (path, line, check). Allowlist hygiene is
+    part of the contract: reason-less entries and entries matching
+    nothing are themselves findings (``allowlist-*`` checks).
+    """
+    root = (repo_root or Path.cwd()).resolve()
+    ctx = LintContext(paths, repo_root=root, include_fixtures=include_fixtures)
+    allow = Allowlist.load(
+        Path(allowlist_path) if allowlist_path else root / DEFAULT_ALLOWLIST
+    )
+
+    findings: List[Finding] = list(ctx.parse_errors)
+    selected = all_checks()
+    if checks is not None:
+        wanted = set(checks)
+        selected = [(n, fn) for n, fn in selected if n in wanted]
+    for _name, check_fn in selected:
+        findings.extend(check_fn(ctx))
+
+    kept = [f for f in findings if not allow.allows(f)]
+
+    for msg in allow.invalid:
+        kept.append(
+            Finding(
+                check="allowlist-invalid", path=DEFAULT_ALLOWLIST, line=0,
+                message=msg,
+            )
+        )
+    if flag_unused_allowlist:
+        for entry in allow.unused_entries():
+            kept.append(
+                Finding(
+                    check="allowlist-unused", path=DEFAULT_ALLOWLIST, line=0,
+                    symbol=entry.symbol,
+                    message=(
+                        f"allowlist entry ({entry.check} @ {entry.path}"
+                        + (f", symbol={entry.symbol}" if entry.symbol else "")
+                        + ") matched no finding — delete it or fix its "
+                        "path/symbol; stale waivers hide future regressions"
+                    ),
+                )
+            )
+
+    kept.sort(key=lambda f: (f.path, f.line, f.check, f.message))
+    return kept

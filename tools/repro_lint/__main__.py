@@ -1,0 +1,77 @@
+"""CLI: ``python -m tools.repro_lint [paths ...]``.
+
+Exit 0 when the tree is clean (after the committed allowlist), 1 when
+any finding survives. Designed for CI: one line per finding, stable
+ordering, no color, summary on stderr.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.repro_lint import run_lint
+from tools.repro_lint.registry import all_checks
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks")
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.repro_lint",
+        description="AST lint enforcing the repo's kernel-parity and "
+        "purity conventions.",
+    )
+    parser.add_argument(
+        "paths", nargs="*", default=list(DEFAULT_PATHS),
+        help=f"files/directories to scan (default: {' '.join(DEFAULT_PATHS)})",
+    )
+    parser.add_argument(
+        "--repo-root", type=Path, default=Path.cwd(),
+        help="root for relative paths and the allowlist (default: cwd)",
+    )
+    parser.add_argument(
+        "--allowlist", type=Path, default=None,
+        help="allowlist TOML (default: <repo-root>/lint_allowlist.toml)",
+    )
+    parser.add_argument(
+        "--check", action="append", dest="checks", metavar="NAME",
+        help="run only this check (repeatable); default: all",
+    )
+    parser.add_argument(
+        "--include-fixtures", action="store_true",
+        help="also scan tests/fixtures/repro_lint (the seeded-violation "
+        "corpus, excluded by default)",
+    )
+    parser.add_argument(
+        "--list-checks", action="store_true", help="list checks and exit"
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_checks:
+        for name, fn in all_checks():
+            doc = (fn.__doc__ or "").strip().splitlines()
+            print(f"{name}: {doc[0] if doc else ''}")
+        return 0
+
+    findings = run_lint(
+        args.paths,
+        repo_root=args.repo_root,
+        allowlist_path=args.allowlist,
+        checks=args.checks,
+        include_fixtures=args.include_fixtures,
+    )
+    for f in findings:
+        print(f.format())
+    n = len(findings)
+    print(
+        f"repro-lint: {n} finding{'s' if n != 1 else ''}"
+        + ("" if n else " — clean"),
+        file=sys.stderr,
+    )
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

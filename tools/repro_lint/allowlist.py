@@ -1,0 +1,98 @@
+"""Committed allowlist for repro-lint findings.
+
+``lint_allowlist.toml`` is the single place where a finding is declared a
+false positive or an accepted exception — always with a human-readable
+reason. Matching is by ``(check, path[, symbol])``, never by line number:
+entries survive unrelated edits to the file, and one symbol-scoped entry
+covers every finding the symbol produces.
+
+Format::
+
+    [[allow]]
+    check  = "parity-convention"
+    path   = "src/repro/kernels/flash_attention/kernel.py"
+    symbol = "flash_attention"          # optional — omit to match any
+    reason = "seed kernel; covered by tolerance tests in test_kernels.py"
+
+A missing or empty ``reason`` is itself a lint error (the acceptance
+criteria require zero reason-less entries), as is an entry that matches
+nothing — stale entries rot into silent blanket waivers otherwise.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Iterable, List, Tuple
+
+try:  # Python 3.11+ (CI)
+    import tomllib
+except ModuleNotFoundError:  # Python 3.10 (local image) ships tomli
+    import tomli as tomllib  # type: ignore[no-redef]
+
+from tools.repro_lint.findings import Finding
+
+DEFAULT_ALLOWLIST = "lint_allowlist.toml"
+
+
+@dataclass(frozen=True)
+class AllowEntry:
+    check: str
+    path: str
+    reason: str
+    symbol: str = ""  # "" matches any symbol
+
+    def matches(self, finding: Finding) -> bool:
+        return (
+            finding.check == self.check
+            and finding.path == self.path
+            and (not self.symbol or finding.symbol == self.symbol)
+        )
+
+
+@dataclass
+class Allowlist:
+    entries: Tuple[AllowEntry, ...] = ()
+    #: entries with a missing/blank reason — reported as findings
+    invalid: Tuple[str, ...] = ()
+    _hits: set = field(default_factory=set)
+
+    @classmethod
+    def load(cls, path: Path) -> "Allowlist":
+        if not path.is_file():
+            return cls()
+        with open(path, "rb") as fh:
+            data = tomllib.load(fh)
+        entries: List[AllowEntry] = []
+        invalid: List[str] = []
+        for i, raw in enumerate(data.get("allow", [])):
+            check = str(raw.get("check", "")).strip()
+            epath = str(raw.get("path", "")).strip()
+            reason = str(raw.get("reason", "")).strip()
+            symbol = str(raw.get("symbol", "")).strip()
+            if not check or not epath:
+                invalid.append(
+                    f"[[allow]] entry #{i + 1} lacks check/path"
+                )
+                continue
+            if not reason:
+                invalid.append(
+                    f"[[allow]] entry #{i + 1} ({check} @ {epath}) has no "
+                    "reason — every waiver must say why"
+                )
+                continue
+            entries.append(AllowEntry(check, epath, reason, symbol))
+        return cls(entries=tuple(entries), invalid=tuple(invalid))
+
+    def allows(self, finding: Finding) -> bool:
+        for entry in self.entries:
+            if entry.matches(finding):
+                self._hits.add(entry)
+                return True
+        return False
+
+    def unused_entries(self) -> Iterable[AllowEntry]:
+        """Entries that matched no finding in the scan just performed."""
+        for entry in self.entries:
+            if entry not in self._hits:
+                yield entry

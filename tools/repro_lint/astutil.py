@@ -1,0 +1,174 @@
+"""Small AST helpers shared by the checks.
+
+All name handling is *syntactic* (dotted-chain matching against the
+idioms this repo actually uses: ``jax.lax.scan``, ``lax.scan``,
+``jnp.sum``, ``functools.partial(jax.jit, ...)``) — no import resolution.
+That keeps every check a single read of the AST and makes false
+positives/negatives easy to reason about; genuinely ambiguous sites
+belong in ``lint_allowlist.toml`` with a reason, not in cleverer
+analysis.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+#: Dotted suffixes that mean "this call takes a traced loop/map body".
+#: Maps suffix -> 0-based positional index of the body argument.
+SCAN_LIKE: Dict[str, int] = {
+    "lax.scan": 0,
+    "jax.lax.scan": 0,
+    "lax.fori_loop": 2,
+    "jax.lax.fori_loop": 2,
+    "lax.while_loop": 1,
+    "jax.lax.while_loop": 1,
+    "shard_map.shard_map": 0,
+    "shard_map": 0,
+}
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` attribute/name chain as a string, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    return dotted(call.func)
+
+
+def matches_suffix(name: Optional[str], suffixes) -> Optional[str]:
+    """The matching suffix when ``name`` equals or ends with ``.suffix``."""
+    if not name:
+        return None
+    for s in suffixes:
+        if name == s or name.endswith("." + s):
+            return s
+    return None
+
+
+def walk_functions(tree: ast.AST) -> Iterator[ast.AST]:
+    """Every FunctionDef / AsyncFunctionDef / Lambda in the module."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            yield node
+
+
+def local_function_defs(tree: ast.AST) -> Dict[str, ast.FunctionDef]:
+    """name -> def for every (possibly nested) function in the module.
+    Later defs shadow earlier same-named ones, like execution order."""
+    out: Dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            out[node.name] = node
+    return out
+
+
+def param_names(fn: ast.AST) -> Set[str]:
+    """Positional / keyword / vararg parameter names of a def or lambda."""
+    a = fn.args
+    names = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+    if a.vararg:
+        names.add(a.vararg.arg)
+    if a.kwarg:
+        names.add(a.kwarg.arg)
+    return names
+
+
+def body_nodes(fn: ast.AST) -> List[ast.AST]:
+    return fn.body if isinstance(fn.body, list) else [fn.body]
+
+
+def name_roots(expr: ast.AST) -> Set[str]:
+    """Root identifiers referenced anywhere in an expression
+    (``x.a[0].b`` -> ``{'x'}``)."""
+    roots: Set[str] = set()
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Name):
+            roots.add(node.id)
+    return roots
+
+
+def is_jit_decorator(dec: ast.AST) -> bool:
+    """``@jax.jit`` / ``@jit`` / ``@(functools.)partial(jax.jit, ...)`` /
+    ``@jax.jit(...)`` (decorator factory)."""
+    name = dotted(dec)
+    if matches_suffix(name, ("jax.jit", "jit")):
+        return True
+    if isinstance(dec, ast.Call):
+        fn = dotted(dec.func)
+        if matches_suffix(fn, ("jax.jit", "jit")):
+            return True
+        if matches_suffix(fn, ("functools.partial", "partial")) and dec.args:
+            inner = dotted(dec.args[0])
+            return bool(matches_suffix(inner, ("jax.jit", "jit")))
+    return False
+
+
+def jit_static_argnames(dec: ast.AST) -> List[str]:
+    """The literal ``static_argnames`` of a jit decorator call, if any."""
+    if not isinstance(dec, ast.Call):
+        return []
+    for kw in dec.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return [v.value]
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return [
+                    e.value for e in v.elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value, str)
+                ]
+    return []
+
+
+def is_mutable_literal(node: ast.AST) -> bool:
+    """A value that is unhashable by construction: list/dict/set displays,
+    comprehensions, or bare ``list()``/``dict()``/``set()`` calls."""
+    if isinstance(node, (ast.List, ast.Dict, ast.Set,
+                         ast.ListComp, ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        return dotted(node.func) in {"list", "dict", "set"}
+    return False
+
+
+def scan_body_functions(
+    tree: ast.AST,
+) -> Iterator[Tuple[ast.Call, str, ast.AST]]:
+    """Every (scan-like call, suffix, resolved body function) in a module.
+
+    The body argument is resolved when it is an inline lambda or a Name
+    bound by a (possibly nested) ``def`` in the same module — the only
+    two idioms the repo uses. Anything else (an imported callable, a
+    partial) is skipped: cross-module bodies are linted where they are
+    defined."""
+    defs = local_function_defs(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        suffix = matches_suffix(call_name(node), SCAN_LIKE)
+        if suffix is None:
+            continue
+        idx = SCAN_LIKE[suffix]
+        body_arg: Optional[ast.AST] = None
+        if len(node.args) > idx:
+            body_arg = node.args[idx]
+        else:
+            for kw in node.keywords:
+                if kw.arg in ("f", "body_fun", "body", "fun"):
+                    body_arg = kw.value
+                    break
+        if body_arg is None:
+            continue
+        if isinstance(body_arg, ast.Lambda):
+            yield node, suffix, body_arg
+        elif isinstance(body_arg, ast.Name) and body_arg.id in defs:
+            yield node, suffix, defs[body_arg.id]

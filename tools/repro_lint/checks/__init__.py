@@ -1,0 +1,11 @@
+# Self-registering check modules: importing this package registers every
+# check with tools.repro_lint.registry. Adding a check = adding a module
+# here with one @register-decorated function.
+from tools.repro_lint.checks import (  # noqa: F401
+    accumulation,
+    deprecated,
+    escapes,
+    parity,
+    purity,
+    statics,
+)

@@ -1,0 +1,95 @@
+"""accum-order: no post-hoc reduction over stacked scan outputs.
+
+The cycle-quantization exactness story (PR 6) is that chunked replay is
+bit-identical to monolithic replay because sums are accumulated in the
+scan *carry* (``S ← S + row``, one fixed left-to-right order) rather than
+reduced afterwards over the stacked per-step outputs. ``jnp.sum(ys)``
+over a scan's ys lets XLA reassociate the reduction tree — same math,
+different floats, and the chunking-invariance gates start flaking.
+
+Detection: a tuple assignment ``carry, ys = lax.scan(...)`` (or
+fori/while variants) binds *output* names; any later ``jnp.sum`` /
+``jnp.cumsum`` / ``.sum()`` over one of those names in the same function
+is flagged. Legitimate diagnostic sums over emitted trajectories are
+allowlist entries with a reason (the allowlist is the single source of
+"this reduction is not parity-bearing").
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from tools.repro_lint import astutil
+from tools.repro_lint.context import LintContext
+from tools.repro_lint.findings import Finding
+from tools.repro_lint.registry import register
+
+_SCAN_CALLS = ("lax.scan", "jax.lax.scan")
+_REDUCERS = ("jnp.sum", "jax.numpy.sum", "jnp.cumsum", "jax.numpy.cumsum")
+
+
+def _scan_output_names(fn: ast.AST) -> Set[str]:
+    """Names bound past the carry in ``carry, ys = lax.scan(...)``."""
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if not (isinstance(node, ast.Assign) and isinstance(node.value, ast.Call)):
+            continue
+        if not astutil.matches_suffix(
+            astutil.dotted(node.value.func), _SCAN_CALLS
+        ):
+            continue
+        for target in node.targets:
+            if isinstance(target, ast.Tuple) and len(target.elts) >= 2:
+                for elt in target.elts[1:]:
+                    for leaf in ast.walk(elt):
+                        if isinstance(leaf, ast.Name):
+                            out.add(leaf.id)
+    return out
+
+
+@register("accum-order")
+def check_accumulation_order(ctx: LintContext) -> Iterator[Finding]:
+    for rel, tree in ctx.files():
+        for fn in astutil.local_function_defs(tree).values():
+            ys_names = _scan_output_names(fn)
+            if not ys_names:
+                continue
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = astutil.dotted(node.func)
+                target = None
+                if astutil.matches_suffix(name, _REDUCERS) and node.args:
+                    target = node.args[0]
+                elif (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr in ("sum", "cumsum")
+                    and isinstance(node.func.value, ast.Name)
+                ):
+                    target = node.func.value
+                if target is None:
+                    continue
+                hit = next(
+                    (
+                        leaf.id
+                        for leaf in ast.walk(target)
+                        if isinstance(leaf, ast.Name) and leaf.id in ys_names
+                    ),
+                    None,
+                )
+                if hit is None:
+                    continue
+                yield Finding(
+                    check="accum-order", path=rel, line=node.lineno,
+                    symbol=fn.name,
+                    message=(
+                        f"reduction over scan output `{hit}` in '{fn.name}': "
+                        "post-hoc jnp.sum over stacked per-step partials lets "
+                        "XLA reassociate the reduction — the chunking-"
+                        "invariance convention requires carrying the sum "
+                        "(S ← S + row) inside the scan; allowlist with a "
+                        "reason if this reduction is genuinely not "
+                        "parity-bearing"
+                    ),
+                )

@@ -1,0 +1,44 @@
+"""deprecated-api: internal code must not call deprecated shims.
+
+``SweepResult.merged_timings()`` survives as a DeprecationWarning shim
+for external callers, but internal call sites keep the dead convention
+alive (and its element-wise-max semantics quietly diverge from the
+per-access-type model the write-timing split introduced). The shim's own
+definition and the tests that pin its warning/refusal behaviour are
+allowlisted by path+symbol; everything else migrates to
+``stacked_timings()`` / ``read_timings()`` / ``write_timings()``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.repro_lint.context import LintContext
+from tools.repro_lint.findings import Finding
+from tools.repro_lint.registry import register
+
+#: attribute name -> replacement hint
+DEPRECATED_ATTRS = {
+    "merged_timings": "stacked_timings()/read_timings()/write_timings()",
+}
+
+
+@register("deprecated-api")
+def check_deprecated_api(ctx: LintContext) -> Iterator[Finding]:
+    for rel, tree in ctx.files():
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Attribute):
+                continue
+            hint = DEPRECATED_ATTRS.get(node.attr)
+            if hint is None:
+                continue
+            yield Finding(
+                check="deprecated-api", path=rel, line=node.lineno,
+                symbol=node.attr,
+                message=(
+                    f"use of deprecated `{node.attr}`: internal code must "
+                    f"call {hint}; only the shim definition and its pinning "
+                    "tests are allowlisted"
+                ),
+            )

@@ -1,0 +1,114 @@
+"""traced-escape: no host concretization inside jit-reachable code.
+
+``float(x)`` / ``int(x)`` / ``bool(x)`` / ``x.item()`` / ``x.tolist()`` /
+``np.asarray(x)`` on a traced value aborts tracing with a
+ConcretizationTypeError — or, when it happens to work on a concrete
+sub-expression, silently forces a device→host sync in the middle of a hot
+path. The repo's convention is that such escapes live in the *wrapper*
+layer (before jit), never in traced code.
+
+Scope — "jit-reachable" is resolved syntactically per module: function
+defs decorated with ``jax.jit`` (directly or via ``partial``), defs
+nested inside those, and defs handed to scan-like primitives. Static
+escapes are exempt: arguments built purely from ``.shape`` / ``.ndim`` /
+``.size`` / ``len(...)`` / literals are trace-time Python values (that is
+the supported way to read shapes inside jitted code).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Set
+
+from tools.repro_lint import astutil
+from tools.repro_lint.context import LintContext
+from tools.repro_lint.findings import Finding
+from tools.repro_lint.registry import register
+
+_CAST_CALLS = {"float", "int", "bool", "complex"}
+_NP_ESCAPES = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+_METHOD_ESCAPES = {"item", "tolist"}
+
+
+def _jit_reachable_functions(tree: ast.AST) -> List[ast.AST]:
+    """Jitted defs + their nested defs + scan bodies (deduped by id)."""
+    roots: List[ast.AST] = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and any(
+            astutil.is_jit_decorator(d) for d in node.decorator_list
+        ):
+            roots.append(node)
+    for _, _, body_fn in astutil.scan_body_functions(tree):
+        roots.append(body_fn)
+    out, seen = [], set()
+    for root in roots:
+        for node in ast.walk(root):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)) and id(node) not in seen:
+                seen.add(id(node))
+                out.append(node)
+    return out
+
+
+def _is_static_expr(expr: ast.AST) -> bool:
+    """True when the expression is built from trace-time-static pieces
+    only: literals, ``.shape``/``.ndim``/``.size`` reads, ``len``/
+    ``range`` calls, and arithmetic over those."""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Name):
+            # A bare name is static only if some ancestor .shape/.ndim
+            # anchors it; handled below by the attribute scan.
+            anchored = False
+            cur: ast.AST = expr
+            for attr in ast.walk(expr):
+                if isinstance(attr, ast.Attribute) and attr.attr in (
+                    "shape", "ndim", "size", "dtype"
+                ):
+                    for inner in ast.walk(attr):
+                        if inner is node:
+                            anchored = True
+            del cur
+            if not anchored:
+                return False
+        elif isinstance(node, ast.Call):
+            if astutil.call_name(node) not in ("len", "range", "min", "max",
+                                               "abs", "prod"):
+                return False
+    return True
+
+
+@register("traced-escape")
+def check_traced_escapes(ctx: LintContext) -> Iterator[Finding]:
+    for rel, tree in ctx.files():
+        for fn in _jit_reachable_functions(tree):
+            fname = getattr(fn, "name", "<lambda>")
+            reported: Set[int] = set()
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call) or id(node) in reported:
+                    continue
+                name = astutil.call_name(node)
+                escape = None
+                arg = node.args[0] if node.args else None
+                if name in _CAST_CALLS and arg is not None:
+                    escape = f"{name}(...)"
+                elif name in _NP_ESCAPES and arg is not None:
+                    escape = f"{name}(...)"
+                elif (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _METHOD_ESCAPES
+                ):
+                    escape, arg = f".{node.func.attr}()", node.func.value
+                if escape is None or arg is None or _is_static_expr(arg):
+                    continue
+                reported.add(id(node))
+                yield Finding(
+                    check="traced-escape", path=rel, line=node.lineno,
+                    symbol=fname,
+                    message=(
+                        f"`{escape}` on a potentially traced value inside "
+                        f"jit-reachable '{fname}': concretization aborts "
+                        "tracing (or forces a host sync); keep host reads "
+                        "in the un-jitted wrapper layer, or derive the "
+                        "value from static .shape/.ndim"
+                    ),
+                )

@@ -1,0 +1,89 @@
+"""parity-convention: every Pallas kernel ships its oracle and its gate.
+
+The repo's bit-exactness claims rest on the kernel/ref/ops triple
+(``src/repro/kernels/__init__.py`` documents the convention): the Pallas
+body in ``kernel.py``, the pure-jnp semantics oracle in ``ref.py``, the
+dispatching entry point in ``ops.py``, and an interpret-mode parity gate
+under ``tests/test_*_kernel.py``. A kernel that lands without its oracle
+or gate is exactly the drift this pass exists to stop — it would be
+"fast" with nothing pinning it to the model.
+
+A file is "a Pallas kernel" when it lives at ``**/kernels/<pkg>/kernel.py``
+and imports ``jax.experimental.pallas`` (or calls ``pallas_call``). For
+each one:
+
+* sibling ``ref.py`` and ``ops.py`` must exist;
+* some ``tests/test_*_kernel.py`` must mention the package name — the
+  naming convention for the dedicated bit-exact/parity gate (the shared
+  tolerance tests in ``tests/test_kernels.py`` deliberately do NOT count:
+  seed kernels covered only there are allowlisted with that reason).
+
+Findings carry ``symbol=<pkg>`` so one allowlist entry covers a package.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.repro_lint import astutil
+from tools.repro_lint.context import LintContext
+from tools.repro_lint.findings import Finding
+from tools.repro_lint.registry import register
+
+_PALLAS_MODULE = "jax.experimental.pallas"
+
+
+def _defines_pallas_kernel(tree: ast.AST) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            if any(a.name.startswith(_PALLAS_MODULE) for a in node.names):
+                return True
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod.startswith(_PALLAS_MODULE) or (
+                mod == "jax.experimental"
+                and any(a.name == "pallas" for a in node.names)
+            ):
+                return True
+        elif isinstance(node, ast.Call):
+            name = astutil.call_name(node)
+            if astutil.matches_suffix(name, ("pallas_call", "pl.pallas_call")):
+                return True
+    return False
+
+
+@register("parity-convention")
+def check_parity(ctx: LintContext) -> Iterator[Finding]:
+    for rel, tree in ctx.files():
+        parts = rel.split("/")
+        if len(parts) < 3 or parts[-1] != "kernel.py" or parts[-3] != "kernels":
+            continue
+        if not _defines_pallas_kernel(tree):
+            continue
+        pkg = parts[-2]
+        pkg_dir = "/".join(parts[:-1])
+        for sibling in ("ref.py", "ops.py"):
+            if not ctx.exists(f"{pkg_dir}/{sibling}"):
+                yield Finding(
+                    check="parity-convention", path=rel, line=0, symbol=pkg,
+                    message=(
+                        f"Pallas kernel package '{pkg}' has no {sibling} — "
+                        "the kernel/ref/ops convention requires the pure-jnp "
+                        "oracle (ref.py) and the dispatching entry point "
+                        "(ops.py) beside every kernel.py"
+                    ),
+                )
+        gates = [
+            t for t in ctx.glob("tests/test_*_kernel.py") if pkg in ctx.read(t)
+        ]
+        if not gates:
+            yield Finding(
+                check="parity-convention", path=rel, line=0, symbol=pkg,
+                message=(
+                    f"no tests/test_*_kernel.py parity gate references "
+                    f"'{pkg}': every Pallas kernel needs a dedicated "
+                    "interpret-mode parity test module (or an allowlist "
+                    "entry saying why not)"
+                ),
+            )

@@ -1,0 +1,185 @@
+"""scan-purity: functions handed to scan/fori_loop/while_loop/shard_map
+must be pure traced functions.
+
+Three violation classes, each a latent recompile or silent-wrong-answer
+hazard inside a traced loop body:
+
+* ``numpy-call`` — ``np.*`` called inside the body. numpy executes at
+  trace time: on a traced value it raises (best case) or silently bakes a
+  trace-time constant into the compiled loop (worst case). dtype
+  constructors (``np.float32(...)`` on Python scalars) are tolerated.
+* ``python-control-flow`` — a Python ``if``/``while`` whose condition
+  reads the body's own (traced) arguments. Tracing evaluates the branch
+  once, on an abstract value: either a ConcretizationTypeError or a loop
+  body specialized to whatever the first trace saw. Static conditions
+  (``x is None``, ``isinstance``, shape/rank/dtype probes) are exempt.
+* ``mutable-global`` — the body closes over a module-level list/dict/set.
+  Mutating state from a traced body doesn't replay (the trace runs ONCE);
+  reading it bakes trace-time contents into the compiled program, which
+  the jit cache will then happily serve forever.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from tools.repro_lint import astutil
+from tools.repro_lint.context import LintContext
+from tools.repro_lint.findings import Finding
+from tools.repro_lint.registry import register
+
+#: numpy attributes allowed inside a traced body: dtype constructors /
+#: queries applied to static Python scalars (the repo's statics idiom).
+_SAFE_NP_ATTRS = {
+    "float32", "float64", "int32", "int64", "bool_", "uint32", "dtype",
+}
+
+#: Call names that make an ``if`` condition static even when it mentions
+#: a traced name: type/shape/rank probes resolved at trace time.
+_STATIC_PROBES = {"isinstance", "len", "hasattr", "getattr", "callable", "type"}
+
+
+def _numpy_calls(body: ast.AST) -> Iterator[ast.Call]:
+    for node in ast.walk(body):
+        if not isinstance(node, ast.Call):
+            continue
+        name = astutil.call_name(node)
+        if not name:
+            continue
+        root, _, rest = name.partition(".")
+        if root in ("np", "numpy") and rest and rest not in _SAFE_NP_ATTRS:
+            yield node
+
+
+def _is_static_condition(test: ast.AST, traced: Set[str]) -> bool:
+    """Conditions that never concretize a traced value: no traced names
+    at all, pure None-checks, or probes from _STATIC_PROBES. A traced
+    name under ``.shape`` / ``.ndim`` / ``.dtype`` / ``.size`` is static
+    too (those are trace-time attributes)."""
+    hits = []
+    for node in ast.walk(test):
+        if isinstance(node, ast.Name) and node.id in traced:
+            hits.append(node)
+    if not hits:
+        return True
+    if isinstance(test, ast.Compare) and all(
+        isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops
+    ):
+        return True
+    if isinstance(test, ast.Call):
+        fn = astutil.call_name(test)
+        if fn in _STATIC_PROBES:
+            return True
+    # x.shape[...] / x.ndim / x.dtype / x.size comparisons are static.
+    static_attr_bases: Set[ast.AST] = set()
+    for node in ast.walk(test):
+        if isinstance(node, ast.Attribute) and node.attr in (
+            "shape", "ndim", "dtype", "size"
+        ):
+            for inner in ast.walk(node.value):
+                static_attr_bases.add(id(inner))
+    return all(id(h) in static_attr_bases for h in hits)
+
+
+def _module_mutable_globals(tree: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for node in getattr(tree, "body", []):
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+            value = node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets = [node.target]
+            value = node.value
+        else:
+            continue
+        if astutil.is_mutable_literal(value):
+            for t in targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+    return out
+
+
+def _locals_of(fn: ast.AST) -> Set[str]:
+    """Names bound inside the body (assignments, loop targets, inner defs,
+    withitems) — these are not closures."""
+    bound: Set[str] = set(astutil.param_names(fn))
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+            for t in targets:
+                for leaf in ast.walk(t):
+                    if isinstance(leaf, ast.Name):
+                        bound.add(leaf.id)
+        elif isinstance(node, (ast.For, ast.comprehension)):
+            for leaf in ast.walk(node.target):
+                if isinstance(leaf, ast.Name):
+                    bound.add(leaf.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            bound.add(node.name)
+    return bound
+
+
+@register("scan-purity")
+def check_scan_purity(ctx: LintContext) -> Iterator[Finding]:
+    for rel, tree in ctx.files():
+        mutable_globals = _module_mutable_globals(tree)
+        seen: Set[int] = set()
+        for call, suffix, body_fn in astutil.scan_body_functions(tree):
+            if id(body_fn) in seen:  # one body handed to several scans
+                continue
+            seen.add(id(body_fn))
+            fname = getattr(body_fn, "name", "<lambda>")
+            traced = astutil.param_names(body_fn)
+            for np_call in _numpy_calls(body_fn):
+                yield Finding(
+                    check="scan-purity", path=rel, line=np_call.lineno,
+                    symbol=fname,
+                    message=(
+                        f"numpy call `{astutil.call_name(np_call)}` inside "
+                        f"the {suffix} body '{fname}': numpy runs at trace "
+                        "time — on a traced value it raises or freezes a "
+                        "trace-time constant into the compiled loop; use "
+                        "jnp, or hoist genuinely-static work out of the body"
+                    ),
+                )
+            for node in ast.walk(body_fn):
+                if isinstance(node, (ast.If, ast.While)) and not \
+                        _is_static_condition(node.test, traced):
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    yield Finding(
+                        check="scan-purity", path=rel, line=node.lineno,
+                        symbol=fname,
+                        message=(
+                            f"Python `{kind}` on a traced argument inside "
+                            f"the {suffix} body '{fname}': the branch is "
+                            "evaluated ONCE at trace time — use jnp.where / "
+                            "lax.cond / lax.select on traced values"
+                        ),
+                    )
+            if isinstance(body_fn, ast.Lambda):
+                continue  # lambdas: load-set analysis below needs a body
+            local = _locals_of(body_fn)
+            reported: Set[str] = set()
+            for node in ast.walk(body_fn):
+                if (
+                    isinstance(node, ast.Name)
+                    and isinstance(node.ctx, ast.Load)
+                    and node.id in mutable_globals
+                    and node.id not in local
+                    and node.id not in reported
+                ):
+                    reported.add(node.id)
+                    yield Finding(
+                        check="scan-purity", path=rel, line=node.lineno,
+                        symbol=fname,
+                        message=(
+                            f"the {suffix} body '{fname}' closes over "
+                            f"module-level mutable `{node.id}`: traced "
+                            "bodies run once — mutations don't replay and "
+                            "reads freeze trace-time contents; pass it as "
+                            "a carry/argument or make it an immutable "
+                            "constant"
+                        ),
+                    )

@@ -1,0 +1,110 @@
+"""static-hashability: jit statics must be hashable (and canonical).
+
+``jax.jit(static_argnames=...)`` hashes every static argument to key its
+compile cache. An unhashable static (list/dict/set) raises at call time —
+or, the sneakier failure this repo's ``ops.py`` f32-round-tripped-scalars
+idiom exists to avoid, a *hashable but non-canonical* static (fresh tuple
+of fresh floats from a different code path) silently misses the cache and
+recompiles the same program. This check catches the statically-visible
+class:
+
+* a jitted def whose ``static_argnames`` parameter has a list/dict/set
+  **default** — unhashable the moment the default is used;
+* ``functools.partial(<jitted fn>, ...)`` binding a list/dict/set
+  literal — the partial-jitted-runner bug class: the argument hashes
+  never, so every call recompiles or raises.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from tools.repro_lint import astutil
+from tools.repro_lint.context import LintContext
+from tools.repro_lint.findings import Finding
+from tools.repro_lint.registry import register
+
+
+def _jitted_names(tree: ast.AST) -> Set[str]:
+    """Module-level names bound to jitted callables: decorated defs and
+    ``name = jax.jit(...)`` assignments."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and any(
+            astutil.is_jit_decorator(d) for d in node.decorator_list
+        ):
+            out.add(node.name)
+        elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            fn = astutil.dotted(node.value.func)
+            if astutil.matches_suffix(fn, ("jax.jit", "jit")):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        out.add(t.id)
+    return out
+
+
+@register("static-hashability")
+def check_static_hashability(ctx: LintContext) -> Iterator[Finding]:
+    for rel, tree in ctx.files():
+        jitted = _jitted_names(tree)
+        for node in ast.walk(tree):
+            # (a) unhashable defaults on static params of jitted defs
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                static_names: Set[str] = set()
+                for dec in node.decorator_list:
+                    if astutil.is_jit_decorator(dec):
+                        static_names.update(astutil.jit_static_argnames(dec))
+                if not static_names:
+                    continue
+                a = node.args
+                params = a.posonlyargs + a.args
+                defaults = [None] * (len(params) - len(a.defaults)) + list(a.defaults)
+                pairs = list(zip(params, defaults)) + list(
+                    zip(a.kwonlyargs, a.kw_defaults)
+                )
+                for param, default in pairs:
+                    if (
+                        param.arg in static_names
+                        and default is not None
+                        and astutil.is_mutable_literal(default)
+                    ):
+                        yield Finding(
+                            check="static-hashability", path=rel,
+                            line=default.lineno, symbol=node.name,
+                            message=(
+                                f"static arg '{param.arg}' of jitted "
+                                f"'{node.name}' defaults to an unhashable "
+                                "list/dict/set: jit hashes statics to key "
+                                "its compile cache — use a tuple / frozen "
+                                "value (the ops.py f32-round-tripped-"
+                                "scalars idiom)"
+                            ),
+                        )
+            # (b) partial(<jitted>, <mutable literal>)
+            elif isinstance(node, ast.Call):
+                fn = astutil.dotted(node.func)
+                if not astutil.matches_suffix(
+                    fn, ("functools.partial", "partial")
+                ) or not node.args:
+                    continue
+                target = astutil.dotted(node.args[0])
+                if target not in jitted:
+                    continue
+                bad = [
+                    v for v in list(node.args[1:]) +
+                    [kw.value for kw in node.keywords]
+                    if astutil.is_mutable_literal(v)
+                ]
+                for v in bad:
+                    yield Finding(
+                        check="static-hashability", path=rel, line=v.lineno,
+                        symbol=target,
+                        message=(
+                            f"partial({target}, ...) binds a list/dict/set "
+                            "literal: if it reaches a static arg it is "
+                            "unhashable (raises) and as a traced arg it "
+                            "retraces per call — bind a tuple of Python "
+                            "scalars instead"
+                        ),
+                    )

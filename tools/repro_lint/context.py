@@ -1,0 +1,109 @@
+"""File discovery + shared AST cache for one lint run.
+
+``LintContext`` walks the requested paths once, parses every ``*.py``
+file once, and hands checks a uniform view: repo-relative posix paths,
+source text, and the parsed AST. Checks never touch the filesystem except
+through the context (the parity check asks for sibling/tests files via
+:meth:`LintContext.exists` / :meth:`LintContext.glob`), which is what
+makes them testable against fixture trees.
+
+Default excludes: lint fixtures are deliberately-broken snippets
+(``tests/fixtures/repro_lint``), so the default scan skips them — the
+test suite lints them explicitly with ``include_fixtures=True``.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+from tools.repro_lint.findings import Finding
+
+#: Directory names never scanned.
+SKIP_DIRS = {"__pycache__", ".git", ".jax-cache", "node_modules", ".venv"}
+
+#: Repo-relative path prefixes excluded from a default scan: seeded lint
+#: fixtures would otherwise (correctly!) fail the clean-tree gate.
+DEFAULT_EXCLUDE_PREFIXES: Tuple[str, ...] = ("tests/fixtures/repro_lint",)
+
+
+class LintContext:
+    def __init__(
+        self,
+        paths: Sequence[str | pathlib.Path],
+        repo_root: Optional[str | pathlib.Path] = None,
+        include_fixtures: bool = False,
+    ):
+        self.repo_root = pathlib.Path(repo_root or ".").resolve()
+        self.include_fixtures = include_fixtures
+        self.parse_errors: List[Finding] = []
+        self._sources: Dict[str, str] = {}
+        self._trees: Dict[str, ast.AST] = {}
+        for p in paths:
+            self._collect(pathlib.Path(p))
+
+    # -- discovery ---------------------------------------------------------
+    def _rel(self, p: pathlib.Path) -> str:
+        p = p.resolve()
+        try:
+            return p.relative_to(self.repo_root).as_posix()
+        except ValueError:
+            return p.as_posix()
+
+    def _excluded(self, rel: str) -> bool:
+        if self.include_fixtures:
+            return False
+        return any(
+            rel == pre or rel.startswith(pre + "/")
+            for pre in DEFAULT_EXCLUDE_PREFIXES
+        )
+
+    def _collect(self, p: pathlib.Path) -> None:
+        if p.is_dir():
+            if p.name in SKIP_DIRS:
+                return
+            for child in sorted(p.iterdir()):
+                if child.is_dir() or child.suffix == ".py":
+                    self._collect(child)
+            return
+        if p.suffix != ".py" or not p.exists():
+            return
+        rel = self._rel(p)
+        if self._excluded(rel) or rel in self._sources:
+            return
+        src = p.read_text()
+        self._sources[rel] = src
+        try:
+            self._trees[rel] = ast.parse(src, filename=rel)
+        except SyntaxError as e:
+            self.parse_errors.append(Finding(
+                check="parse-error", path=rel, line=e.lineno or 0,
+                message=f"syntax error: {e.msg}",
+            ))
+
+    # -- the view checks consume ------------------------------------------
+    def files(self) -> Iterator[Tuple[str, ast.AST]]:
+        """(repo-relative path, module AST) for every parsed file."""
+        for rel in sorted(self._trees):
+            yield rel, self._trees[rel]
+
+    def source(self, rel: str) -> str:
+        return self._sources[rel]
+
+    def exists(self, rel: str) -> bool:
+        return (self.repo_root / rel).exists()
+
+    def glob(self, pattern: str) -> List[str]:
+        """Repo-root-relative glob (posix paths, sorted)."""
+        return sorted(
+            p.relative_to(self.repo_root).as_posix()
+            for p in self.repo_root.glob(pattern)
+        )
+
+    def read(self, rel: str) -> str:
+        """Source of any repo file (not only scanned ones) — used by the
+        parity check to look inside candidate test modules."""
+        if rel in self._sources:
+            return self._sources[rel]
+        return (self.repo_root / rel).read_text()

@@ -1,0 +1,26 @@
+"""The unit of lint output: one convention violation at one site.
+
+Findings are matched against :mod:`tools.repro_lint.allowlist` entries by
+``(check, path)`` — optionally narrowed by ``symbol`` — never by line
+number, which shifts under unrelated edits. ``symbol`` is check-specific
+context: the kernel package for parity findings, the enclosing function
+for AST findings, the deprecated attribute for deprecated-api findings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    check: str      # registered check name, e.g. "scan-purity"
+    path: str       # repo-relative posix path
+    line: int       # 1-based line (0 = whole-file / filesystem finding)
+    message: str    # human-readable description of the violation
+    symbol: str = ""  # optional allowlist-matching context
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        sym = f" [{self.symbol}]" if self.symbol else ""
+        return f"{loc}: [{self.check}]{sym} {self.message}"

@@ -1,0 +1,50 @@
+"""Pluggable check registry.
+
+A check is any callable ``(LintContext) -> Iterable[Finding]`` with a
+``name`` attribute; :func:`register` files it under that name. Checks are
+self-registering on import (:mod:`tools.repro_lint.checks` imports every
+check module), so adding a check = adding one module with one decorated
+function — nothing else to wire.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable, List, Tuple
+
+from tools.repro_lint.findings import Finding
+
+Check = Callable[["LintContext"], Iterable[Finding]]  # noqa: F821
+
+_CHECKS: Dict[str, Check] = {}
+
+
+def register(name: str) -> Callable[[Check], Check]:
+    """Decorator: file a check callable under ``name``."""
+
+    def deco(fn: Check) -> Check:
+        if name in _CHECKS:
+            raise ValueError(f"duplicate lint check name: {name!r}")
+        fn.name = name
+        _CHECKS[name] = fn
+        return fn
+
+    return deco
+
+
+def all_checks() -> List[Tuple[str, Check]]:
+    """Every registered ``(name, check)``, stable name order. Importing
+    the checks package here (not at module import) avoids a
+    registry/check cycle."""
+    import tools.repro_lint.checks  # noqa: F401 — self-registration
+
+    return [(k, _CHECKS[k]) for k in sorted(_CHECKS)]
+
+
+def get_check(name: str) -> Check:
+    import tools.repro_lint.checks  # noqa: F401
+
+    if name not in _CHECKS:
+        raise KeyError(
+            f"unknown check {name!r}; registered: {sorted(_CHECKS)}"
+        )
+    return _CHECKS[name]
