@@ -26,6 +26,18 @@ realized memory-intensive speedup drops below it, or if any DIMM's
 programmed read-set tRAS fails to sit below JEDEC in the coolest bin —
 the two observable symptoms of the old tRAS-at-JEDEC merge bug.
 
+Refresh: the table carries the extended-temperature refresh policy by
+default (``--refresh off`` disables it), so the score reports the
+*combined* latency+refresh realized speedup next to the latency-only
+one — the honest figure to hold against the paper's 14 % claim, since
+hot bins pay slower timings AND doubled refresh occupancy at once.
+``--tiny --scenario refresh_storm`` is gated against its own committed
+baseline (``trace_eval_refresh_storm_tiny.json``): combined intensive
+speedup floor plus a pinned time-weighted refresh occupancy, so the
+2×-refresh penalty can neither silently vanish nor silently grow.
+``--bench-json`` persists the refresh-on vs refresh-off speedup rows as
+``BENCH_trace_eval.json`` for the CI artifact trail.
+
 ``--sharded`` adds the mesh section (``trace/sharded_*`` rows): the same
 replay shard_map-ped over a 1-D DIMM mesh spanning every visible device
 (hard-gated bit-exact vs the single-device scan) plus the gather-free
@@ -52,6 +64,7 @@ import jax
 import numpy as np
 
 from repro.core import controller, fleet, perfmodel, traces
+from repro.core import refresh as rf
 
 try:
     from benchmarks._json_out import write_rows_json
@@ -60,6 +73,17 @@ except ImportError:  # direct-script execution: benchmarks/ is sys.path[0]
 
 #: Committed regression baseline for the --tiny CI configuration.
 TINY_BASELINE_PATH = pathlib.Path(__file__).parent / "baselines" / "trace_eval_tiny.json"
+#: Committed baseline for --tiny --scenario refresh_storm (refresh gate).
+REFRESH_STORM_BASELINE_PATH = (
+    pathlib.Path(__file__).parent / "baselines" / "trace_eval_refresh_storm_tiny.json"
+)
+
+#: --refresh choices -> table refresh policy.
+REFRESH_POLICIES = {
+    "ddr3": rf.DDR3_EXTENDED,
+    "ddr3_4x": rf.DDR3_EXTENDED_4X,
+    "off": None,
+}
 
 
 def run(
@@ -75,6 +99,7 @@ def run(
     verbose: bool = True,
     regression_baseline: str | pathlib.Path | None = None,
     sharded: bool = False,
+    refresh: str = "ddr3",
 ):
     key = jax.random.PRNGKey(seed)
     k_fleet, k_trace, k_err = jax.random.split(key, 3)
@@ -82,6 +107,11 @@ def run(
     fl = fleet.synthesize(k_fleet, n_dimms)
     sweep = fleet.sweep(fl, temps_c=temp_bins, patterns=(1.0,))
     table = sweep.to_table()
+    policy = REFRESH_POLICIES[refresh]
+    if policy is not None:
+        table = controller.DimmTimingTable(
+            temp_bins=table.temp_bins, stack=table.stack, refresh=policy
+        )
 
     trace_kw = {"vendor": fl.vendor} if scenario == "vendor_skew" else {}
     trace = traces.generate(scenario, k_trace, n_dimms, n_steps, dt_s, **trace_kw)
@@ -129,7 +159,10 @@ def run(
         )
 
     # -- scoring -----------------------------------------------------------
-    score = perfmodel.trace_score(table.stack, res)
+    # With a refresh policy the score dict carries BOTH the latency-only
+    # figures (bitwise identical to a policy-less score) and the combined
+    # latency+refresh ones.
+    score = perfmodel.trace_score(table.stack, res, refresh=table.bin_refresh())
 
     # -- sharded section: replay + gather-free scoring over the mesh -------
     shard_rows = []
@@ -157,7 +190,9 @@ def run(
                 f"sharded replay diverged from single-device scan: "
                 f"max|err| = {shard_err} ns on {n_dev} devices"
             )
-        sscore = perfmodel.trace_score(table.stack, sres, mesh=mesh)
+        sscore = perfmodel.trace_score(
+            table.stack, sres, mesh=mesh, refresh=table.bin_refresh()
+        )
         score_err = max(
             abs(sscore[k] - score[k]) / max(abs(score[k]), 1.0)
             for k in score
@@ -210,6 +245,22 @@ def run(
         ("trace/fused_dimms", float(np.asarray(res.state.fused).sum()),
          "0 unless error injection"),
     ]
+    if policy is not None:
+        occ_1x = policy.occupancy_of(1.0)
+        rows.extend([
+            ("trace/refresh_occupancy_mean", score["refresh_occupancy_mean"],
+             f"1x floor {occ_1x:.5f}"),
+            ("trace/speedup_combined_mean", score["speedup_combined_mean"],
+             "<= latency-only"),
+            ("trace/speedup_combined_intensive_mean",
+             score["speedup_combined_intensive_mean"],
+             f"paper claim {perfmodel.PAPER_CLAIM_SPEEDUP} (latency+refresh)"),
+            ("trace/speedup_combined_vs_claim",
+             score["speedup_combined_vs_claim"], ""),
+            ("trace/refresh_dilution_intensive",
+             score["speedup_realized_intensive_mean"]
+             - score["speedup_combined_intensive_mean"], ">= 0"),
+        ])
     rows.extend(shard_rows)
 
     # -- regression gate vs the committed baseline -------------------------
@@ -229,6 +280,34 @@ def run(
                 "read set does not reduce tRAS below JEDEC "
                 f"(frac={score['tras_below_jedec_coolest_frac']:.3f})"
             )
+        if "speedup_combined_intensive_mean" in base:
+            # Refresh gate (refresh_storm tiny): the COMBINED speedup may
+            # not regress, and the time-weighted refresh occupancy is
+            # pinned both ways — the 2x extended-temperature penalty can
+            # neither silently vanish nor silently grow.
+            if policy is None:
+                raise AssertionError(
+                    f"baseline {regression_baseline} gates refresh figures "
+                    "but the run was started with --refresh off"
+                )
+            floor_c = (base["speedup_combined_intensive_mean"]
+                       - base.get("tolerance", 0.005))
+            got_c = score["speedup_combined_intensive_mean"]
+            if got_c < floor_c:
+                raise AssertionError(
+                    f"combined latency+refresh intensive speedup regressed: "
+                    f"{got_c:.4f} < baseline "
+                    f"{base['speedup_combined_intensive_mean']:.4f} - "
+                    f"tolerance (see {regression_baseline})"
+                )
+            occ_tol = base.get("occupancy_tolerance", 1e-3)
+            occ_got = score["refresh_occupancy_mean"]
+            if abs(occ_got - base["refresh_occupancy_mean"]) > occ_tol:
+                raise AssertionError(
+                    f"time-weighted refresh occupancy moved: {occ_got:.5f} "
+                    f"vs pinned {base['refresh_occupancy_mean']:.5f} "
+                    f"(+/- {occ_tol}, see {regression_baseline})"
+                )
         rows.append(("trace/regression_gate_pass", 1.0,
                      f">= {floor:.4f} intensive"))
 
@@ -251,6 +330,12 @@ def run(
               f"mem-intensive (paper claims "
               f"+{perfmodel.PAPER_CLAIM_SPEEDUP*100:.0f}%) | "
               f"{score['switches_total']:.0f} switches")
+        if policy is not None:
+            print(f"# refresh ({refresh}): occupancy "
+                  f"{score['refresh_occupancy_mean']*100:.2f}% of tREFI | "
+                  f"combined +{score['speedup_combined_mean']*100:.1f}% all, "
+                  f"+{score['speedup_combined_intensive_mean']*100:.1f}% "
+                  f"mem-intensive")
     return rows
 
 
@@ -278,11 +363,20 @@ def main() -> None:
                          "gather-free scoring over all visible devices, "
                          "gated vs single-device (on CPU this forces 8 "
                          "host devices unless XLA_FLAGS pins a count)")
+    ap.add_argument("--refresh", choices=sorted(REFRESH_POLICIES),
+                    default="ddr3",
+                    help="refresh policy the table carries (default ddr3: "
+                         "1x/2x extended-temperature; ddr3_4x adds a 4x "
+                         "step; off scores latency only)")
     ap.add_argument("--regression-baseline", type=str, default=None,
                     help="baseline JSON for the realized-speedup gate "
-                         "(default: the committed tiny baseline when --tiny)")
+                         "(default: the committed tiny baseline when --tiny, "
+                         "per scenario)")
     ap.add_argument("--json", type=str, default=None,
                     help="also write rows to this JSON artifact path")
+    ap.add_argument("--bench-json", type=str, default=None,
+                    help="write the refresh-on vs refresh-off speedup "
+                         "comparison rows to this path (BENCH_trace_eval.json)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -295,13 +389,17 @@ def main() -> None:
         if conflicts:
             ap.error(f"--tiny fixes the configuration; remove {', '.join(conflicts)}")
         gate = args.regression_baseline
-        if gate is None and args.scenario == "diurnal" and args.seed == 0 \
-                and TINY_BASELINE_PATH.exists():
-            gate = TINY_BASELINE_PATH  # the committed config the baseline pins
+        if gate is None and args.seed == 0:  # committed configs the baselines pin
+            if args.scenario == "diurnal" and TINY_BASELINE_PATH.exists():
+                gate = TINY_BASELINE_PATH
+            elif args.scenario == "refresh_storm" and args.refresh != "off" \
+                    and REFRESH_STORM_BASELINE_PATH.exists():
+                gate = REFRESH_STORM_BASELINE_PATH
         rows = run(n_dimms=64, n_steps=512, scenario=args.scenario,
                    dt_s=args.dt_s, error_rate=args.error_rate,
                    baseline_dimms=8, baseline_steps=128, seed=args.seed,
-                   regression_baseline=gate, sharded=args.sharded)
+                   regression_baseline=gate, sharded=args.sharded,
+                   refresh=args.refresh)
     else:
         rows = run(
             n_dimms=1000 if args.n_dimms is None else args.n_dimms,
@@ -314,13 +412,31 @@ def main() -> None:
             seed=args.seed,
             regression_baseline=args.regression_baseline,
             sharded=args.sharded,
+            refresh=args.refresh,
         )
     for name, value, ref in rows:
         print(f"{name},{value:.6g},{ref}")
+    meta = {"scenario": args.scenario, "tiny": args.tiny, "seed": args.seed,
+            "refresh": args.refresh}
     if args.json:
-        write_rows_json(args.json, "trace_eval", rows,
-                        meta={"scenario": args.scenario, "tiny": args.tiny,
-                              "seed": args.seed})
+        write_rows_json(args.json, "trace_eval", rows, meta=meta)
+    if args.bench_json:
+        # The BENCH artifact: just the refresh-on vs refresh-off speedup
+        # comparison (latency-only "realized" rows vs combined rows), so
+        # the refresh penalty's trajectory is machine-readable across PRs.
+        bench_names = {
+            "trace/speedup_realized_mean",
+            "trace/speedup_realized_intensive_mean",
+            "trace/speedup_vs_claim",
+            "trace/refresh_occupancy_mean",
+            "trace/speedup_combined_mean",
+            "trace/speedup_combined_intensive_mean",
+            "trace/speedup_combined_vs_claim",
+            "trace/refresh_dilution_intensive",
+            "trace/time_at_jedec_frac",
+        }
+        write_rows_json(args.bench_json, "trace_eval",
+                        [r for r in rows if r[0] in bench_names], meta=meta)
 
 
 if __name__ == "__main__":

@@ -67,11 +67,27 @@ from jax import Array
 
 from repro.core.timing import JEDEC_DDR3_1600, TimingParams
 
-#: Refresh window (DDR3 64 ms retention requirement), in seconds.
+#: Refresh window (DDR3 64 ms retention requirement), in seconds. This is
+#: the NORMAL-range window; see :data:`EXTENDED_TEMP_BOUNDARY_C`.
 REFRESH_WINDOW_S: float = 64e-3
 
 #: The worst-case qualification temperature (°C) of the DDR3 standard.
 T_WORST_C: float = 85.0
+
+#: Extended-temperature boundary (°C, JESD79-3F): above this the standard
+#: mandates 2× refresh (tREFI halved), so a cell is only ever asked to
+#: retain over HALF the normal window. Retention evaluated at a
+#: temperature above the boundary therefore uses the halved window — the
+#: old behaviour (64 ms at every temperature) double-counted the
+#: extended-range penalty: the leakage channel already pays the 2×
+#: exponential, and the refresh hardware never leaves a cell unrefreshed
+#: for 64 ms up there. The bandwidth cost of refreshing twice as often is
+#: charged where it belongs, in :mod:`repro.core.refresh` /
+#: :mod:`repro.core.perfmodel`, not in the charge margin.
+EXTENDED_TEMP_BOUNDARY_C: float = 85.0
+
+#: Refresh-window multiplier in the extended range (2× refresh ⇒ ×0.5).
+EXTENDED_WINDOW_FACTOR: float = 0.5
 
 #: Relative tolerance for forward correctness predicates: the worst-case
 #: cell at JEDEC timings sits exactly on the threshold by construction.
@@ -185,22 +201,44 @@ DEFAULT_CONSTANTS = ChargeModelConstants()
 # ---------------------------------------------------------------------------
 # Temperature channels
 # ---------------------------------------------------------------------------
+def window_factor(temp_c: Array | float) -> Array:
+    """Temperature-dependent refresh-window multiplier.
+
+    1.0 up to and including the 85 °C extended-temperature boundary,
+    :data:`EXTENDED_WINDOW_FACTOR` (0.5 — the standard's mandatory 2×
+    refresh) strictly above it. Vectorized over ``temp_c``; the boundary
+    itself belongs to the normal range, matching the bin semantics of
+    :mod:`repro.core.binning` (a bin's upper edge is inclusive)."""
+    t = jnp.asarray(temp_c, jnp.float32)
+    return jnp.where(t > EXTENDED_TEMP_BOUNDARY_C, EXTENDED_WINDOW_FACTOR, 1.0)
+
+
 def log_retention(
     cell: CellParams,
     temp_c: Array | float,
     window_s: float = REFRESH_WINDOW_S,
     consts: ChargeModelConstants = DEFAULT_CONSTANTS,
 ) -> Array:
-    """log charge fraction retained over ``window_s`` at ``temp_c``.
+    """log charge fraction retained over one refresh window at ``temp_c``.
 
     Worst-case cell (leak=1) at 85 °C over 64 ms retains ``ret85``; leakage
     scales exponentially in temperature (doubling per ``leak_doubling_c``),
     linearly in the cell's leak multiplier and the window length.
+
+    ``window_s`` is the NORMAL-range window; above the 85 °C
+    extended-temperature boundary the effective window is halved
+    (:func:`window_factor`) because the standard mandates 2× refresh
+    there — the anchoring at 85 °C (factor 1.0) is untouched.
     """
-    temp_scale = 2.0 ** (
-        (jnp.asarray(temp_c, jnp.float32) - T_WORST_C) / consts.leak_doubling_c
+    t = jnp.asarray(temp_c, jnp.float32)
+    temp_scale = 2.0 ** ((t - T_WORST_C) / consts.leak_doubling_c)
+    return (
+        jnp.log(consts.ret85)
+        * cell.leak
+        * temp_scale
+        * window_factor(t)
+        * (window_s / REFRESH_WINDOW_S)
     )
-    return jnp.log(consts.ret85) * cell.leak * temp_scale * (window_s / REFRESH_WINDOW_S)
 
 
 def retention(

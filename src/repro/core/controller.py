@@ -17,10 +17,13 @@ struct-of-arrays form:
 * :class:`DimmTimingTable` — the controller's timing registers: one
   ``(n_dimms, n_bins, 2, 4)`` timing stack (access-type axis ordered as
   :data:`repro.core.timing.ACCESS_TYPES` = read, write) plus the bin
-  edges, built directly from a :class:`repro.core.fleet.SweepResult` (no
-  per-DIMM Python object plumbing) and persisted with a schema version
-  (v3; v1/v2 single-set files still load, their merged set duplicated
-  into both slots).
+  edges and an optional temperature-driven
+  :class:`repro.core.refresh.RefreshPolicy` (so bin selection sees the
+  refresh cost of running hot, not just the slower timings), built
+  directly from a :class:`repro.core.fleet.SweepResult` (no per-DIMM
+  Python object plumbing) and persisted with a schema version (v4;
+  v1–v3 files still load — v1/v2 merged sets duplicated into both
+  slots, pre-v4 refresh policy absent).
 * The **pure state machine**: controller state is a
   :class:`ControllerState` pytree (``bin_idx`` / ``cool_streak`` /
   ``fused`` arrays over the DIMM axis) advanced by :func:`step` — one
@@ -66,6 +69,7 @@ from jax import Array
 from repro.core import charge, shard
 from repro.core.binning import advance_bin, bin_index
 from repro.core.charge import CellParams, ChargeModelConstants, DEFAULT_CONSTANTS
+from repro.core.refresh import BinRefresh, RefreshPolicy, bin_refresh as _bin_refresh
 from repro.core.timing import (
     ACCESS_TYPES,
     AccessTimings,
@@ -92,9 +96,11 @@ HYSTERESIS_STEPS: int = 3
 #: Persisted-table format version. v1 (PR 1, implicit) stored nested
 #: per-DIMM lists of timing dicts; v2 stored a single merged
 #: ``(n_dimms, n_bins, 4)`` stack; v3 stores the per-access-type
-#: ``(n_dimms, n_bins, 2, 4)`` stack. ``from_json`` loads all three —
-#: v1/v2 merged sets are duplicated into both access slots on load.
-TABLE_SCHEMA_VERSION: int = 3
+#: ``(n_dimms, n_bins, 2, 4)`` stack; v4 adds the optional temperature
+#: → refresh-rate policy (``"refresh"``, nullable). ``from_json`` loads
+#: all four — v1/v2 merged sets are duplicated into both access slots on
+#: load, and pre-v4 files load with no refresh policy.
+TABLE_SCHEMA_VERSION: int = 4
 
 _JEDEC_ROW = np.asarray(
     [getattr(JEDEC_DDR3_1600, p) for p in PARAM_NAMES], np.float32
@@ -117,13 +123,25 @@ class DimmTimingTable:
     A negative entry is the profiler's *untested* sentinel and is refused
     at construction: a table must never program a timing that was not
     actually validated (the guard that makes the old silent
-    tRAS-at-JEDEC write profile impossible to reintroduce)."""
+    tRAS-at-JEDEC write profile impossible to reintroduce).
+
+    ``refresh`` — optional temperature-driven
+    :class:`repro.core.refresh.RefreshPolicy` (schema v4): the DDR3
+    1×/2× extended-temperature staircase (or a pluggable 4× variant)
+    this table's DIMMs refresh under. Tables without one (``None``,
+    the pre-v4 default) score latency-only."""
 
     temp_bins: Tuple[float, ...]
     #: (n_dimms, n_bins, 2, 4) float32 ns
     stack: np.ndarray
+    refresh: Optional[RefreshPolicy] = None
 
     def __post_init__(self) -> None:
+        if self.refresh is not None and not isinstance(self.refresh, RefreshPolicy):
+            raise TypeError(
+                f"refresh must be a RefreshPolicy or None, got "
+                f"{type(self.refresh).__name__}"
+            )
         self.stack = np.asarray(self.stack, np.float32)
         if self.stack.ndim != 4 or self.stack.shape[1:] != (
             len(self.temp_bins),
@@ -154,8 +172,17 @@ class DimmTimingTable:
         return (
             isinstance(other, DimmTimingTable)
             and self.temp_bins == other.temp_bins
+            and self.refresh == other.refresh
             and np.array_equal(self.stack, other.stack)
         )
+
+    def bin_refresh(self) -> Optional[BinRefresh]:
+        """Per-effective-bin refresh load under this table's policy — the
+        ``refresh=`` argument of the :func:`repro.core.perfmodel.trace_score`
+        family. ``None`` (no policy) means latency-only scoring."""
+        if self.refresh is None:
+            return None
+        return _bin_refresh(self.refresh, self.temp_bins)
 
     # -- construction -----------------------------------------------------
     @classmethod
@@ -165,6 +192,7 @@ class DimmTimingTable:
         temp_bins: Sequence[float] = DEFAULT_TEMP_BINS,
         window_s: float = charge.REFRESH_WINDOW_S,
         consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+        refresh: Optional[RefreshPolicy] = None,
     ) -> "DimmTimingTable":
         """Boot-time profiling: minimal safe timings per DIMM per bin.
 
@@ -172,18 +200,23 @@ class DimmTimingTable:
         (DIMM × temperature) sweep at the worst-case data pattern) and
         programs one read set and one write set per bin — each access type
         at its own profiled margin (the paper's per-access-type register
-        sets), never the elementwise merge."""
+        sets), never the elementwise merge. ``refresh`` records the
+        temperature-driven refresh policy the DIMMs run under (v4 tables;
+        scoring then reports combined latency+refresh figures)."""
         from repro.core import fleet as fleet_mod
 
         result = fleet_mod.sweep(
             cells, temps_c=tuple(temp_bins), patterns=(1.0,),
             window_s=window_s, consts=consts,
         )
-        return cls.from_fleet(result, temp_bins=temp_bins)
+        return cls.from_fleet(result, temp_bins=temp_bins, refresh=refresh)
 
     @classmethod
     def from_fleet(
-        cls, result, temp_bins: Optional[Sequence[float]] = None
+        cls,
+        result,
+        temp_bins: Optional[Sequence[float]] = None,
+        refresh: Optional[RefreshPolicy] = None,
     ) -> "DimmTimingTable":
         """Build the stacked per-(DIMM, temperature-bin, access-type) table
         straight from a :class:`repro.core.fleet.SweepResult` — no
@@ -208,7 +241,11 @@ class DimmTimingTable:
                     f"{result.read.shape[0]}-temperature sweep"
                 )
         stacked = np.asarray(result.stacked_timings(), np.float32)  # (T,N,2,4)
-        return cls(temp_bins=temp_bins, stack=stacked.transpose(1, 0, 2, 3))
+        return cls(
+            temp_bins=temp_bins,
+            stack=stacked.transpose(1, 0, 2, 3),
+            refresh=refresh,
+        )
 
     @classmethod
     def from_sets(
@@ -264,6 +301,14 @@ class DimmTimingTable:
 
     # -- persistence (the controller's "timing registers" survive reboot) --
     def to_json(self) -> str:
+        refresh = None
+        if self.refresh is not None:
+            refresh = {
+                "boundaries": list(self.refresh.boundaries),
+                "multipliers": list(self.refresh.multipliers),
+                "trefi_base_ns": self.refresh.trefi_base_ns,
+                "trfc_ns": self.refresh.trfc_ns,
+            }
         return json.dumps(
             {
                 "schema_version": TABLE_SCHEMA_VERSION,
@@ -271,6 +316,7 @@ class DimmTimingTable:
                 "access_types": list(ACCESS_TYPES),
                 "temp_bins": list(self.temp_bins),
                 "stack": self.stack.tolist(),
+                "refresh": refresh,
             }
         )
 
@@ -285,7 +331,7 @@ class DimmTimingTable:
                 obj["temp_bins"],
                 [[TimingParams(**d) for d in per_dimm] for per_dimm in obj["sets"]],
             )
-        if version in (2, 3):
+        if version in (2, 3, 4):
             if obj.get("params", list(PARAM_NAMES)) != list(PARAM_NAMES):
                 raise ValueError(
                     f"persisted parameter order {obj['params']} does not "
@@ -299,15 +345,25 @@ class DimmTimingTable:
                 temp_bins=tuple(obj["temp_bins"]),
                 stack=np.repeat(merged[:, :, None, :], len(ACCESS_TYPES), axis=2),
             )
-        if version == 3:
+        if version in (3, 4):
             if obj.get("access_types", list(ACCESS_TYPES)) != list(ACCESS_TYPES):
                 raise ValueError(
                     f"persisted access-type order {obj['access_types']} does "
                     f"not match {list(ACCESS_TYPES)}"
                 )
+            refresh = None
+            if version == 4 and obj.get("refresh") is not None:
+                r = obj["refresh"]
+                refresh = RefreshPolicy(
+                    boundaries=tuple(float(b) for b in r["boundaries"]),
+                    multipliers=tuple(float(m) for m in r["multipliers"]),
+                    trefi_base_ns=float(r["trefi_base_ns"]),
+                    trfc_ns=float(r["trfc_ns"]),
+                )
             return cls(
                 temp_bins=tuple(obj["temp_bins"]),
                 stack=np.asarray(obj["stack"], np.float32),
+                refresh=refresh,
             )
         raise ValueError(f"unknown DimmTimingTable schema_version {version!r}")
 

@@ -215,24 +215,44 @@ def evaluate(
     cfg: SystemConfig,
     workloads: Tuple[Workload, ...] = WORKLOADS,
     t_write: Optional[TimingParams] = None,
+    refresh_occ: Array | float = 0.0,
+    trfc_ns: Array | float = 0.0,
 ) -> Dict[str, Array]:
     """IPC per workload under timing set ``t`` (homogeneous multi-instance
     for the multi-core configuration, the paper's methodology).
 
     Pass ``t_write`` to evaluate a per-access-type register file: reads
     run at ``t``'s margins, writes at ``t_write``'s. Omitting it models a
-    merged single set (the two coincide)."""
+    merged single set (the two coincide).
+
+    ``refresh_occ`` is the rank's refresh occupancy — the fraction of
+    time lost to REFRESH commands (``mult · tRFC / tREFI``, see
+    :mod:`repro.core.refresh`). Refresh steals bandwidth from BOTH
+    servers (during tRFC no bank can cycle and no data moves, so the
+    effective capacity of the bank pool and the data bus shrinks by
+    ``1 − occ``) and adds expected blocking latency (an arrival landing
+    in an in-flight REFRESH waits ``tRFC / 2`` on average). At the
+    defaults (0.0) every term reduces to exactly the refresh-free
+    arithmetic (``x + 0`` and ``x / 1`` are exact in float32), so
+    refresh-free callers are numerically unchanged."""
     f = _fields(workloads)
-    lat = access_latency_ns(t, f, cfg, t_write)
+    # Expected refresh blocking per request: P(arrive during refresh) ×
+    # mean residual refresh time. The SAME absolute penalty lands on
+    # adapted and JEDEC timings alike, which is why refresh DILUTES the
+    # relative gain (combined ≤ latency-only speedup).
+    lat = access_latency_ns(t, f, cfg, t_write) + refresh_occ * trfc_ns * 0.5
     svc = miss_service_ns(t, f, cfg, t_write)
     miss = 1.0 - f["row_hit"]
     banks_eff = cfg.n_banks * cfg.bank_balance
     ghz = cfg.cpu_ghz
+    avail = 1.0 - refresh_occ
 
     def cpi_of(ipc: Array) -> Array:
         rate = cfg.n_cores * ipc * ghz * f["mpki"] * 1e-3  # req/ns
-        rho_bank = jnp.clip(rate * miss * svc / banks_eff, 0.0, cfg.rho_max)
-        rho_bus = jnp.clip(rate * TBURST_NS, 0.0, cfg.rho_max)
+        rho_bank = jnp.clip(
+            rate * miss * svc / (banks_eff * avail), 0.0, cfg.rho_max
+        )
+        rho_bus = jnp.clip(rate * TBURST_NS / avail, 0.0, cfg.rho_max)
         queue = (
             rho_bank / (1.0 - rho_bank) * svc * 0.5
             + rho_bus / (1.0 - rho_bus) * TBURST_NS * 0.5
@@ -328,11 +348,35 @@ def _ipc_stack(flat: Array, cfg: SystemConfig, workloads: Tuple[Workload, ...]) 
     return jax.vmap(one)(flat)
 
 
+# A separate jitted program for the refresh-aware path: the refresh-free
+# `_ipc_stack` keeps its exact operand signature (and therefore its
+# compiled program), preserving the "identical compiled programs" bitwise
+# guarantees of the refresh-free score paths.
+@functools.partial(jax.jit, static_argnames=("cfg", "workloads", "trfc_ns"))
+def _ipc_stack_refresh(
+    flat: Array,
+    occ: Array,
+    cfg: SystemConfig,
+    workloads: Tuple[Workload, ...],
+    trfc_ns: float,
+) -> Array:
+    def one(ts: Array, o: Array) -> Array:
+        tr = TimingParams(ts[0, 0], ts[0, 1], ts[0, 2], ts[0, 3])
+        tw = TimingParams(ts[1, 0], ts[1, 1], ts[1, 2], ts[1, 3])
+        return evaluate(
+            tr, cfg, workloads, t_write=tw, refresh_occ=o, trfc_ns=trfc_ns
+        )["ipc"]
+
+    return jax.vmap(one)(flat, occ)
+
+
 def evaluate_stack(
     timings: Array,
     cfg: SystemConfig,
     workloads: Tuple[Workload, ...] = WORKLOADS,
     split: Optional[bool] = None,
+    refresh_occ: Optional[Array] = None,
+    trfc_ns: float = 0.0,
 ) -> Array:
     """IPC for a ``(..., 4)`` merged or ``(..., 2, 4)`` per-access-type
     timing stack (``PARAM_NAMES`` order, ns; see :func:`_with_access_axis`
@@ -343,9 +387,21 @@ def evaluate_stack(
     sweep output straight in (eager dispatch of the unrolled bisection
     loop is ~300× slower). Returns IPC with shape
     ``(leading..., n_workloads)``.
+
+    ``refresh_occ`` — optional per-entry refresh occupancy, broadcastable
+    to the stack's leading axes (see :func:`evaluate`); ``None`` runs the
+    refresh-free compiled program, untouched.
     """
     timings = _with_access_axis(timings, split)
-    ipc = _ipc_stack(timings.reshape(-1, 2, 4), cfg, workloads)
+    if refresh_occ is None:
+        ipc = _ipc_stack(timings.reshape(-1, 2, 4), cfg, workloads)
+    else:
+        occ = jnp.broadcast_to(
+            jnp.asarray(refresh_occ, jnp.float32), timings.shape[:-2]
+        ).reshape(-1)
+        ipc = _ipc_stack_refresh(
+            timings.reshape(-1, 2, 4), occ, cfg, workloads, float(trfc_ns)
+        )
     return ipc.reshape(*timings.shape[:-2], ipc.shape[-1])
 
 
@@ -354,17 +410,36 @@ def fleet_speedups(
     cfg: SystemConfig = MULTI_CORE,
     workloads: Tuple[Workload, ...] = WORKLOADS,
     split: Optional[bool] = None,
+    refresh_occ: Optional[Array] = None,
+    trfc_ns: float = 0.0,
 ) -> Array:
     """Per-entry geometric-mean speedup over JEDEC for a ``(..., 4)``
     merged or ``(..., 2, 4)`` per-access-type stack (``split`` as in
     :func:`evaluate_stack`).
 
     This is the per-DIMM "what do I gain from adapting this module" number
-    of the paper's Fig. 3, computed for a whole fleet in one call."""
+    of the paper's Fig. 3, computed for a whole fleet in one call.
+
+    With ``refresh_occ`` (per-entry occupancy, broadcastable to the
+    leading axes) the ratio becomes the COMBINED latency+refresh speedup:
+    each entry's JEDEC baseline pays the SAME refresh occupancy — the
+    refresh rate is set by temperature, which adapting timings does not
+    change — so the ratio isolates what adaptation buys in a system that
+    is refreshing either way."""
     jedec = jnp.asarray([list(JEDEC_DDR3_1600)], jnp.float32)
-    base = evaluate_stack(jedec, cfg, workloads, split=False)[0]
-    ipc = evaluate_stack(timings, cfg, workloads, split=split)
-    ratio = ipc / jnp.broadcast_to(base, jnp.shape(ipc))
+    if refresh_occ is None:
+        base = evaluate_stack(jedec, cfg, workloads, split=False)[0]
+        ipc = evaluate_stack(timings, cfg, workloads, split=split)
+        ratio = ipc / jnp.broadcast_to(base, jnp.shape(ipc))
+    else:
+        timings = _with_access_axis(timings, split)
+        jedec_rows = jnp.broadcast_to(
+            jnp.stack([jedec[0], jedec[0]]), timings.shape
+        )
+        kw = dict(split=True, refresh_occ=refresh_occ, trfc_ns=trfc_ns)
+        base = evaluate_stack(jedec_rows, cfg, workloads, **kw)
+        ipc = evaluate_stack(timings, cfg, workloads, **kw)
+        ratio = ipc / base
     return jnp.exp(jnp.log(ratio).mean(axis=-1))
 
 
@@ -514,14 +589,24 @@ def _score_figures(
     stack: Array,
     cfg: SystemConfig,
     workloads: Tuple[Workload, ...],
+    refresh=None,
 ):
     """Per-DIMM score figures from partials — the shared core of every
     ``trace_score`` path (single-device, shard-local, streamed finalize).
 
     Returns ``(occ (N, B+1) fractions, red dict, realized (N,),
-    realized_mem (N,), tras_flags (N,))``. IPC is evaluated once per
-    unique (DIMM, bin) register block and weighted by time-in-bin, so a
-    10⁷-transition day costs the same as a minute."""
+    realized_mem (N,), tras_flags (N,), extra)``. IPC is evaluated once
+    per unique (DIMM, bin) register block and weighted by time-in-bin, so
+    a 10⁷-transition day costs the same as a minute.
+
+    ``refresh`` — optional :class:`repro.core.refresh.BinRefresh`
+    (per-effective-bin occupancies + tRFC). ``extra`` is then a dict of
+    per-DIMM refresh figures (``combined``/``combined_mem`` realized
+    combined speedups, ``refresh_occ`` time-weighted occupancy), else
+    ``None``. Because the occupancy is a function of the SELECTED BIN,
+    the existing time-in-bin partials already carry everything this
+    needs: refresh enters at finalize only, and streamed ≡ materialized
+    stays bit-exact with refresh enabled for free."""
     n_steps = partials.n_steps.astype(jnp.float32)
     occ = partials.occupancy.astype(jnp.float32) / n_steps       # (N, B+1)
     sums = partials.timing_sums                                  # (N, 2, 4)
@@ -547,7 +632,24 @@ def _score_figures(
     tras_flags = (
         stack[:, 0, 0, 1] < JEDEC_DDR3_1600.tras - 1e-6
     ).astype(jnp.float32)
-    return occ, red, realized, realized_mem, tras_flags
+    extra = None
+    if refresh is not None:
+        if len(refresh.occupancy) != occ.shape[-1]:
+            raise ValueError(
+                f"refresh carries {len(refresh.occupancy)} per-bin "
+                f"occupancies for {occ.shape[-1]} effective bins"
+            )
+        occ_bins = jnp.asarray(refresh.occupancy, jnp.float32)   # (B+1,)
+        kw = dict(split=True, refresh_occ=occ_bins[None, :],
+                  trfc_ns=refresh.trfc_ns)
+        sp_c = fleet_speedups(rows, cfg, workloads, **kw)        # (N, B+1)
+        sp_c_mem = fleet_speedups(rows, cfg, MEM_INTENSIVE_WORKLOADS, **kw)
+        extra = {
+            "combined": (occ * sp_c).sum(axis=-1),               # (N,)
+            "combined_mem": (occ * sp_c_mem).sum(axis=-1),
+            "refresh_occ": (occ * occ_bins[None, :]).sum(axis=-1),
+        }
+    return occ, red, realized, realized_mem, tras_flags, extra
 
 
 def trace_score_finalize(
@@ -557,6 +659,7 @@ def trace_score_finalize(
     claim: float = PAPER_CLAIM_SPEEDUP,
     workloads: Tuple[Workload, ...] = WORKLOADS,
     mesh=None,
+    refresh=None,
 ) -> Dict[str, float]:
     """Final score dict from accumulated partials + the table's registers.
 
@@ -566,7 +669,14 @@ def trace_score_finalize(
     streamed and materialized scores agree bitwise. ``mesh`` runs the
     per-DIMM finalize work gather-free over the ``"dimm"`` axis with
     mask-weighted psums, composing with a streamed ``replay_stream(mesh=)``
-    whose partials stayed device-sharded."""
+    whose partials stayed device-sharded.
+
+    ``refresh`` — optional :class:`repro.core.refresh.BinRefresh`
+    (hashable, so it keys the cached sharded runners): adds the combined
+    latency+refresh figures (``refresh_occupancy_mean``,
+    ``speedup_combined_*``) on top of the latency-only ones. The partials
+    are refresh-agnostic — occupancy is a function of the selected bin —
+    so the same accumulated partials score with or without refresh."""
     stack = jnp.asarray(stack, jnp.float32)
     stack = _with_access_axis(stack, split=(stack.ndim == 4))    # (N, B, 2, 4)
     n_dimms, n_bins = stack.shape[0], stack.shape[1]
@@ -584,12 +694,14 @@ def trace_score_finalize(
         mask = shard.dimm_mask(
             n_dimms, shard.padded_size(n_dimms, shard.n_shards(mesh))
         )
-        run = _sharded_finalize_runner(mesh, n_dimms, n_bins, cfg, workloads)
+        run = _sharded_finalize_runner(
+            mesh, n_dimms, n_bins, cfg, workloads, refresh
+        )
         sums = run(partials.occupancy, partials.switches,
                    partials.timing_sums, partials.n_steps, stack, mask)
-        return _score_dict_from_sums(sums, n_dimms, n_steps, claim)
-    occ, red, realized, realized_mem, tras_flags = _score_figures(
-        partials, stack, cfg, workloads
+        return _score_dict_from_sums(sums, n_dimms, n_steps, claim, refresh)
+    occ, red, realized, realized_mem, tras_flags, extra = _score_figures(
+        partials, stack, cfg, workloads, refresh
     )
     out = {
         "read_reduction_mean": float(red["read"].mean()),
@@ -607,6 +719,18 @@ def trace_score_finalize(
         "time_in_coolest_bin_frac": float(occ[:, 0].mean()),
         "tras_below_jedec_coolest_frac": float(tras_flags.mean()),
     }
+    if extra is not None:
+        out.update({
+            "refresh_occupancy_mean": float(extra["refresh_occ"].mean()),
+            "speedup_combined_mean": float(extra["combined"].mean() - 1.0),
+            "speedup_combined_min": float(extra["combined"].min() - 1.0),
+            "speedup_combined_intensive_mean": float(
+                extra["combined_mem"].mean() - 1.0
+            ),
+            "speedup_combined_vs_claim": float(
+                extra["combined_mem"].mean() - 1.0
+            ) - claim,
+        })
     for access in ACCESS_TYPES:
         per = red[f"{access}_params"]                            # (N, 4)
         for pi, param in enumerate(PARAM_NAMES):
@@ -621,6 +745,7 @@ def trace_score(
     claim: float = PAPER_CLAIM_SPEEDUP,
     workloads: Tuple[Workload, ...] = WORKLOADS,
     mesh=None,
+    refresh=None,
 ) -> Dict[str, float]:
     """Score a controller replay: realized latency/performance gains,
     switching activity, and degradation vs the paper's 14 % claim.
@@ -647,13 +772,19 @@ def trace_score(
     per-DIMM array is ever gathered to one device. Counts and
     integer-valued sums are exact; float means can differ from
     ``mesh=None`` only by cross-shard summation order (tested to ~1e-5
-    relative)."""
+    relative).
+
+    ``refresh`` — optional :class:`repro.core.refresh.BinRefresh`
+    (typically ``table.bin_refresh()``): adds the combined
+    latency+refresh figures; see :func:`trace_score_finalize`."""
     stack = jnp.asarray(stack, jnp.float32)
     # Fixed-rank input: rank 4 = (N, B, 2, 4) split registers, rank 3 =
     # legacy merged (N, B, 4) — decided by rank, never by axis extent.
     stack = _with_access_axis(stack, split=(stack.ndim == 4))    # (N, B, 2, 4)
     if mesh is not None:
-        return _trace_score_sharded(stack, replay, cfg, claim, workloads, mesh)
+        return _trace_score_sharded(
+            stack, replay, cfg, claim, workloads, mesh, refresh
+        )
     n_dimms, n_bins = stack.shape[0], stack.shape[1]
     partials = trace_score_accumulate(
         trace_score_init(n_dimms, n_bins),
@@ -661,7 +792,9 @@ def trace_score(
         jnp.asarray(replay.bin_idx),
         jnp.asarray(replay.switched),
     )
-    return trace_score_finalize(partials, stack, cfg, claim, workloads)
+    return trace_score_finalize(
+        partials, stack, cfg, claim, workloads, refresh=refresh
+    )
 
 
 def _psum_score_partials(
@@ -670,15 +803,18 @@ def _psum_score_partials(
     mask_l: Array,
     cfg: SystemConfig,
     workloads: Tuple[Workload, ...],
+    refresh=None,
 ) -> Tuple:
     """Shard-local score figures → mask-weighted cross-device sums (the
-    body both sharded entry points run under ``shard_map``)."""
+    body both sharded entry points run under ``shard_map``). With
+    ``refresh``, four more sums ride along (combined/combined-mem totals,
+    combined pmin, occupancy total) — 15 instead of 11."""
     from repro.core import shard
 
     n_bins = stack_l.shape[1]
     m = mask_l.astype(jnp.float32)
-    occ, red, realized, realized_mem, tras_flags = _score_figures(
-        partials, stack_l, cfg, workloads
+    occ, red, realized, realized_mem, tras_flags, extra = _score_figures(
+        partials, stack_l, cfg, workloads, refresh
     )
 
     def tot(x):
@@ -687,6 +823,12 @@ def _psum_score_partials(
     per_access = tuple(
         shard.psum(jnp.sum(red[f"{a}_params"] * m[:, None], axis=0))
         for a in ACCESS_TYPES
+    )
+    refresh_sums = () if extra is None else (
+        tot(extra["combined"]),
+        tot(extra["combined_mem"]),
+        shard.pmin(jnp.min(jnp.where(mask_l, extra["combined"], jnp.inf))),
+        tot(extra["refresh_occ"]),
     )
     return (
         tot(red["read"]),
@@ -701,15 +843,16 @@ def _psum_score_partials(
         tot(occ[:, n_bins]),
         tot(occ[:, 0]),
         tot(tras_flags),
-    ) + per_access
+    ) + per_access + refresh_sums
 
 
 def _score_dict_from_sums(
-    sums: Tuple, n_dimms: int, n_steps: int, claim: float
+    sums: Tuple, n_dimms: int, n_steps: int, claim: float, refresh=None
 ) -> Dict[str, float]:
-    """Assemble the score dict from the 11 psum'd cross-shard sums."""
+    """Assemble the score dict from the psum'd cross-shard sums (11
+    refresh-free, 15 with refresh)."""
     (s_read, s_write, s_real, s_real_mem, real_min, s_switch,
-     s_jedec, s_cool, s_tras, s_read_params, s_write_params) = sums
+     s_jedec, s_cool, s_tras, s_read_params, s_write_params) = sums[:11]
     n = float(n_dimms)
     out = {
         "read_reduction_mean": float(s_read) / n,
@@ -725,6 +868,15 @@ def _score_dict_from_sums(
         "time_in_coolest_bin_frac": float(s_cool) / n,
         "tras_below_jedec_coolest_frac": float(s_tras) / n,
     }
+    if refresh is not None:
+        s_comb, s_comb_mem, comb_min, s_ref_occ = sums[11:]
+        out.update({
+            "refresh_occupancy_mean": float(s_ref_occ) / n,
+            "speedup_combined_mean": float(s_comb) / n - 1.0,
+            "speedup_combined_min": float(comb_min) - 1.0,
+            "speedup_combined_intensive_mean": float(s_comb_mem) / n - 1.0,
+            "speedup_combined_vs_claim": (float(s_comb_mem) / n - 1.0) - claim,
+        })
     for access, sums_a in zip(ACCESS_TYPES, (s_read_params, s_write_params)):
         arr = np.asarray(sums_a)
         for pi, param in enumerate(PARAM_NAMES):
@@ -739,6 +891,7 @@ def _trace_score_sharded(
     claim: float,
     workloads: Tuple[Workload, ...],
     mesh,
+    refresh=None,
 ) -> Dict[str, float]:
     """Gather-free :func:`trace_score`: each shard accumulates its block's
     :class:`ScorePartials` locally (full step axis, its slice of DIMMs),
@@ -756,7 +909,9 @@ def _trace_score_sharded(
     partials = ScorePartials(*run(
         timings, jnp.asarray(replay.bin_idx), jnp.asarray(replay.switched)
     ))
-    return trace_score_finalize(partials, stack, cfg, claim, workloads, mesh=mesh)
+    return trace_score_finalize(
+        partials, stack, cfg, claim, workloads, mesh=mesh, refresh=refresh
+    )
 
 
 @functools.lru_cache(maxsize=16)
@@ -786,19 +941,26 @@ def _sharded_finalize_runner(
     n_bins: int,
     cfg: SystemConfig,
     workloads: Tuple[Workload, ...],
+    refresh=None,
 ):
     """Cached gather-free finalize for already-accumulated partials (the
     streamed path: :func:`trace_score_finalize` with ``mesh=``). Same
     shard-local body as the materialized sharded scorer, so a streamed
-    score over the same mesh is bit-identical to the materialized one."""
+    score over the same mesh is bit-identical to the materialized one.
+    ``refresh`` (a hashable :class:`repro.core.refresh.BinRefresh` or
+    ``None``) keys the cache — refresh-on and refresh-off runners are
+    distinct compiled programs with 15 vs 11 output sums."""
     from repro.core import shard
 
     def local(occ_l, switches_l, timing_sums_l, n_steps, stack_l, mask_l):
         partials = ScorePartials(occ_l, switches_l, timing_sums_l, n_steps)
-        return _psum_score_partials(partials, stack_l, mask_l, cfg, workloads)
+        return _psum_score_partials(
+            partials, stack_l, mask_l, cfg, workloads, refresh
+        )
 
+    n_out = 11 if refresh is None else 15
     return shard.sharded_dimm_map(
-        local, mesh, in_axes=(0, 0, 0, None, 0, 0), out_axes=(None,) * 11,
+        local, mesh, in_axes=(0, 0, 0, None, 0, 0), out_axes=(None,) * n_out,
         n_dimms=n_dimms,
     )
 

@@ -1,0 +1,193 @@
+"""Temperature-driven DRAM refresh model (tREFI / tRFC).
+
+AL-DRAM's charge argument — retention over the refresh window (paper
+Fig. 1) — is exactly the mechanism that forces hot DIMMs to refresh more
+often: above the 85 °C extended-temperature boundary the DDR3 standard
+mandates 2× refresh (tREFI halved, the retention window drops from 64 ms
+to 32 ms — the amaram SDRAM datasheet constants ``T_REF = 32 ms``,
+``NUM_REF = 8192``), and LPDDR-style temperature-compensated refresh goes
+to 4×. Refresh is pure overhead the bank scheduler must absorb: every
+tREFI the rank executes one REFRESH command and is unavailable for tRFC
+(the amaram FSM's ``CMD_REF → s_refresh`` arc blocks all banks until
+tRFC elapses). So a hot DIMM pays twice — slower timing registers AND a
+larger fraction of time lost to refresh.
+
+This module is the static policy side of that story:
+
+* :class:`RefreshPolicy` — a frozen, hashable description of the
+  temperature → refresh-rate-multiplier staircase plus the base tREFI /
+  tRFC. :data:`DDR3_EXTENDED` is the standard 1×/2× policy;
+  :data:`DDR3_EXTENDED_4X` the pluggable 1×/2×/4× variant.
+* :func:`multiplier_at` — the multiplier at a raw temperature
+  (vectorized; the boundary itself belongs to the cooler side, matching
+  :func:`repro.core.charge.window_factor`).
+* :func:`bin_refresh` — the per-effective-bin :class:`BinRefresh` load
+  for a controller temperature-bin grid: each profiled bin carries the
+  multiplier at its upper edge (every temperature the bin covers is at or
+  below that edge, and bin selection is guard-banded on top), and the
+  beyond-last-bin JEDEC sentinel carries the multiplier just above the
+  last edge — the sentinel is selected exactly when the DIMM runs hotter
+  than every profiled bin.
+
+The dynamic side — refresh occupancy stealing bandwidth and adding
+blocking latency in the service model — lives in
+:mod:`repro.core.perfmodel` (``refresh=`` on the ``trace_score`` family),
+which consumes the hashable :class:`BinRefresh` so the sharded finalize
+runners can key their caches on it. Because the per-bin multiplier is a
+function of the SELECTED BIN (not of per-step raw temperature), the
+existing :class:`~repro.core.perfmodel.ScorePartials` occupancy counts
+already carry everything refresh scoring needs: refresh enters at
+finalize only, and streamed ≡ materialized stays bit-exact with refresh
+enabled for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from repro.core.charge import EXTENDED_TEMP_BOUNDARY_C
+
+#: Base (normal-range) average refresh interval, ns: the 64 ms retention
+#: window spread over the 8192 row-refresh commands of a DDR3 device
+#: (64 ms / 8192 = 7.8125 µs — the amaram datasheet's T_REF / NUM_REF).
+TREFI_BASE_NS: float = 64e6 / 8192.0
+
+#: Refresh cycle time, ns: how long the rank is unavailable per REFRESH
+#: command (JESD79-3F, 4 Gb density class).
+TRFC_NS: float = 260.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshPolicy:
+    """Temperature → refresh-rate-multiplier staircase (frozen, hashable —
+    safe as a jit static and an ``lru_cache`` key, like
+    :class:`~repro.core.perfmodel.SystemConfig`).
+
+    ``multipliers[i]`` applies to temperatures in
+    ``(boundaries[i-1], boundaries[i]]`` (first segment: up to and
+    including ``boundaries[0]``; last: strictly above ``boundaries[-1]``).
+    The staircase must be non-decreasing — refresh never slows down as
+    the device heats up."""
+
+    boundaries: Tuple[float, ...] = (EXTENDED_TEMP_BOUNDARY_C,)
+    multipliers: Tuple[float, ...] = (1.0, 2.0)
+    trefi_base_ns: float = TREFI_BASE_NS
+    trfc_ns: float = TRFC_NS
+
+    def __post_init__(self) -> None:
+        if len(self.multipliers) != len(self.boundaries) + 1:
+            raise ValueError(
+                f"{len(self.boundaries)} boundaries need "
+                f"{len(self.boundaries) + 1} multipliers, got "
+                f"{len(self.multipliers)}"
+            )
+        if tuple(sorted(self.boundaries)) != self.boundaries:
+            raise ValueError(f"boundaries must be sorted: {self.boundaries}")
+        if any(m <= 0.0 for m in self.multipliers):
+            raise ValueError(f"multipliers must be positive: {self.multipliers}")
+        if tuple(sorted(self.multipliers)) != self.multipliers:
+            raise ValueError(
+                "refresh-rate multipliers must be non-decreasing in "
+                f"temperature: {self.multipliers}"
+            )
+        if not (self.trefi_base_ns > 0.0 and self.trfc_ns > 0.0):
+            raise ValueError("tREFI and tRFC must be positive")
+        if self.trfc_ns * max(self.multipliers) >= self.trefi_base_ns:
+            raise ValueError(
+                "refresh occupancy would reach 100%: "
+                f"max multiplier {max(self.multipliers)} × tRFC "
+                f"{self.trfc_ns} ns ≥ tREFI {self.trefi_base_ns} ns"
+            )
+
+    def occupancy_of(self, multiplier: float) -> float:
+        """Fraction of time the rank spends refreshing at a multiplier:
+        tRFC per (tREFI / multiplier)."""
+        return float(multiplier) * self.trfc_ns / self.trefi_base_ns
+
+
+#: The DDR3 standard policy: 1× up to 85 °C, 2× in the extended range.
+DDR3_EXTENDED = RefreshPolicy()
+
+#: Pluggable aggressive policy: LPDDR-style 4× above 95 °C.
+DDR3_EXTENDED_4X = RefreshPolicy(
+    boundaries=(EXTENDED_TEMP_BOUNDARY_C, 95.0),
+    multipliers=(1.0, 2.0, 4.0),
+)
+
+
+def multiplier_at(
+    policy: RefreshPolicy, temp_c: Array | float
+) -> Array:
+    """Refresh-rate multiplier at raw temperature(s) ``temp_c``.
+
+    ``side="left"`` puts a temperature exactly ON a boundary in the
+    cooler segment (85.0 °C refreshes at 1×; 85.0 + ε at 2×) — the same
+    strict inequality as :func:`repro.core.charge.window_factor`."""
+    t = jnp.asarray(temp_c, jnp.float32)
+    idx = jnp.searchsorted(
+        jnp.asarray(policy.boundaries, jnp.float32), t, side="left"
+    )
+    return jnp.asarray(policy.multipliers, jnp.float32)[idx]
+
+
+def occupancy_at(policy: RefreshPolicy, temp_c: Array | float) -> Array:
+    """Refresh occupancy (fraction of time lost to REFRESH) at raw
+    temperature(s): monotone non-decreasing in temperature by the
+    policy's staircase invariant."""
+    return multiplier_at(policy, temp_c) * (
+        policy.trfc_ns / policy.trefi_base_ns
+    )
+
+
+class BinRefresh(NamedTuple):
+    """Per-effective-bin refresh load for one controller bin grid
+    (hashable — tuples of floats — so the perfmodel's cached sharded
+    finalize runners can key on it and jit can treat it as static).
+
+    ``occupancy[b]`` is the refresh occupancy a DIMM pays while its
+    selected effective bin is ``b``; the last entry is the beyond-last-bin
+    JEDEC sentinel. ``trfc_ns`` rides along for the expected-blocking
+    latency term (an arrival landing in an in-flight REFRESH waits
+    tRFC/2 on average)."""
+
+    occupancy: Tuple[float, ...]  # (n_bins + 1,)
+    trfc_ns: float
+
+
+def bin_multipliers(
+    policy: RefreshPolicy, temp_bins: Sequence[float]
+) -> Tuple[float, ...]:
+    """Refresh-rate multiplier per EFFECTIVE bin (length ``n_bins + 1``).
+
+    A profiled bin covers temperatures up to its upper edge, so it
+    carries the multiplier AT that edge. The JEDEC sentinel covers the
+    unbounded range ABOVE the last edge, so it carries the policy's last
+    (maximum) multiplier — conservative by construction: no temperature a
+    bin can be selected for refreshes faster than the bin's multiplier
+    says, which is what lets the per-step raw temperature drop out of the
+    partials entirely (see the module docstring's exactness note)."""
+    edges = tuple(float(t) for t in temp_bins)
+    if edges != tuple(sorted(edges)):
+        raise ValueError(f"temp_bins must be sorted: {edges}")
+    at_edges = np.asarray(
+        multiplier_at(policy, np.asarray(edges, np.float32))
+    )
+    return tuple(float(m) for m in at_edges) + (float(policy.multipliers[-1]),)
+
+
+def bin_refresh(
+    policy: RefreshPolicy, temp_bins: Sequence[float]
+) -> BinRefresh:
+    """The :class:`BinRefresh` load of a bin grid under ``policy`` — the
+    object the ``refresh=`` parameter of the
+    :func:`repro.core.perfmodel.trace_score` family consumes."""
+    occ = policy.trfc_ns / policy.trefi_base_ns
+    return BinRefresh(
+        occupancy=tuple(m * occ for m in bin_multipliers(policy, temp_bins)),
+        trfc_ns=policy.trfc_ns,
+    )

@@ -262,10 +262,14 @@ class StreamResult(NamedTuple):
         — bit-identical to scoring the materialized replay. ``mesh``
         defaults to the stream's own mesh (pass ``mesh=None`` explicitly
         via :func:`~repro.core.perfmodel.trace_score_finalize` to force a
-        single-device finalize)."""
+        single-device finalize). A table carrying a refresh policy scores
+        the combined latency+refresh figures too — the partials are
+        refresh-agnostic (occupancy is a function of the selected bin),
+        so refresh enters at this finalize only."""
         return trace_score_finalize(
             self.partials, self.table.stack, cfg, claim, workloads,
             mesh=self.mesh if mesh is None else mesh,
+            refresh=self.table.bin_refresh(),
         )
 
 
@@ -483,10 +487,12 @@ class StreamingController:
         workloads=WORKLOADS,
     ):
         """The running :func:`trace_score` dict over everything ingested so
-        far — bit-identical to materializing and scoring the same steps."""
+        far — bit-identical to materializing and scoring the same steps
+        (combined latency+refresh figures included when the table carries
+        a refresh policy)."""
         return trace_score_finalize(
             self._partials, self.table.stack, cfg, claim, workloads,
-            mesh=self.mesh,
+            mesh=self.mesh, refresh=self.table.bin_refresh(),
         )
 
     def result(self) -> StreamResult:

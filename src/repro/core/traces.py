@@ -19,6 +19,10 @@ hysteresis and error fuse exist for):
 * :func:`hvac_failure` — cooling loss: a sustained ramp far past the last
   profiled bin (deliberately violates both bounds; exercises the
   beyond-last-bin JEDEC sentinel).
+* :func:`refresh_storm` — a fleet fraction dwells just inside the
+  extended-temperature range (>85 °C): the regime where a
+  temperature-driven refresh policy doubles refresh occupancy on top of
+  the slower hot-bin timings.
 * :func:`vendor_skew` — per-vendor thermal offsets (heat-spreader and
   placement differences), the fleet-heterogeneity scenario.
 
@@ -185,6 +189,49 @@ def hvac_failure(
     return jnp.minimum(base + ramp, peak_c)
 
 
+def refresh_storm(
+    key: jax.Array,
+    n_dimms: int,
+    n_steps: int,
+    dt_s: float = DEFAULT_DT_S,
+    onset_frac: float = 0.25,
+    recover_frac: float = 0.75,
+    plateau_c: float = 88.0,
+    hot_frac: float = 0.5,
+    ramp_c_per_s: float = 0.05,
+    **diurnal_kw,
+) -> Array:
+    """Extended-temperature storm: a random ``hot_frac`` of the fleet ramps
+    past the 85 °C extended-temperature boundary, HOLDS a plateau there
+    (default 88 °C) between ``onset_frac`` and ``recover_frac`` of the
+    trace, then ramps back into the diurnal band; the rest of the fleet
+    never leaves it.
+
+    Unlike :func:`hvac_failure`'s one-way ramp to a 95 °C peak, the point
+    here is the *sustained dwell* just inside the extended range — the
+    regime where a temperature-driven refresh policy (2× above 85 °C,
+    :mod:`repro.core.refresh`) bites: storm DIMMs pay slower (hot-bin /
+    JEDEC-sentinel) timings AND doubled refresh occupancy for a large
+    fraction of the trace, while the cool half provides the contrast a
+    combined latency+refresh score should resolve. The default ramp
+    (0.05 °C/s) respects the paper's drift bound — a refresh storm needs
+    no thermal emergency, just a hot aisle."""
+    k_base, k_hot = jax.random.split(key)
+    base = diurnal(k_base, n_dimms, n_steps, dt_s, **diurnal_kw)
+    onset = int(onset_frac * n_steps)
+    recover = int(recover_frac * n_steps)
+    t = jnp.arange(n_steps, dtype=jnp.float32)[:, None]
+    rate = ramp_c_per_s * dt_s
+    rise = jnp.maximum(t - float(onset), 0.0) * rate
+    fall = jnp.maximum(t - float(recover), 0.0) * rate
+    # Excursion envelope: ramp up, saturate at the plateau, ramp back down
+    # (capping the rise at the per-step lift keeps the fall effective).
+    lift = jnp.maximum(plateau_c - base, 0.0)
+    env = jnp.clip(jnp.minimum(rise, lift) - fall, 0.0, None)
+    hot = jax.random.bernoulli(k_hot, hot_frac, (n_dimms,))
+    return base + env * hot[None, :].astype(jnp.float32)
+
+
 def vendor_skew(
     key: jax.Array,
     n_dimms: int,
@@ -212,6 +259,7 @@ SCENARIOS: Dict[str, Callable[..., Array]] = {
     "cold_start": cold_start,
     "load_bursts": load_bursts,
     "hvac_failure": hvac_failure,
+    "refresh_storm": refresh_storm,
     "vendor_skew": vendor_skew,
 }
 

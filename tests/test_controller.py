@@ -70,9 +70,10 @@ def test_json_schema_versioned():
     can keep old registers loadable (and unknown versions fail loudly)."""
     table = small_table()
     obj = json.loads(table.to_json())
-    assert obj["schema_version"] == TABLE_SCHEMA_VERSION == 3
+    assert obj["schema_version"] == TABLE_SCHEMA_VERSION == 4
     assert obj["params"] == list(PARAM_NAMES)
     assert obj["access_types"] == list(ACCESS_TYPES)
+    assert obj["refresh"] is None  # small_table carries no refresh policy
     bad = dict(obj, schema_version=99)
     with pytest.raises(ValueError, match="schema_version"):
         DimmTimingTable.from_json(json.dumps(bad))
@@ -117,6 +118,22 @@ def test_json_v2_legacy_format_loads():
     assert again.stack.shape == table.stack.shape
     for a in range(len(ACCESS_TYPES)):
         np.testing.assert_array_equal(again.stack[:, :, a], merged)
+
+
+def test_json_v3_legacy_format_loads():
+    """PR-3..8 persisted tables (per-access (N, B, 2, 4) stack, schema v3,
+    no refresh field) load bit-exact with no refresh policy attached."""
+    table = small_table()
+    v3 = json.dumps({
+        "schema_version": 3,
+        "params": list(PARAM_NAMES),
+        "access_types": list(ACCESS_TYPES),
+        "temp_bins": list(table.temp_bins),
+        "stack": table.stack.tolist(),
+    })
+    again = DimmTimingTable.from_json(v3)
+    assert again == table
+    assert again.refresh is None and again.bin_refresh() is None
 
 
 def test_table_is_array_backed():

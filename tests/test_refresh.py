@@ -1,0 +1,228 @@
+"""Refresh layer: temperature-driven refresh policy + combined scoring.
+
+Pins the tentpole contracts of the refresh subsystem
+(:mod:`repro.core.refresh` + the ``refresh=`` path through
+:mod:`repro.core.perfmodel`):
+
+* refresh occupancy is monotone non-decreasing in temperature (the
+  policy staircase invariant, and the boundary itself belongs to the
+  cooler side — 85.0 °C refreshes at 1×, matching
+  ``charge.window_factor``'s strict inequality);
+* the combined latency+refresh realized speedup never exceeds the
+  latency-only one (refresh lands the same absolute penalty on adapted
+  and JEDEC timings, diluting the relative gain);
+* streamed ≡ materialized scores stay BIT-EXACT with refresh enabled at
+  every chunking {1, ragged, n_steps} — refresh enters at finalize only
+  (occupancy is a function of the selected bin), so the refresh-agnostic
+  partials carry everything;
+* same-mesh sharded scores with refresh are bitwise equal to streamed
+  same-mesh scores (shared compiled finalize programs);
+* schema-v4 tables persist the policy (roundtrip ==), pre-v4 files load
+  with none — and a policy-less table scores exactly as before (no
+  refresh keys).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import charge, controller, fleet, perfmodel, shard, stream, traces
+from repro.core import refresh as rf
+
+TEMPS = (45.0, 55.0, 85.0)
+N_DIMMS = 6
+N_STEPS = 72
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh():
+    return shard.fleet_mesh()
+
+
+@functools.lru_cache(maxsize=None)
+def _table():
+    fl = fleet.synthesize(jax.random.PRNGKey(0), N_DIMMS)
+    res = fleet.sweep(fl, TEMPS, (1.0,))
+    return controller.DimmTimingTable.from_fleet(res, refresh=rf.DDR3_EXTENDED)
+
+
+@functools.lru_cache(maxsize=None)
+def _trace():
+    # refresh_storm: half the fleet dwells past 85 °C — the scenario the
+    # refresh layer exists for.
+    return np.asarray(
+        traces.generate("refresh_storm", jax.random.PRNGKey(1), N_DIMMS, N_STEPS)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _materialized():
+    table = _table()
+    res = controller.replay(table, _trace())
+    return res, perfmodel.trace_score(
+        table.stack, res, refresh=table.bin_refresh()
+    )
+
+
+# ---------------------------------------------------------------------------
+# Policy: monotonicity + boundary semantics
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", [rf.DDR3_EXTENDED, rf.DDR3_EXTENDED_4X])
+def test_occupancy_monotone_in_temperature(policy):
+    temps = jnp.linspace(20.0, 110.0, 181)
+    occ = np.asarray(rf.occupancy_at(policy, temps))
+    assert (np.diff(occ) >= 0.0).all()
+    assert occ.min() == pytest.approx(policy.occupancy_of(1.0))
+    assert occ.max() == pytest.approx(policy.occupancy_of(policy.multipliers[-1]))
+
+
+def test_boundary_belongs_to_cooler_side():
+    """85.0 °C refreshes at 1× and retains over the full 64 ms window;
+    85 °C + ε doubles both — the refresh and retention staircases share
+    one strict inequality."""
+    assert float(rf.multiplier_at(rf.DDR3_EXTENDED, 85.0)) == 1.0
+    assert float(rf.multiplier_at(rf.DDR3_EXTENDED, 85.001)) == 2.0
+    assert float(charge.window_factor(85.0)) == 1.0
+    assert float(charge.window_factor(85.001)) == 0.5
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="multipliers"):
+        rf.RefreshPolicy(boundaries=(85.0,), multipliers=(1.0,))
+    with pytest.raises(ValueError, match="sorted"):
+        rf.RefreshPolicy(boundaries=(95.0, 85.0), multipliers=(1.0, 2.0, 4.0))
+    with pytest.raises(ValueError, match="non-decreasing"):
+        rf.RefreshPolicy(boundaries=(85.0,), multipliers=(2.0, 1.0))
+    with pytest.raises(ValueError, match="100%"):
+        rf.RefreshPolicy(multipliers=(1.0, 64.0))
+
+
+def test_bin_multipliers_sentinel_is_staircase_max():
+    """The JEDEC sentinel covers the unbounded beyond-last-bin range, so
+    it must carry the policy's MAX multiplier even when the bin grid tops
+    out below a policy boundary (a 90 °C DIMM on a 75 °C-topped grid
+    still refreshes at 2×)."""
+    assert rf.bin_multipliers(rf.DDR3_EXTENDED, (45.0, 75.0)) == (1.0, 1.0, 2.0)
+    assert rf.bin_multipliers(rf.DDR3_EXTENDED_4X, (45.0, 90.0)) == (
+        1.0, 2.0, 4.0
+    )
+    br = rf.bin_refresh(rf.DDR3_EXTENDED, controller.DEFAULT_TEMP_BINS)
+    assert len(br.occupancy) == len(controller.DEFAULT_TEMP_BINS) + 1
+    assert br.occupancy[-1] == pytest.approx(2.0 * 260.0 / rf.TREFI_BASE_NS)
+    # Hashable: valid jit static / lru_cache key.
+    hash(br), hash(rf.DDR3_EXTENDED)
+
+
+# ---------------------------------------------------------------------------
+# Combined vs latency-only
+# ---------------------------------------------------------------------------
+def test_combined_speedup_never_exceeds_latency_only():
+    _, score = _materialized()
+    assert score["speedup_combined_mean"] <= score["speedup_realized_mean"] + 1e-9
+    assert (
+        score["speedup_combined_intensive_mean"]
+        <= score["speedup_realized_intensive_mean"] + 1e-9
+    )
+    assert score["speedup_combined_min"] <= score["speedup_realized_min"] + 1e-9
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.floats(0.0, 0.13))
+def test_fleet_speedup_diluted_by_any_occupancy(occ):
+    """Per-entry: paying the same refresh occupancy on both sides of the
+    ratio can only dilute the adapted-timing gain."""
+    from repro.core.timing import JEDEC_DDR3_1600
+
+    fast = jnp.asarray(
+        [list(JEDEC_DDR3_1600.reduced(perfmodel.DEPLOYED_REDUCTIONS_55C))],
+        jnp.float32,
+    )
+    rows = jnp.stack([fast, fast], axis=-2)  # (1, 2, 4)
+    sp0 = float(perfmodel.fleet_speedups(rows, split=True)[0])
+    spc = float(perfmodel.fleet_speedups(
+        rows, split=True, refresh_occ=jnp.full((1,), occ), trfc_ns=rf.TRFC_NS,
+    )[0])
+    assert spc <= sp0 + 1e-9
+
+
+def test_storm_pays_slower_timings_and_higher_occupancy():
+    """The acceptance shape: in a refresh storm, hot DIMMs select the
+    JEDEC sentinel (slower timings) AND the fleet's time-weighted refresh
+    occupancy rises above the 1× floor — both penalties at once."""
+    _, score = _materialized()
+    base_occ = rf.DDR3_EXTENDED.occupancy_of(1.0)
+    assert score["time_at_jedec_frac"] > 0.0
+    assert score["refresh_occupancy_mean"] > base_occ + 1e-6
+    assert score["refresh_occupancy_mean"] < rf.DDR3_EXTENDED.occupancy_of(2.0)
+    # Cool-fleet control: a diurnal trace never crosses 85 °C, so its
+    # occupancy sits exactly at the 1× floor and combined ≈ latency-only.
+    table = _table()
+    cool = traces.generate("diurnal", jax.random.PRNGKey(2), N_DIMMS, N_STEPS)
+    res = controller.replay(table, cool)
+    s = perfmodel.trace_score(table.stack, res, refresh=table.bin_refresh())
+    assert s["refresh_occupancy_mean"] == pytest.approx(base_occ)
+    assert s["speedup_combined_mean"] <= s["speedup_realized_mean"] + 1e-9
+
+
+def test_policyless_table_scores_without_refresh_keys():
+    table = _table()
+    bare = controller.DimmTimingTable(table.temp_bins, table.stack)
+    res = controller.replay(bare, _trace())
+    score = perfmodel.trace_score(bare.stack, res, refresh=bare.bin_refresh())
+    assert not any("combined" in k or "refresh" in k for k in score)
+
+
+# ---------------------------------------------------------------------------
+# Streaming / sharding exactness with refresh enabled
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("chunk_steps", [1, 17, N_STEPS])
+def test_streamed_bit_exact_with_refresh(chunk_steps):
+    """Chunk = 1 (degenerate), 17 (ragged last chunk), n_steps (one shot):
+    the streamed score dict — refresh keys included — equals the
+    materialized one with exact float equality."""
+    table = _table()
+    _, score_ref = _materialized()
+    res = stream.replay_stream(table, _trace(), chunk_steps=chunk_steps)
+    assert res.score() == score_ref
+
+
+def test_streamed_mesh_bitwise_with_refresh():
+    """Same-mesh streamed and materialized sharded scores share compiled
+    accumulate/finalize programs → bitwise equal, refresh keys included;
+    vs the single-device score only psum summation-order noise."""
+    table = _table()
+    sref = controller.replay(table, _trace(), mesh=_mesh())
+    score_sharded = perfmodel.trace_score(
+        table.stack, sref, mesh=_mesh(), refresh=table.bin_refresh()
+    )
+    res = stream.replay_stream(table, _trace(), chunk_steps=17, mesh=_mesh())
+    assert res.score() == score_sharded
+    _, score_single = _materialized()
+    assert set(score_sharded) == set(score_single)
+    for k in score_single:
+        assert np.isclose(score_sharded[k], score_single[k],
+                          rtol=1e-5, atol=1e-6), k
+
+
+# ---------------------------------------------------------------------------
+# Persistence
+# ---------------------------------------------------------------------------
+def test_v4_roundtrip_carries_policy():
+    table = _table()
+    again = controller.DimmTimingTable.from_json(table.to_json())
+    assert again == table
+    assert again.refresh == rf.DDR3_EXTENDED
+    assert again.bin_refresh() == table.bin_refresh()
+    # A different policy breaks equality even with identical stacks.
+    other = controller.DimmTimingTable(
+        table.temp_bins, table.stack, refresh=rf.DDR3_EXTENDED_4X
+    )
+    assert other != table
+    with pytest.raises(TypeError, match="RefreshPolicy"):
+        controller.DimmTimingTable(
+            table.temp_bins, table.stack, refresh={"boundaries": (85.0,)}
+        )
