@@ -60,6 +60,7 @@ def run(
     seed: int = 0,
     verbose: bool = True,
     sharded: bool = False,
+    regions: int = 0,
 ):
     key = jax.random.PRNGKey(seed)
     fl = fleet.synthesize(key, n_dimms)
@@ -149,6 +150,68 @@ def run(
              1.0 if shard_err == 0.0 else 0.0, "==1"),
         ]
 
+    # -- region section: the (DIMM x temp x pattern x region) grid ---------
+    # The sweep raised by one rank (distance-from-sense-amp classes).
+    # Two hard gates ride along: the Pallas region sweep must be bit-exact
+    # vs the ref region sweep (the region axis tiles through the same
+    # kernel), and the anchor region (index R-1, region_factor exactly
+    # 1.0) must reproduce the region-free sweep bitwise — the contract
+    # that makes n_regions=1 invisible end to end. The throughput rows
+    # are the BENCH_region_sweep artifact: grid points per second as the
+    # region axis multiplies the work.
+    region_rows = []
+    if regions:
+        rres = fleet.sweep_regions(fl, temps_c, patterns,
+                                   n_regions=regions, impl="ref")
+        jax.block_until_ready(rres.read)
+        t0 = time.perf_counter()
+        rres = fleet.sweep_regions(fl, temps_c, patterns,
+                                   n_regions=regions, impl="ref")
+        jax.block_until_ready(rres.read)
+        t_region = time.perf_counter() - t0
+
+        krres = fleet.sweep_regions(fl, temps_c, patterns, n_regions=regions)
+        jax.block_until_ready(krres.read)
+        t0 = time.perf_counter()
+        krres = fleet.sweep_regions(fl, temps_c, patterns, n_regions=regions)
+        jax.block_until_ready(krres.read)
+        t_region_kernel = time.perf_counter() - t0
+
+        region_kernel_err = max(
+            float(np.abs(np.asarray(krres.read) - np.asarray(rres.read)).max()),
+            float(np.abs(np.asarray(krres.write) - np.asarray(rres.write)).max()),
+        )
+        if region_kernel_err != 0.0:  # parity gate: CI goes red, not logs
+            raise AssertionError(
+                f"region sweep kernel diverged from the ref region sweep: "
+                f"max|err| = {region_kernel_err} ns"
+            )
+        anchor_err = max(
+            float(np.abs(np.asarray(rres.read[:, :, -1]) - np.asarray(res.read)).max()),
+            float(np.abs(np.asarray(rres.write[:, :, -1]) - np.asarray(res.write)).max()),
+        )
+        if anchor_err != 0.0:  # anchor contract gate
+            raise AssertionError(
+                f"anchor region diverged from the region-free sweep: "
+                f"max|err| = {anchor_err} ns (region_factor(1.0) must be 1)"
+            )
+        region_points = grid_points * regions
+        region_rows = [
+            ("fleet/region_n_regions", float(regions), ""),
+            ("fleet/region_grid_points", float(region_points), ""),
+            ("fleet/region_sweep_seconds", t_region, ""),
+            ("fleet/region_points_per_second", region_points / t_region, ""),
+            ("fleet/region_vs_base_time_ratio", t_region / t_fleet,
+             f"~{regions}x the work; <{regions} = the rank-raise amortizes"),
+            ("fleet/region_kernel_sweep_seconds", t_region_kernel,
+             "interpret mode" if charge_sweep.default_interpret()
+             else "compiled"),
+            ("fleet/region_kernel_parity_exact",
+             1.0 if region_kernel_err == 0.0 else 0.0, "==1"),
+            ("fleet/region_anchor_exact",
+             1.0 if anchor_err == 0.0 else 0.0, "==1"),
+        ]
+
     interp = charge_sweep.default_interpret()
     rows = [
         ("fleet/n_dimms", float(n_dimms), ""),
@@ -166,6 +229,7 @@ def run(
         ("fleet/kernel_max_abs_error_vs_ref_ns", kernel_err, "==0"),
         ("fleet/kernel_parity_exact", 1.0 if kernel_err == 0.0 else 0.0, "==1"),
     ]
+    rows.extend(region_rows)
     rows.extend(shard_rows)
 
     summary = res.summary()
@@ -200,6 +264,12 @@ def run(
         print(f"# charge-sweep kernel ({'interpret' if interp else 'compiled'}): "
               f"{t_kernel*1e3:.1f} ms, {t_kernel/t_fleet:.1f}x ref wall-clock, "
               f"max |kernel - ref| = {kernel_err:.2e} ns (bit-exact gate)")
+        if region_rows:
+            print(f"# region sweep ({regions} regions): "
+                  f"{region_rows[2][1]*1e3:.1f} ms ref for "
+                  f"{region_rows[1][1]:.0f} grid points "
+                  f"({region_rows[4][1]:.2f}x base sweep), kernel parity + "
+                  f"anchor bit-exact")
         if shard_rows:
             print(f"# sharded sweep ({shard_rows[0][1]:.0f} devices): "
                   f"{shard_rows[1][1]*1e3:.1f} ms, "
@@ -234,11 +304,21 @@ def main() -> None:
                          "shard_map-ped over all visible devices, gated "
                          "bit-exact vs single-device (on CPU this forces "
                          "8 host devices unless XLA_FLAGS pins a count)")
+    ap.add_argument("--regions", type=int, default=0,
+                    help="add the fleet/region_* section: the sweep over "
+                         "this many distance-from-sense-amp classes per "
+                         "DIMM, gated bit-exact kernel-vs-ref and "
+                         "anchor-vs-region-free (0 disables)")
     ap.add_argument("--json", type=str, default=None,
                     help="also write rows to this JSON artifact path")
+    ap.add_argument("--bench-json", type=str, default=None,
+                    help="write the fleet/region_* throughput rows to this "
+                         "path (BENCH_region_sweep.json); requires --regions")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.bench_json and not args.regions:
+        ap.error("--bench-json records the region sweep; add --regions N")
     if args.tiny:
         conflicts = [name for name, val in (
             ("--n-dimms", args.n_dimms), ("--temps", args.temps),
@@ -250,7 +330,8 @@ def main() -> None:
         if conflicts:
             ap.error(f"--tiny fixes the configuration; remove {', '.join(conflicts)}")
         rows = run(n_dimms=48, temps_c=(45.0, 55.0, 85.0), patterns=(1.0,),
-                   baseline_dimms=8, seed=args.seed, sharded=args.sharded)
+                   baseline_dimms=8, seed=args.seed, sharded=args.sharded,
+                   regions=args.regions)
     else:
         n_dimms = 1152 if args.n_dimms is None else args.n_dimms
         if n_dimms < 1:
@@ -269,12 +350,20 @@ def main() -> None:
             full_baseline=args.full_baseline,
             seed=args.seed,
             sharded=args.sharded,
+            regions=args.regions,
         )
     for name, value, ref in rows:
         print(f"{name},{value:.6g},{ref}")
+    meta = {"tiny": args.tiny, "seed": args.seed, "regions": args.regions}
     if args.json:
-        write_rows_json(args.json, "fleet_sweep", rows,
-                        meta={"tiny": args.tiny, "seed": args.seed})
+        write_rows_json(args.json, "fleet_sweep", rows, meta=meta)
+    if args.bench_json:
+        # The BENCH artifact: just the region-axis sweep throughput and
+        # parity rows, so the rank-raised sweep's cost trajectory is
+        # machine-readable across PRs.
+        write_rows_json(args.bench_json, "fleet_sweep",
+                        [r for r in rows if r[0].startswith("fleet/region_")],
+                        meta=meta)
 
 
 if __name__ == "__main__":

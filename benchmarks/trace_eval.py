@@ -38,6 +38,17 @@ speedup floor plus a pinned time-weighted refresh occupancy, so the
 ``--bench-json`` persists the refresh-on vs refresh-off speedup rows as
 ``BENCH_trace_eval.json`` for the CI artifact trail.
 
+Regions: scenarios with a paired region-access mix (``design_skew``,
+``hot_bank`` — see ``traces.SCENARIO_REGION_PROFILES``) additionally
+profile ``--regions`` distance-from-sense-amp classes (default 4) and
+score the SAME replay's bin history both ways: each access at ITS
+region's registers (aware) vs everything at the max-over-regions set
+(oblivious). ``--tiny --scenario design_skew`` is gated against its own
+committed baseline (``trace_eval_design_skew_tiny.json``): a floor on
+the region-aware intensive speedup plus the strict aware > oblivious
+assertion, with the anchor contract (region table's oblivious set
+bitwise-equal to the region-free profile) checked on every region run.
+
 ``--sharded`` adds the mesh section (``trace/sharded_*`` rows): the same
 replay shard_map-ped over a 1-D DIMM mesh spanning every visible device
 (hard-gated bit-exact vs the single-device scan) plus the gather-free
@@ -77,6 +88,14 @@ TINY_BASELINE_PATH = pathlib.Path(__file__).parent / "baselines" / "trace_eval_t
 REFRESH_STORM_BASELINE_PATH = (
     pathlib.Path(__file__).parent / "baselines" / "trace_eval_refresh_storm_tiny.json"
 )
+#: Committed baseline for --tiny --scenario design_skew (region gate).
+DESIGN_SKEW_BASELINE_PATH = (
+    pathlib.Path(__file__).parent / "baselines" / "trace_eval_design_skew_tiny.json"
+)
+
+#: Regions profiled for the region-aware section (--regions; scenarios in
+#: traces.SCENARIO_REGION_PROFILES enable it by default).
+DEFAULT_N_REGIONS = 4
 
 #: --refresh choices -> table refresh policy.
 REFRESH_POLICIES = {
@@ -100,9 +119,13 @@ def run(
     regression_baseline: str | pathlib.Path | None = None,
     sharded: bool = False,
     refresh: str = "ddr3",
+    regions: int | None = None,
 ):
     key = jax.random.PRNGKey(seed)
     k_fleet, k_trace, k_err = jax.random.split(key, 3)
+    if regions is None:  # region scenarios carry a paired access mix
+        regions = (DEFAULT_N_REGIONS
+                   if scenario in traces.SCENARIO_REGION_PROFILES else 0)
 
     fl = fleet.synthesize(k_fleet, n_dimms)
     sweep = fleet.sweep(fl, temps_c=temp_bins, patterns=(1.0,))
@@ -211,6 +234,49 @@ def run(
             ("trace/sharded_score_max_rel_err", score_err, "<=1e-4"),
         ]
 
+    # -- region section: per-region registers vs the oblivious set ---------
+    # Profiles the SAME fleet with the region axis raised, then scores the
+    # SAME replay's bin history against the rank-5 registers under the
+    # scenario's paired region-access mix. The anchor property makes the
+    # region table's oblivious set bitwise the replay table's registers,
+    # so res.bin_idx is exactly the bin history a region-oblivious
+    # controller would realize — no second replay.
+    region_rows = []
+    region_score = None
+    if regions:
+        rsweep = fleet.sweep_regions(
+            fl, temps_c=temp_bins, patterns=(1.0,), n_regions=regions
+        )
+        rtable = rsweep.to_table()
+        if not np.array_equal(rtable.oblivious_stack(), table.stack):
+            raise AssertionError(
+                "region table's max-over-regions registers diverged from "
+                "the region-free profile — the anchor contract is broken"
+            )
+        profile = traces.SCENARIO_REGION_PROFILES.get(scenario, "uniform")
+        mix = traces.region_access_mix(
+            jax.random.fold_in(key, 4), n_steps, n_dimms, regions,
+            profile=profile,
+        )
+        region_score = perfmodel.region_trace_score(
+            rtable.region_stack(), res, mix
+        )
+        region_rows = [
+            ("trace/region_n_regions", float(regions), ""),
+            ("trace/region_mix_" + profile, 1.0, ""),
+            ("trace/nearest_region_access_frac",
+             region_score["nearest_region_access_frac"], ""),
+            ("trace/speedup_region_aware_intensive_mean",
+             region_score["speedup_region_aware_intensive_mean"],
+             "per-(DIMM,bin,region) lookup"),
+            ("trace/speedup_region_oblivious_intensive_mean",
+             region_score["speedup_region_oblivious_intensive_mean"],
+             "max-over-regions registers"),
+            ("trace/region_aware_advantage_intensive",
+             region_score["region_aware_advantage_intensive"],
+             "> 0 on skewed mixes"),
+        ]
+
     rows = [
         ("trace/scenario_" + scenario, 1.0, ""),
         ("trace/n_dimms", float(n_dimms), ""),
@@ -261,6 +327,7 @@ def run(
              score["speedup_realized_intensive_mean"]
              - score["speedup_combined_intensive_mean"], ">= 0"),
         ])
+    rows.extend(region_rows)
     rows.extend(shard_rows)
 
     # -- regression gate vs the committed baseline -------------------------
@@ -308,6 +375,33 @@ def run(
                     f"vs pinned {base['refresh_occupancy_mean']:.5f} "
                     f"(+/- {occ_tol}, see {regression_baseline})"
                 )
+        if "speedup_region_aware_intensive_mean" in base:
+            # Region gate (design_skew tiny): the region-aware realized
+            # speedup may not regress, and it must sit STRICTLY above
+            # the region-oblivious figure — the whole point of carrying
+            # per-region registers on a near-skewed mix.
+            if region_score is None:
+                raise AssertionError(
+                    f"baseline {regression_baseline} gates region figures "
+                    "but the run was started with --regions 0"
+                )
+            floor_r = (base["speedup_region_aware_intensive_mean"]
+                       - base.get("tolerance", 0.005))
+            got_r = region_score["speedup_region_aware_intensive_mean"]
+            if got_r < floor_r:
+                raise AssertionError(
+                    f"region-aware intensive speedup regressed: {got_r:.4f}"
+                    f" < baseline "
+                    f"{base['speedup_region_aware_intensive_mean']:.4f} - "
+                    f"tolerance (see {regression_baseline})"
+                )
+            if not (region_score["speedup_region_aware_intensive_mean"]
+                    > region_score["speedup_region_oblivious_intensive_mean"]):
+                raise AssertionError(
+                    "region-aware realized speedup is not strictly above "
+                    "the region-oblivious figure on the "
+                    f"{scenario} mix — the region axis bought nothing"
+                )
         rows.append(("trace/regression_gate_pass", 1.0,
                      f">= {floor:.4f} intensive"))
 
@@ -336,6 +430,13 @@ def run(
                   f"combined +{score['speedup_combined_mean']*100:.1f}% all, "
                   f"+{score['speedup_combined_intensive_mean']*100:.1f}% "
                   f"mem-intensive")
+        if region_score is not None:
+            print(f"# regions ({regions}): aware "
+                  f"+{region_score['speedup_region_aware_intensive_mean']*100:.1f}% "
+                  f"vs oblivious "
+                  f"+{region_score['speedup_region_oblivious_intensive_mean']*100:.1f}% "
+                  f"mem-intensive (advantage "
+                  f"+{region_score['region_aware_advantage_intensive']*100:.2f} pp)")
     return rows
 
 
@@ -368,6 +469,12 @@ def main() -> None:
                     help="refresh policy the table carries (default ddr3: "
                          "1x/2x extended-temperature; ddr3_4x adds a 4x "
                          "step; off scores latency only)")
+    ap.add_argument("--regions", type=int, default=None,
+                    help="profile this many distance-from-sense-amp "
+                         "regions and add the region-aware vs -oblivious "
+                         "rows (default: 4 for scenarios with a paired "
+                         "region mix — design_skew, hot_bank — else off; "
+                         "0 disables)")
     ap.add_argument("--regression-baseline", type=str, default=None,
                     help="baseline JSON for the realized-speedup gate "
                          "(default: the committed tiny baseline when --tiny, "
@@ -395,11 +502,14 @@ def main() -> None:
             elif args.scenario == "refresh_storm" and args.refresh != "off" \
                     and REFRESH_STORM_BASELINE_PATH.exists():
                 gate = REFRESH_STORM_BASELINE_PATH
+            elif args.scenario == "design_skew" and args.regions != 0 \
+                    and DESIGN_SKEW_BASELINE_PATH.exists():
+                gate = DESIGN_SKEW_BASELINE_PATH
         rows = run(n_dimms=64, n_steps=512, scenario=args.scenario,
                    dt_s=args.dt_s, error_rate=args.error_rate,
                    baseline_dimms=8, baseline_steps=128, seed=args.seed,
                    regression_baseline=gate, sharded=args.sharded,
-                   refresh=args.refresh)
+                   refresh=args.refresh, regions=args.regions)
     else:
         rows = run(
             n_dimms=1000 if args.n_dimms is None else args.n_dimms,
@@ -413,6 +523,7 @@ def main() -> None:
             regression_baseline=args.regression_baseline,
             sharded=args.sharded,
             refresh=args.refresh,
+            regions=args.regions,
         )
     for name, value, ref in rows:
         print(f"{name},{value:.6g},{ref}")

@@ -148,6 +148,14 @@ class ChargeModelConstants:
     wm_gain_rcd: float = 2.186
     wm_temp: float = 1.26
     wm_gain_rp: float = 2.709
+    # Per-region (design-induced) variation span: cells near the sense
+    # amplifiers see shorter bitlines/wordlines, so the peripheral RC
+    # multiplier of the NEAREST region is (1 - region_span) x that of the
+    # farthest. The farthest region is the anchor (factor exactly 1.0) —
+    # it IS the per-DIMM worst-case profile every pre-region table was
+    # built from, which is what keeps n_regions=1 bitwise-identical to
+    # the region-free pipeline.
+    region_span: float = 0.25
 
     # ---- derived anchors (worst case at 85 °C == JEDEC, by construction) --
     @property
@@ -187,6 +195,7 @@ class ChargeModelConstants:
         )
 
     def validate(self) -> None:
+        assert 0.0 <= self.region_span < 1.0
         assert 0.0 < self.ret85 < 1.0
         assert 0.0 < self.c_min < 1.0 and self.r_max > 1.0
         assert self.v_restore_start < self.v_full < self.v_overdrive
@@ -271,6 +280,52 @@ def apply_pattern(cell: CellParams, pattern: Array | float) -> CellParams:
     capacitance (coupling noise eats into dv0). ``pattern`` may be a tracer,
     so the fleet engine can vmap over a pattern axis."""
     return CellParams(r=cell.r, c=cell.c * pattern, leak=cell.leak)
+
+
+# ---------------------------------------------------------------------------
+# Per-region (design-induced) variation
+# ---------------------------------------------------------------------------
+def region_fracs(n_regions: int) -> Array:
+    """Normalized distance-from-sense-amp of each region, ``(R,)`` float32.
+
+    Region index 0 is the NEAREST class (shortest bitlines, fastest);
+    index R-1 is the FARTHEST — frac exactly 1.0, the anchor class whose
+    effective cell equals the per-DIMM worst-case profile. ``n_regions=1``
+    therefore degenerates to today's region-free model."""
+    if n_regions < 1:
+        raise ValueError(f"n_regions must be >= 1, got {n_regions}")
+    return (jnp.arange(1, n_regions + 1, dtype=jnp.float32)
+            / jnp.float32(n_regions))
+
+
+def region_factor(
+    region_frac: Array | float,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> Array:
+    """Peripheral-RC multiplier of a region at normalized distance
+    ``region_frac`` ∈ (0, 1]: linear in distance (Lee et al.,
+    design-induced latency variation), exactly 1.0 at frac = 1.0."""
+    f = jnp.asarray(region_frac, jnp.float32)
+    return 1.0 - consts.region_span * (1.0 - f)
+
+
+def apply_region(
+    cell: CellParams,
+    region_frac: Array | float,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+) -> CellParams:
+    """Fold a region's distance class into the effective cell parameters.
+
+    Distance from the sense amplifiers is a *peripheral* channel (bitline/
+    wordline RC), so it scales ``r`` — the same channel per-DIMM variation
+    flows through — leaving cell capacitance and leakage untouched. Every
+    min-safe timing is monotone non-decreasing in ``r``, hence monotone
+    non-decreasing in region index at fixed (temperature, pattern).
+    ``region_frac`` may be a tracer, so the fleet engine can vmap the same
+    functions over a region axis exactly like the pattern axis."""
+    return CellParams(
+        r=cell.r * region_factor(region_frac, consts), c=cell.c, leak=cell.leak
+    )
 
 
 # ---------------------------------------------------------------------------

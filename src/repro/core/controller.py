@@ -16,14 +16,18 @@ struct-of-arrays form:
 
 * :class:`DimmTimingTable` — the controller's timing registers: one
   ``(n_dimms, n_bins, 2, 4)`` timing stack (access-type axis ordered as
-  :data:`repro.core.timing.ACCESS_TYPES` = read, write) plus the bin
+  :data:`repro.core.timing.ACCESS_TYPES` = read, write) — or, for
+  region-profiled DIMMs (design-induced variation), a rank-5
+  ``(n_dimms, n_bins, n_regions, 2, 4)`` stack whose region axis orders
+  distance-from-sense-amp classes nearest → farthest — plus the bin
   edges and an optional temperature-driven
   :class:`repro.core.refresh.RefreshPolicy` (so bin selection sees the
   refresh cost of running hot, not just the slower timings), built
-  directly from a :class:`repro.core.fleet.SweepResult` (no per-DIMM
-  Python object plumbing) and persisted with a schema version (v4;
-  v1–v3 files still load — v1/v2 merged sets duplicated into both
-  slots, pre-v4 refresh policy absent).
+  directly from a :class:`repro.core.fleet.SweepResult` or
+  :class:`repro.core.fleet.RegionSweepResult` (no per-DIMM Python
+  object plumbing) and persisted with a schema version (v5; v1–v4
+  files still load — v1/v2 merged sets duplicated into both slots,
+  pre-v4 refresh policy absent, pre-v5 region axis broadcast).
 * The **pure state machine**: controller state is a
   :class:`ControllerState` pytree (``bin_idx`` / ``cool_streak`` /
   ``fused`` arrays over the DIMM axis) advanced by :func:`step` — one
@@ -97,10 +101,15 @@ HYSTERESIS_STEPS: int = 3
 #: per-DIMM lists of timing dicts; v2 stored a single merged
 #: ``(n_dimms, n_bins, 4)`` stack; v3 stores the per-access-type
 #: ``(n_dimms, n_bins, 2, 4)`` stack; v4 adds the optional temperature
-#: → refresh-rate policy (``"refresh"``, nullable). ``from_json`` loads
-#: all four — v1/v2 merged sets are duplicated into both access slots on
-#: load, and pre-v4 files load with no refresh policy.
-TABLE_SCHEMA_VERSION: int = 4
+#: → refresh-rate policy (``"refresh"``, nullable); v5 adds the region
+#: axis — ``"stack"`` is always region-explicit ``(n_dimms, n_bins,
+#: n_regions, 2, 4)`` with an ``"n_regions"`` field. ``from_json`` loads
+#: all five — v1/v2 merged sets are duplicated into both access slots,
+#: pre-v4 files load with no refresh policy, and pre-v5 files (plus v5
+#: files with ``n_regions == 1``) load REGION-BROADCAST: the in-memory
+#: stack is the canonical rank-4 form, bitwise equal to a v1–v4 load of
+#: the same timings.
+TABLE_SCHEMA_VERSION: int = 5
 
 _JEDEC_ROW = np.asarray(
     [getattr(JEDEC_DDR3_1600, p) for p in PARAM_NAMES], np.float32
@@ -120,6 +129,18 @@ class DimmTimingTable:
     ``PARAM_NAMES``). Temperatures above the last bin edge select JEDEC
     for both access types — the beyond-last sentinel rows, not stored.
 
+    Region-profiled tables (schema v5) carry a rank-5 ``(n_dimms,
+    n_bins, n_regions, 2, 4)`` stack instead: ``stack[dimm, bin,
+    region]`` is that distance-from-sense-amp class's own profiled
+    ``(2, 4)`` block, ordered nearest (fastest) → farthest (slowest,
+    the per-DIMM worst case). The rank-4 form is CANONICAL for
+    ``n_regions == 1``: a one-region rank-5 stack is squeezed at
+    construction, so a v5 file with ``n_regions == 1`` loads bitwise
+    equal to the same timings persisted as v1–v4. Consumers that need a
+    single per-(DIMM, bin) register view of a region table use
+    :meth:`oblivious_stack` (max over regions — safe for every region);
+    region-resolved lookups go through :meth:`region_stack`.
+
     A negative entry is the profiler's *untested* sentinel and is refused
     at construction: a table must never program a timing that was not
     actually validated (the guard that makes the old silent
@@ -132,7 +153,9 @@ class DimmTimingTable:
     the pre-v4 default) score latency-only."""
 
     temp_bins: Tuple[float, ...]
-    #: (n_dimms, n_bins, 2, 4) float32 ns
+    #: (n_dimms, n_bins, 2, 4) float32 ns — or (n_dimms, n_bins,
+    #: n_regions, 2, 4) for region-profiled tables (n_regions >= 2; a
+    #: one-region rank-5 stack is squeezed to the canonical rank-4 form).
     stack: np.ndarray
     refresh: Optional[RefreshPolicy] = None
 
@@ -143,15 +166,25 @@ class DimmTimingTable:
                 f"{type(self.refresh).__name__}"
             )
         self.stack = np.asarray(self.stack, np.float32)
-        if self.stack.ndim != 4 or self.stack.shape[1:] != (
-            len(self.temp_bins),
-            len(ACCESS_TYPES),
-            len(PARAM_NAMES),
-        ):
+        if self.stack.ndim == 5 and self.stack.shape[2] == 1:
+            # Canonical form: one region IS the region-free table.
+            self.stack = self.stack[:, :, 0]
+        tail = (len(ACCESS_TYPES), len(PARAM_NAMES))
+        ok = (
+            self.stack.ndim == 4
+            and self.stack.shape[1:] == (len(self.temp_bins),) + tail
+        ) or (
+            self.stack.ndim == 5
+            and self.stack.shape[1:2] == (len(self.temp_bins),)
+            and self.stack.shape[2] >= 2
+            and self.stack.shape[3:] == tail
+        )
+        if not ok:
             raise ValueError(
                 f"stack shape {self.stack.shape} does not match "
-                f"{len(self.temp_bins)} bins × {len(ACCESS_TYPES)} access "
-                f"types × {len(PARAM_NAMES)} params"
+                f"{len(self.temp_bins)} bins × [n_regions ×] "
+                f"{len(ACCESS_TYPES)} access types × {len(PARAM_NAMES)} "
+                f"params"
             )
         if bool((self.stack < 0.0).any()):
             raise ValueError(
@@ -167,6 +200,29 @@ class DimmTimingTable:
     @property
     def n_bins(self) -> int:
         return len(self.temp_bins)
+
+    @property
+    def n_regions(self) -> int:
+        """Distance-from-sense-amp classes per DIMM (1 for rank-4 tables)."""
+        return int(self.stack.shape[2]) if self.stack.ndim == 5 else 1
+
+    def region_stack(self) -> np.ndarray:
+        """Region-explicit ``(n_dimms, n_bins, n_regions, 2, 4)`` view —
+        rank-4 tables gain a length-1 region axis (no copy)."""
+        if self.stack.ndim == 5:
+            return self.stack
+        return self.stack[:, :, None]
+
+    def oblivious_stack(self) -> np.ndarray:
+        """Region-OBLIVIOUS ``(n_dimms, n_bins, 2, 4)`` registers: the max
+        over regions per (bin, access, param) — the only single set safe
+        for every region, i.e. what a controller without region-resolved
+        scheduling must program. Identical to :attr:`stack` for rank-4
+        tables (each region's profiled minima are upper-bounded by the
+        farthest region, which anchors the region-free profile)."""
+        if self.stack.ndim == 5:
+            return self.stack.max(axis=2)
+        return self.stack
 
     def __eq__(self, other: object) -> bool:
         return (
@@ -193,6 +249,7 @@ class DimmTimingTable:
         window_s: float = charge.REFRESH_WINDOW_S,
         consts: ChargeModelConstants = DEFAULT_CONSTANTS,
         refresh: Optional[RefreshPolicy] = None,
+        n_regions: int = 1,
     ) -> "DimmTimingTable":
         """Boot-time profiling: minimal safe timings per DIMM per bin.
 
@@ -202,13 +259,22 @@ class DimmTimingTable:
         at its own profiled margin (the paper's per-access-type register
         sets), never the elementwise merge. ``refresh`` records the
         temperature-driven refresh policy the DIMMs run under (v4 tables;
-        scoring then reports combined latency+refresh figures)."""
+        scoring then reports combined latency+refresh figures).
+        ``n_regions > 1`` profiles each distance-from-sense-amp class
+        separately (one region-tiled sweep) and builds a rank-5 v5 table;
+        ``n_regions=1`` is the legacy region-free profile, bitwise."""
         from repro.core import fleet as fleet_mod
 
-        result = fleet_mod.sweep(
-            cells, temps_c=tuple(temp_bins), patterns=(1.0,),
-            window_s=window_s, consts=consts,
-        )
+        if n_regions == 1:
+            result = fleet_mod.sweep(
+                cells, temps_c=tuple(temp_bins), patterns=(1.0,),
+                window_s=window_s, consts=consts,
+            )
+        else:
+            result = fleet_mod.sweep_regions(
+                cells, temps_c=tuple(temp_bins), patterns=(1.0,),
+                n_regions=n_regions, window_s=window_s, consts=consts,
+            )
         return cls.from_fleet(result, temp_bins=temp_bins, refresh=refresh)
 
     @classmethod
@@ -222,7 +288,10 @@ class DimmTimingTable:
         straight from a :class:`repro.core.fleet.SweepResult` — no
         re-profiling, no Python list plumbing: the sweep's ``(T, N, 2, 4)``
         stacked sets are transposed into the controller's ``(N, T, 2, 4)``
-        registers in one device-to-host transfer.
+        registers in one device-to-host transfer. A
+        :class:`repro.core.fleet.RegionSweepResult` (rank-5 ``(T, R, N,
+        2, 4)`` stacked sets) lands the same way in ``(N, T, R, 2, 4)``
+        registers — a v5 region table (one region squeezes to rank-4).
 
         The sweep's temperature grid becomes the bin edges; each (bin,
         access) entry is that access type's profiled requirement at the
@@ -240,12 +309,12 @@ class DimmTimingTable:
                     f"{len(temp_bins)} temp_bins for a "
                     f"{result.read.shape[0]}-temperature sweep"
                 )
-        stacked = np.asarray(result.stacked_timings(), np.float32)  # (T,N,2,4)
-        return cls(
-            temp_bins=temp_bins,
-            stack=stacked.transpose(1, 0, 2, 3),
-            refresh=refresh,
-        )
+        stacked = np.asarray(result.stacked_timings(), np.float32)
+        if stacked.ndim == 5:  # region sweep: (T, R, N, 2, 4) → (N, T, R, 2, 4)
+            stack = stacked.transpose(2, 0, 1, 3, 4)
+        else:  # (T, N, 2, 4) → (N, T, 2, 4)
+            stack = stacked.transpose(1, 0, 2, 3)
+        return cls(temp_bins=temp_bins, stack=stack, refresh=refresh)
 
     @classmethod
     def from_sets(
@@ -268,12 +337,25 @@ class DimmTimingTable:
         return cls(temp_bins=tuple(float(t) for t in temp_bins), stack=stack)
 
     # -- access -----------------------------------------------------------
-    def row(self, dimm: int, bin_idx: int) -> AccessTimings:
+    def row(
+        self, dimm: int, bin_idx: int, region: Optional[int] = None
+    ) -> AccessTimings:
         """Read + write timing sets at ``(dimm, bin)``; the beyond-last
-        sentinel (``bin_idx >= n_bins``) is JEDEC for both access types."""
+        sentinel (``bin_idx >= n_bins``) is JEDEC for both access types.
+        ``region`` selects one distance class of a region table
+        (``region=None`` on a rank-5 table returns the region-oblivious
+        max — the set a region-unaware scheduler must program)."""
         if bin_idx >= self.n_bins:
             return JEDEC_ACCESS
-        block = self.stack[dimm, bin_idx]
+        if region is None:
+            block = self.oblivious_stack()[dimm, bin_idx]
+        else:
+            if not 0 <= region < self.n_regions:
+                raise IndexError(
+                    f"region {region} out of range for a "
+                    f"{self.n_regions}-region table"
+                )
+            block = self.region_stack()[dimm, bin_idx, region]
         return AccessTimings(
             read=TimingParams(*(float(v) for v in block[0])),
             write=TimingParams(*(float(v) for v in block[1])),
@@ -282,7 +364,8 @@ class DimmTimingTable:
     @property
     def sets(self) -> List[List[AccessTimings]]:
         """Nested-list view ``sets[dimm][bin]`` (compatibility shim for
-        per-DIMM consumers; the storage is :attr:`stack`)."""
+        per-DIMM consumers; the storage is :attr:`stack`). Region tables
+        present the region-oblivious view."""
         return [
             [
                 AccessTimings(
@@ -291,7 +374,7 @@ class DimmTimingTable:
                 )
                 for block in per_dimm
             ]
-            for per_dimm in self.stack
+            for per_dimm in self.oblivious_stack()
         ]
 
     def lookup(self, dimm: int, temp_c: float) -> AccessTimings:
@@ -315,7 +398,10 @@ class DimmTimingTable:
                 "params": list(PARAM_NAMES),
                 "access_types": list(ACCESS_TYPES),
                 "temp_bins": list(self.temp_bins),
-                "stack": self.stack.tolist(),
+                "n_regions": self.n_regions,
+                # v5 files are always region-explicit (N, B, R, 2, 4);
+                # one-region stacks round-trip back to canonical rank-4.
+                "stack": self.region_stack().tolist(),
                 "refresh": refresh,
             }
         )
@@ -331,7 +417,7 @@ class DimmTimingTable:
                 obj["temp_bins"],
                 [[TimingParams(**d) for d in per_dimm] for per_dimm in obj["sets"]],
             )
-        if version in (2, 3, 4):
+        if version in (2, 3, 4, 5):
             if obj.get("params", list(PARAM_NAMES)) != list(PARAM_NAMES):
                 raise ValueError(
                     f"persisted parameter order {obj['params']} does not "
@@ -345,14 +431,14 @@ class DimmTimingTable:
                 temp_bins=tuple(obj["temp_bins"]),
                 stack=np.repeat(merged[:, :, None, :], len(ACCESS_TYPES), axis=2),
             )
-        if version in (3, 4):
+        if version in (3, 4, 5):
             if obj.get("access_types", list(ACCESS_TYPES)) != list(ACCESS_TYPES):
                 raise ValueError(
                     f"persisted access-type order {obj['access_types']} does "
                     f"not match {list(ACCESS_TYPES)}"
                 )
             refresh = None
-            if version == 4 and obj.get("refresh") is not None:
+            if version >= 4 and obj.get("refresh") is not None:
                 r = obj["refresh"]
                 refresh = RefreshPolicy(
                     boundaries=tuple(float(b) for b in r["boundaries"]),
@@ -360,9 +446,19 @@ class DimmTimingTable:
                     trefi_base_ns=float(r["trefi_base_ns"]),
                     trfc_ns=float(r["trfc_ns"]),
                 )
+            stack = np.asarray(obj["stack"], np.float32)
+            if version == 5:
+                n_regions = int(obj.get("n_regions", 1))
+                if stack.ndim != 5 or stack.shape[2] != n_regions:
+                    raise ValueError(
+                        f"v5 stack shape {stack.shape} does not carry the "
+                        f"declared n_regions={n_regions} region axis"
+                    )
+                # __post_init__ squeezes n_regions == 1 to the canonical
+                # rank-4 form — bitwise equal to the v1–v4 load path.
             return cls(
                 temp_bins=tuple(obj["temp_bins"]),
-                stack=np.asarray(obj["stack"], np.float32),
+                stack=stack,
                 refresh=refresh,
             )
         raise ValueError(f"unknown DimmTimingTable schema_version {version!r}")
@@ -593,8 +689,13 @@ def replay(
             )
     if state is None:
         state = init_state(table.n_dimms, table.n_bins)
+    # Region tables replay on the region-OBLIVIOUS registers: bin dynamics
+    # depend only on temperature, and the dense (S, N, 2, 4) row history
+    # cannot carry a region axis. Region-resolved timings are recovered at
+    # scoring time from the effective-bin history (`bin_idx`) + the trace's
+    # per-step region-access mix (repro.core.perfmodel.region_trace_score).
     args = (
-        jnp.asarray(table.stack),
+        jnp.asarray(table.oblivious_stack()),
         jnp.asarray(table.temp_bins, jnp.float32),
         ControllerParams(*(jnp.asarray(p) for p in params)),
         state,

@@ -268,6 +268,77 @@ class SweepResult(NamedTuple):
         return out
 
 
+class RegionSweepResult(NamedTuple):
+    """Dense characterization output over the (temp × pattern × region ×
+    DIMM) grid — the rank-raised sibling of :class:`SweepResult` for
+    design-induced per-region variation (ISSUE 10 / Lee et al.).
+
+    Timing stacks are ns, cycle-quantized, last axis in ``PARAM_NAMES``
+    order. Region axis order follows :func:`repro.core.charge.region_fracs`:
+    index 0 = nearest the sense amps (fastest), index R-1 = farthest (the
+    anchor class, identical to the region-free per-DIMM profile)."""
+
+    temps_c: Array        # (T,)
+    patterns: Array       # (P,)
+    region_fracs: Array   # (R,) normalized distance classes
+    read: Array           # (T, P, R, N, 4) read-mode individual minima
+    write: Array          # (T, P, R, N, 4) write-mode minima
+    temps_exact: Tuple[float, ...] = ()
+
+    @property
+    def n_regions(self) -> int:
+        return int(self.region_fracs.shape[0])
+
+    def bin_edges(self) -> Tuple[float, ...]:
+        if self.temps_exact:
+            return self.temps_exact
+        return tuple(float(t) for t in self.temps_c.tolist())
+
+    def worst_pattern_idx(self) -> int:
+        return int(jnp.argmin(self.patterns))
+
+    def _guarantee_pattern_idx(self) -> int:
+        p = self.worst_pattern_idx()
+        worst = float(self.patterns[p])
+        if worst > 1.0:
+            raise ValueError(
+                f"sweep lacks the worst-case guarantee pattern: min margin "
+                f"factor is {worst} (> 1.0); re-sweep with pattern 1.0 "
+                "before programming controller tables"
+            )
+        return p
+
+    def read_timings(self) -> Array:
+        """(T, R, N, 4) read-access sets at the worst-case pattern."""
+        return self.read[:, self._guarantee_pattern_idx()]
+
+    def write_timings(self) -> Array:
+        """(T, R, N, 4) write-access sets at the worst-case pattern;
+        refuses the untested-tRAS sentinel like :class:`SweepResult`."""
+        w = self.write[:, self._guarantee_pattern_idx()]
+        if bool((jnp.asarray(w) < 0.0).any()):
+            raise ValueError(
+                "write-mode sweep carries the untested-tRAS sentinel "
+                f"({profiler.WRITE_TRAS_UNTESTED_NS} ns): re-sweep with "
+                "tras_mode='profiled' before programming write registers"
+            )
+        return w
+
+    def stacked_timings(self) -> Array:
+        """(T, R, N, 2, 4) per-access-type sets at the worst-case pattern —
+        what a per-region :class:`repro.core.controller.DimmTimingTable`
+        (schema v5, ``(N, B, R, 2, 4)`` stack) ingests after transposing
+        the DIMM axis to the front."""
+        return jnp.stack([self.read_timings(), self.write_timings()], axis=-2)
+
+    def to_table(self):
+        """Build a per-region :class:`repro.core.controller.DimmTimingTable`
+        (rank-5 ``(N, B, R, 2, 4)`` stack) directly from the sweep."""
+        from repro.core.controller import DimmTimingTable
+
+        return DimmTimingTable.from_fleet(self)
+
+
 @partial(jax.jit, static_argnames=("window_s", "consts", "write_tras"))
 def _sweep_grid(
     cells: CellParams,
@@ -346,6 +417,177 @@ def _sweep_grid_pallas(
         jax.vmap(at_point, in_axes=(None, 0)), in_axes=(0, None)
     )(temps_c, patterns)
     return read, write, joint
+
+
+@partial(
+    jax.jit, static_argnames=("window_s", "consts", "write_tras")
+)
+def _sweep_grid_regions(
+    cells: CellParams,
+    temps_c: Array,
+    patterns: Array,
+    region_fracs: Array,
+    window_s: float,
+    consts: ChargeModelConstants,
+    write_tras: str,
+) -> Tuple[Array, Array]:
+    """The rank-raised study — (T × P × R × N) — as one traced computation:
+    the same pure profiler functions, vmapped over one more axis. This is
+    the pure-jnp oracle the region-tiled kernel path is gated bit-exact
+    against."""
+
+    def at_point(t: Array, p: Array, f: Array) -> Tuple[Array, Array]:
+        read = profiler.individual_min_timings(
+            cells, t, p, window_s, consts, region_frac=f
+        )
+        write = profiler.write_mode_min_timings(
+            cells, t, p, window_s, consts, tras_mode=write_tras, region_frac=f
+        )
+        return read, write
+
+    over_regions = jax.vmap(at_point, in_axes=(None, None, 0))
+    over_patterns = jax.vmap(over_regions, in_axes=(None, 0, None))
+    over_grid = jax.vmap(over_patterns, in_axes=(0, None, None))
+    return over_grid(temps_c, patterns, region_fracs)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("window_s", "consts", "write_tras", "interpret"),
+)
+def _sweep_grid_pallas_regions(
+    cells: CellParams,
+    temps_c: Array,
+    patterns: Array,
+    region_fracs: Array,
+    window_s: float,
+    consts: ChargeModelConstants,
+    write_tras: str,
+    interpret: bool,
+) -> Tuple[Array, Array]:
+    """The region-axis study through the fused charge-sweep kernel: the
+    region axis rides the kernel's arbitrary-leading-axes contract exactly
+    like the pattern axis, so the ENTIRE (T, P, R, N) grid is still ONE
+    kernel pass — the ops layer flattens the four leading axes into tiles
+    and the kernel never knows a region axis exists."""
+    eff = charge.apply_pattern(
+        CellParams(
+            r=cells.r[None, None, None, :],
+            c=cells.c[None, None, None, :],
+            leak=cells.leak[None, None, None, :],
+        ),
+        patterns[None, :, None, None],
+    )
+    eff = charge.apply_region(eff, region_fracs[None, None, :, None], consts)
+    read, write = charge_sweep.sweep_min_timings(
+        eff, temps_c[:, None, None, None], window_s, consts,
+        impl="pallas", interpret=interpret,
+    )
+    if write_tras == "untested":
+        write = jnp.concatenate(
+            [
+                write[..., :1],
+                jnp.full_like(write[..., 1:2], profiler.WRITE_TRAS_UNTESTED_NS),
+                write[..., 2:],
+            ],
+            axis=-1,
+        )
+    return read, write
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_region_sweep_runner(
+    mesh,
+    n_dimms: int,
+    temps: Tuple[float, ...],
+    patterns: Tuple[float, ...],
+    n_regions: int,
+    window_s: float,
+    consts: ChargeModelConstants,
+    write_tras: str,
+    impl: str,
+    interpret: bool,
+):
+    """Cached (pad → shard_map → slice) wrapper for one region-sweep
+    configuration; the DIMM axis sits at position 3 of the (T, P, R, N, 4)
+    stacks."""
+    t = jnp.asarray(temps, jnp.float32)
+    p = jnp.asarray(patterns, jnp.float32)
+    f = charge.region_fracs(n_regions)
+    if impl == "pallas":
+
+        def grid_fn(c: CellParams):
+            return _sweep_grid_pallas_regions(
+                c, t, p, f, window_s, consts, write_tras, interpret
+            )
+    else:
+
+        def grid_fn(c: CellParams):
+            return _sweep_grid_regions(c, t, p, f, window_s, consts, write_tras)
+
+    return shard.sharded_dimm_map(
+        grid_fn, mesh, in_axes=(0,), out_axes=(3, 3), n_dimms=n_dimms
+    )
+
+
+def sweep_regions(
+    fleet: Fleet | CellParams,
+    temps_c: Sequence[float] = DEFAULT_TEMPS_C,
+    patterns: Sequence[float] = DEFAULT_PATTERNS,
+    n_regions: int = 1,
+    window_s: float = charge.REFRESH_WINDOW_S,
+    consts: ChargeModelConstants = DEFAULT_CONSTANTS,
+    write_tras: str = "profiled",
+    impl: str = "pallas",
+    interpret: bool | None = None,
+    mesh=None,
+) -> RegionSweepResult:
+    """Characterize a fleet over the (DIMM × temp × pattern × region) grid
+    in one jitted call — :func:`sweep` raised by one rank.
+
+    Same contract as :func:`sweep` plus ``n_regions``: per-DIMM distance-
+    from-sense-amp classes (:func:`repro.core.charge.region_fracs`). The
+    result's ``read`` / ``write`` stacks are ``(T, P, R, N, 4)``; region
+    index R-1 is the anchor (farthest) class, bitwise identical to the
+    region-free profile, so ``n_regions=1`` reproduces :func:`sweep`'s
+    stacks exactly. ``impl="pallas"`` keeps the one-kernel-pass structure
+    (the region axis is tiled with the other leading axes); ``mesh=``
+    shards the DIMM axis bit-exactly as in :func:`sweep`."""
+    if write_tras not in profiler.WRITE_TRAS_MODES:
+        raise ValueError(
+            f"write_tras must be one of {profiler.WRITE_TRAS_MODES}, "
+            f"got {write_tras!r}"
+        )
+    if impl not in charge_sweep.IMPLS:
+        raise ValueError(
+            f"impl must be one of {charge_sweep.IMPLS}, got {impl!r}"
+        )
+    cells = fleet.cells if isinstance(fleet, Fleet) else fleet
+    temps_key = tuple(float(x) for x in temps_c)
+    patterns_key = tuple(float(x) for x in patterns)
+    interp = charge_sweep.default_interpret() if interpret is None else interpret
+    t = jnp.asarray(temps_key, jnp.float32)
+    p = jnp.asarray(patterns_key, jnp.float32)
+    f = charge.region_fracs(int(n_regions))
+    if mesh is None:
+        if impl == "pallas":
+            read, write = _sweep_grid_pallas_regions(
+                cells, t, p, f, float(window_s), consts, write_tras, interp
+            )
+        else:
+            read, write = _sweep_grid_regions(
+                cells, t, p, f, float(window_s), consts, write_tras
+            )
+    else:
+        run = _sharded_region_sweep_runner(
+            mesh, int(cells.r.shape[0]), temps_key, patterns_key,
+            int(n_regions), float(window_s), consts, write_tras, impl, interp,
+        )
+        read, write = run(cells)
+    return RegionSweepResult(
+        temps_c=t, patterns=p, region_fracs=f, read=read, write=write,
+        temps_exact=tuple(float(x) for x in temps_c),
+    )
 
 
 @functools.lru_cache(maxsize=32)

@@ -965,6 +965,173 @@ def _sharded_finalize_runner(
     )
 
 
+# ---------------------------------------------------------------------------
+# Region-resolved scoring (design-induced variation, schema-v5 tables)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n_dimms", "n_bins", "n_regions"))
+def region_counts_init(n_dimms: int, n_bins: int, n_regions: int) -> Array:
+    """Zeroed ``(n_dimms, n_bins + 1, n_regions)`` int32 region-access
+    counters (last bin column = the beyond-last-bin JEDEC sentinel).
+
+    The region analogue of :func:`trace_score_init`: integer counts are
+    exact under ANY accumulation order, so chunked/streamed accumulation
+    is bit-identical to one materialized pass by construction."""
+    return jnp.zeros((n_dimms, n_bins + 1, n_regions), jnp.int32)
+
+
+@jax.jit
+def region_counts_accumulate(
+    counts: Array, bin_idx: Array, region_mix: Array
+) -> Array:
+    """Absorb a chunk of per-step region-access mixes at each step's
+    effective bin.
+
+    ``bin_idx`` is the ``(chunk, n_dimms)`` effective-bin trace (``n_bins``
+    = the JEDEC sentinel, exactly what
+    :class:`repro.core.controller.ReplayResult` records); ``region_mix``
+    the ``(chunk, n_dimms, n_regions)`` int32 access counts per
+    distance-from-sense-amp class. Each step's mix row lands in its
+    effective bin's counter — the integer scatter that makes region
+    scoring exact under any chunking or sharding."""
+    n_bins1 = counts.shape[1]
+    onehot = (
+        bin_idx[:, :, None] == jnp.arange(n_bins1)[None, None, :]
+    ).astype(jnp.int32)                                          # (S, N, B+1)
+    mix = jnp.asarray(region_mix, jnp.int32)
+    return counts + jnp.einsum("snb,snr->nbr", onehot, mix)
+
+
+def _region_speedup_grids(
+    region_stack: Array,
+    cfg: SystemConfig,
+    workloads: Tuple[Workload, ...],
+) -> Tuple[Array, Array]:
+    """Per-(DIMM, effective bin, region) speedups of a rank-5 register
+    stack, plus the region-OBLIVIOUS per-(DIMM, effective bin) speedups of
+    its max-over-regions rows. This is where the per-(DIMM, bin, region)
+    timing lookup happens: each region's own profiled ``(2, 4)`` block is
+    evaluated, not the worst-case merge."""
+    n_dimms, _, n_regions = region_stack.shape[:3]
+    jedec = jnp.asarray(list(JEDEC_DDR3_1600), jnp.float32)
+    jedec_rows = jnp.broadcast_to(
+        jedec, (n_dimms, 1, n_regions, len(ACCESS_TYPES), len(PARAM_NAMES))
+    )
+    rows = jnp.concatenate([region_stack, jedec_rows], axis=1)  # (N,B+1,R,2,4)
+    sp = fleet_speedups(rows, cfg, workloads, split=True)       # (N, B+1, R)
+    # The oblivious register set: the max over regions per (bin, access,
+    # param) — the only single set safe for every region. Each region row
+    # is elementwise <= this merge, and IPC is monotone non-increasing in
+    # every timing parameter, so sp >= sp_obl[..., None] HOLDS ELEMENTWISE
+    # — region-aware scores can only gain.
+    sp_obl = fleet_speedups(
+        rows.max(axis=2), cfg, workloads, split=True
+    )                                                           # (N, B+1)
+    return sp, sp_obl
+
+
+def region_score_finalize(
+    counts: Array,
+    region_stack: Array,
+    cfg: SystemConfig = MULTI_CORE,
+    claim: float = PAPER_CLAIM_SPEEDUP,
+    workloads: Tuple[Workload, ...] = WORKLOADS,
+) -> Dict[str, float]:
+    """Region-occupancy-weighted realized speedups from accumulated
+    region-access counts + a region table's registers.
+
+    ``counts`` — ``(n_dimms, n_bins + 1, n_regions)`` int32 accumulators
+    (:func:`region_counts_init` → :func:`region_counts_accumulate`);
+    ``region_stack`` — the table's rank-5 ``(n_dimms, n_bins, n_regions,
+    2, 4)`` registers (:meth:`repro.core.controller.DimmTimingTable.region_stack`).
+
+    Reports BOTH sides of the design-induced-variation argument:
+
+    * ``speedup_region_aware_*`` — each access is served at ITS region's
+      profiled timings (per-(DIMM, bin, region) lookup), weighted by the
+      accumulated access counts.
+    * ``speedup_region_oblivious_*`` — the same accesses all served at the
+      max-over-regions register set (what a region-unaware controller must
+      program).
+
+    Aware >= oblivious holds unconditionally (elementwise speedup
+    dominance, see :func:`_region_speedup_grids`); the GAP is what the
+    region axis buys, and it grows with mix skew toward near regions."""
+    region_stack = jnp.asarray(region_stack, jnp.float32)
+    if region_stack.ndim != 5 or region_stack.shape[3:] != (
+        len(ACCESS_TYPES), len(PARAM_NAMES)
+    ):
+        raise ValueError(
+            f"region_stack must be (n_dimms, n_bins, n_regions, 2, 4), "
+            f"got {region_stack.shape}"
+        )
+    n_dimms, n_bins, n_regions = region_stack.shape[:3]
+    if counts.shape != (n_dimms, n_bins + 1, n_regions):
+        raise ValueError(
+            f"counts shape {counts.shape} does not match a {n_dimms}-DIMM, "
+            f"{n_bins}-bin, {n_regions}-region table"
+        )
+    w = counts.astype(jnp.float32)                              # (N, B+1, R)
+    total = w.sum(axis=(1, 2))                                  # (N,)
+    if bool((total <= 0).any()):
+        raise ValueError("cannot finalize a region score with zero accesses")
+    sp, sp_obl = _region_speedup_grids(region_stack, cfg, workloads)
+    sp_m, sp_obl_m = _region_speedup_grids(
+        region_stack, cfg, MEM_INTENSIVE_WORKLOADS
+    )
+    aware = (w * sp).sum(axis=(1, 2)) / total                   # (N,)
+    aware_m = (w * sp_m).sum(axis=(1, 2)) / total
+    obl = (w.sum(axis=2) * sp_obl).sum(axis=1) / total
+    obl_m = (w.sum(axis=2) * sp_obl_m).sum(axis=1) / total
+    near_frac = w[:, :, 0].sum(axis=1) / total
+    return {
+        "n_regions": float(n_regions),
+        "region_accesses_total": float(np.asarray(counts, np.int64).sum()),
+        "nearest_region_access_frac": float(near_frac.mean()),
+        "speedup_region_aware_mean": float(aware.mean() - 1.0),
+        "speedup_region_aware_min": float(aware.min() - 1.0),
+        "speedup_region_aware_intensive_mean": float(aware_m.mean() - 1.0),
+        "speedup_region_oblivious_mean": float(obl.mean() - 1.0),
+        "speedup_region_oblivious_intensive_mean": float(obl_m.mean() - 1.0),
+        "region_aware_advantage_intensive": float((aware_m - obl_m).mean()),
+        "speedup_region_aware_vs_claim": float(aware_m.mean() - 1.0) - claim,
+    }
+
+
+def region_trace_score(
+    region_stack: Array,
+    replay,
+    region_mix: Array,
+    cfg: SystemConfig = MULTI_CORE,
+    claim: float = PAPER_CLAIM_SPEEDUP,
+    workloads: Tuple[Workload, ...] = WORKLOADS,
+) -> Dict[str, float]:
+    """Score a materialized replay against a region table given the
+    trace's per-step region-access mix.
+
+    ``replay`` — a :class:`repro.core.controller.ReplayResult` (duck-typed:
+    only ``bin_idx``, the effective-bin history, is consumed — bin
+    dynamics depend only on temperature, so the SAME replay scores any
+    region resolution); ``region_mix`` — ``(n_steps, n_dimms, n_regions)``
+    int32 per-step access counts (:func:`repro.core.traces.region_access_mix`).
+    Internally init → accumulate (whole trace) → finalize, the same
+    integer accumulators a streamed replay carries chunk-wise
+    (:func:`repro.core.stream.replay_stream` with ``region_mix=``), so
+    streamed region scores match this bitwise."""
+    region_stack = jnp.asarray(region_stack, jnp.float32)
+    if region_stack.ndim != 5:
+        raise ValueError(
+            f"region_stack must be rank-5, got {region_stack.shape}; "
+            "pass DimmTimingTable.region_stack()"
+        )
+    n_dimms, n_bins, n_regions = region_stack.shape[:3]
+    counts = region_counts_accumulate(
+        region_counts_init(n_dimms, n_bins, n_regions),
+        jnp.asarray(replay.bin_idx),
+        jnp.asarray(region_mix, jnp.int32),
+    )
+    return region_score_finalize(counts, region_stack, cfg, claim, workloads)
+
+
 def per_workload_speedups(
     cfg: SystemConfig,
     reductions: Dict[str, float] = DEPLOYED_REDUCTIONS_55C,

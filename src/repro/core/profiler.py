@@ -116,12 +116,17 @@ def individual_min_timings(
     consts: ChargeModelConstants = DEFAULT_CONSTANTS,
     *,
     impl: str = "pallas",
+    region_frac: Array | float | None = None,
 ) -> Array:
     """Per-parameter minimal safe timings, others held at JEDEC (§1.5).
 
     Pure: returns a ``(n_dimms, 4)`` stack (``PARAM_NAMES`` order, ns,
     cycle-quantized). ``temp_c`` / ``pattern`` may be tracers — the fleet
     engine vmaps this over the (temperature × pattern) grid.
+    ``region_frac`` (also tracer-safe) folds a distance-from-sense-amp
+    region class into the effective cell via :func:`charge.apply_region`;
+    ``None`` leaves the computation graph untouched — the region-free
+    legacy path stays bitwise identical.
 
     ``impl="pallas"`` (default) runs the fused charge-sweep kernel instead
     of the per-candidate full-model search — bit-exact against
@@ -132,6 +137,8 @@ def individual_min_timings(
     ``fleet.sweep`` does) rather than paying two invocations.
     """
     eff = charge.apply_pattern(cells, pattern)
+    if region_frac is not None:
+        eff = charge.apply_region(eff, region_frac, consts)
     if impl not in IMPLS:
         raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
     if impl == "pallas":
@@ -170,6 +177,7 @@ def write_mode_min_timings(
     tras_mode: str = "profiled",
     *,
     impl: str = "pallas",
+    region_frac: Array | float | None = None,
 ) -> Array:
     """Write-test minimal timings for all four parameters (Fig. 2b).
 
@@ -182,7 +190,9 @@ def write_mode_min_timings(
     silently masquerade as a JEDEC requirement. ``impl="pallas"`` (default)
     runs the fused charge-sweep kernel, ``"ref"`` the pure-jnp oracle
     (bit-exact; the sentinel substitution happens after profiling in
-    either impl)."""
+    either impl). ``region_frac`` folds a region class into the effective
+    cell exactly as in :func:`individual_min_timings` (``None`` = the
+    bitwise-unchanged legacy graph)."""
     if tras_mode not in WRITE_TRAS_MODES:
         raise ValueError(
             f"tras_mode must be one of {WRITE_TRAS_MODES}, got {tras_mode!r}"
@@ -190,6 +200,8 @@ def write_mode_min_timings(
     if impl not in IMPLS:
         raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
     eff = charge.apply_pattern(cells, pattern)
+    if region_frac is not None:
+        eff = charge.apply_region(eff, region_frac, consts)
     if impl == "pallas":
         _, write = charge_sweep.sweep_min_timings(
             eff, temp_c, window_s, consts, impl="pallas"

@@ -76,6 +76,8 @@ from repro.core.perfmodel import (
     PAPER_CLAIM_SPEEDUP,
     WORKLOADS,
     ScorePartials,
+    region_counts_init,
+    region_score_finalize,
     trace_score_finalize,
     trace_score_init,
 )
@@ -98,6 +100,20 @@ DEFAULT_CHUNK_STEPS: int = 256
 _chunk_body = _replay_ref.chunk_body
 _chunk_scan = _replay_ref.chunk_scan
 _chunk_scan_emit = _replay_ref.chunk_scan_emit
+_region_chunk_scan = _replay_ref.region_chunk_scan
+
+
+@functools.lru_cache(maxsize=16)
+def _sharded_region_runner(mesh, n_dimms: int):
+    """Cached sharded wrapper for the region-resolved chunk scan: the
+    int32 region-count carry shards over the DIMM axis like every other
+    per-DIMM accumulator, and integer adds make the sharded counts
+    bitwise-equal to single-device ones (padding lanes are sliced off)."""
+    in_axes = (0, None, None, 0, 0, 0, 0, None, 0, 1, 1, 1)
+    out_axes = (0, 0, 0, 0, None, 0)
+    return shard.sharded_dimm_map(
+        _region_chunk_scan, mesh, in_axes, out_axes, n_dimms
+    )
 
 
 @functools.lru_cache(maxsize=32)
@@ -186,16 +202,36 @@ class _Ingestor:
         self.n_dimms = n_dimms
         self.errors_seen = 0
         self._sharding = None
+        self._mix_sharding = None
         self._padded = n_dimms
         if mesh is not None:
             self._padded = shard.padded_size(n_dimms, shard.n_shards(mesh))
             self._sharding = NamedSharding(mesh, P(None, shard.DIMM_AXIS))
+            self._mix_sharding = NamedSharding(
+                mesh, P(None, shard.DIMM_AXIS, None)
+            )
 
     def _pad(self, a: np.ndarray) -> np.ndarray:
         pad = self._padded - a.shape[1]
         if pad == 0:
             return a
         return np.concatenate([a, np.repeat(a[:, -1:], pad, axis=1)], axis=1)
+
+    def stage_mix(self, mix) -> Array:
+        """Stage a ``(chunk_steps, n_dimms, n_regions)`` region-access-mix
+        chunk (edge-replication-padded over the DIMM axis like the
+        temperature chunk; padding lanes' counts are sliced off with the
+        rest of the padded carry)."""
+        mix = np.asarray(mix, np.int32)
+        if mix.ndim != 3 or mix.shape[1] != self.n_dimms:
+            raise ValueError(
+                f"region mix chunk must be (chunk_steps, {self.n_dimms}, "
+                f"n_regions), got {mix.shape}"
+            )
+        mix = self._pad(mix)
+        if self._mix_sharding is None:
+            return jax.device_put(mix)
+        return jax.device_put(mix, self._mix_sharding)
 
     def stage(self, temps, errors) -> Tuple[Array, Array]:
         temps = np.asarray(temps, np.float32)
@@ -237,6 +273,9 @@ class StreamResult(NamedTuple):
     n_chunks: int
     errors_total: int
     mesh: object = None
+    #: (n_dimms, n_bins + 1, n_regions) int32 region-access counts, only
+    #: when the stream carried a region mix (``replay_stream(region_mix=)``).
+    region_counts: Optional[Array] = None
 
     @property
     def n_steps(self) -> int:
@@ -267,9 +306,31 @@ class StreamResult(NamedTuple):
         refresh-agnostic (occupancy is a function of the selected bin),
         so refresh enters at this finalize only."""
         return trace_score_finalize(
-            self.partials, self.table.stack, cfg, claim, workloads,
-            mesh=self.mesh if mesh is None else mesh,
+            self.partials, self.table.oblivious_stack(), cfg, claim,
+            workloads, mesh=self.mesh if mesh is None else mesh,
             refresh=self.table.bin_refresh(),
+        )
+
+    def region_score(
+        self,
+        cfg=MULTI_CORE,
+        claim: float = PAPER_CLAIM_SPEEDUP,
+        workloads=WORKLOADS,
+    ):
+        """Region-occupancy-weighted realized speedups from the streamed
+        region-access counts + the table's rank-5 registers — bitwise
+        equal to the materialized
+        :func:`~repro.core.perfmodel.region_trace_score` at every
+        chunking (the counts are integers; see
+        :func:`~repro.core.perfmodel.region_counts_accumulate`)."""
+        if self.region_counts is None:
+            raise ValueError(
+                "this stream carried no region mix; pass region_mix= to "
+                "replay_stream"
+            )
+        return region_score_finalize(
+            self.region_counts, self.table.region_stack(), cfg, claim,
+            workloads,
         )
 
 
@@ -283,6 +344,7 @@ def replay_stream(
     mesh=None,
     impl: str = "ref",
     interpret: Optional[bool] = None,
+    region_mix: Optional[Array] = None,
 ) -> StreamResult:
     """Replay a temperature stream in step-axis chunks, carrying only the
     controller state and the running score partials — O(n_dimms ·
@@ -312,9 +374,43 @@ def replay_stream(
     :mod:`repro.kernels.replay_step`: step + timing lookup + partials in
     one VMEM-resident pass, bit-exact vs the ref). ``interpret=None``
     auto-enables kernel interpret mode off-TPU. Under a mesh the kernel
-    runs locally per shard."""
+    runs locally per shard.
+
+    ``region_mix`` — optional ``(n_steps, n_dimms, n_regions)`` int32
+    per-step region-access counts (region tables, schema v5): each chunk
+    then runs the region-resolved scan
+    (:func:`repro.kernels.replay_step.ref.region_chunk_scan`), carrying
+    int32 per-(DIMM, effective bin, region) counters alongside the
+    partials — ``StreamResult.region_counts`` /
+    :meth:`StreamResult.region_score`. Integer accumulation keeps
+    streamed counts bitwise-equal to a materialized accumulation at
+    every chunking and same-mesh sharding. Requires a materialized
+    ``traces`` array and stays on the ref scan (the precedent of the
+    decision-emitting path); the carried :class:`ScorePartials` are
+    bit-identical to a mix-free stream of the same trace."""
     if state is None:
         state = init_state(table.n_dimms, table.n_bins)
+    region_counts = None
+    if region_mix is not None:
+        if impl != "ref":
+            raise ValueError(
+                "region_mix streaming runs the ref chunk scan; drop "
+                f"impl={impl!r}"
+            )
+        if not (hasattr(traces, "ndim") or hasattr(traces, "shape")):
+            raise ValueError(
+                "region_mix requires a materialized (n_steps, n_dimms) "
+                "traces array (chunked in lockstep with the mix)"
+            )
+        region_mix = np.asarray(region_mix, np.int32)
+        if region_mix.ndim != 3 or region_mix.shape[2] != table.n_regions:
+            raise ValueError(
+                f"region_mix must be (n_steps, n_dimms, "
+                f"{table.n_regions}), got {region_mix.shape}"
+            )
+        region_counts = region_counts_init(
+            table.n_dimms, table.n_bins, table.n_regions
+        )
     if hasattr(traces, "ndim") or hasattr(traces, "shape"):
         traces = np.asarray(traces)
         if traces.ndim != 2:
@@ -340,36 +436,73 @@ def replay_stream(
         chunks = iter(traces)
 
     n = table.n_dimms
+    mix_chunks = None
+    if region_counts is not None:
+        if region_mix.shape[:2] != traces.shape:
+            raise ValueError(
+                f"region_mix leading shape {region_mix.shape[:2]} != "
+                f"traces shape {traces.shape}"
+            )
+        mix_chunks = (
+            region_mix[s : s + chunk_steps]
+            for s in range(0, traces.shape[0], chunk_steps)
+        )
     partials = trace_score_init(n, table.n_bins)
     # Explicit staging: these host tables cross to the device exactly once
     # per stream, and device_put keeps that legal under
     # jax.transfer_guard("disallow") scopes (implicit jnp.asarray
-    # transfers are what the guard exists to catch).
-    stack = jax.device_put(np.asarray(table.stack))
+    # transfers are what the guard exists to catch). Region tables stream
+    # on their region-OBLIVIOUS registers (bin dynamics depend only on
+    # temperature); for rank-4 tables oblivious_stack() IS table.stack.
+    stack = jax.device_put(np.asarray(table.oblivious_stack()))
     edges = jax.device_put(np.asarray(table.temp_bins, np.float32))
     jparams = ControllerParams(*(jax.device_put(p) for p in params))
-    run = _chunk_runner(mesh, n, table.temp_bins, params,
-                        emit=False, impl=impl, interpret=interpret)
+    if mix_chunks is None:
+        run = _chunk_runner(mesh, n, table.temp_bins, params,
+                            emit=False, impl=impl, interpret=interpret)
+    else:
+        run = (
+            _region_chunk_scan if mesh is None
+            else _sharded_region_runner(mesh, n)
+        )
 
     ingest = _Ingestor(n, mesh)
     n_chunks = 0
-    nxt = next(chunks, None)
-    staged = None if nxt is None else ingest.stage(*nxt)
+
+    def stage_next():
+        nxt = next(chunks, None)
+        if nxt is None:
+            return None
+        staged = ingest.stage(*nxt)
+        if mix_chunks is not None:
+            staged += (ingest.stage_mix(next(mix_chunks)),)
+        return staged
+
+    staged = stage_next()
     while staged is not None:
-        temps_d, errors_d = staged
         # Dispatch the scan (asynchronous), THEN stage the next chunk's
         # host→device transfer so the copy overlaps the running scan.
-        out = run(stack, edges, jparams, state,
-                  partials.occupancy, partials.switches,
-                  partials.timing_sums, partials.n_steps, temps_d, errors_d)
+        if mix_chunks is None:
+            temps_d, errors_d = staged
+            out = run(stack, edges, jparams, state,
+                      partials.occupancy, partials.switches,
+                      partials.timing_sums, partials.n_steps,
+                      temps_d, errors_d)
+        else:
+            temps_d, errors_d, mix_d = staged
+            out = run(stack, edges, jparams, state,
+                      partials.occupancy, partials.switches,
+                      partials.timing_sums, partials.n_steps,
+                      region_counts, temps_d, errors_d, mix_d)
+            region_counts = out[5]
         state = out[0]
         partials = ScorePartials(*out[1:5])
         n_chunks += 1
-        nxt = next(chunks, None)
-        staged = None if nxt is None else ingest.stage(*nxt)
+        staged = stage_next()
     return StreamResult(
         state=state, partials=partials, table=table, n_chunks=n_chunks,
         errors_total=ingest.errors_seen, mesh=mesh,
+        region_counts=region_counts,
     )
 
 
@@ -412,7 +545,7 @@ class StreamingController:
         self.mesh = mesh
         self.impl = impl
         self.interpret = interpret
-        self._stack = jnp.asarray(table.stack)
+        self._stack = jnp.asarray(table.oblivious_stack())
         self._edges = jnp.asarray(table.temp_bins, jnp.float32)
         self._jparams = ControllerParams(*(jnp.asarray(p) for p in params))
         self._state = (
@@ -491,8 +624,8 @@ class StreamingController:
         (combined latency+refresh figures included when the table carries
         a refresh policy)."""
         return trace_score_finalize(
-            self._partials, self.table.stack, cfg, claim, workloads,
-            mesh=self.mesh, refresh=self.table.bin_refresh(),
+            self._partials, self.table.oblivious_stack(), cfg, claim,
+            workloads, mesh=self.mesh, refresh=self.table.bin_refresh(),
         )
 
     def result(self) -> StreamResult:

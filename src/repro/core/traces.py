@@ -232,6 +232,61 @@ def refresh_storm(
     return base + env * hot[None, :].astype(jnp.float32)
 
 
+def hot_bank(
+    key: jax.Array,
+    n_dimms: int,
+    n_steps: int,
+    dt_s: float = DEFAULT_DT_S,
+    onset_frac: float = 0.2,
+    recover_frac: float = 0.8,
+    lift_c: float = 7.0,
+    hot_frac: float = 0.35,
+    ramp_c_per_s: float = 0.05,
+    **diurnal_kw,
+) -> Array:
+    """Bank-locality hotspot: a random ``hot_frac`` of the fleet has one
+    bank hammered by a placement-skewed workload, lifting the module
+    sensor a few °C (``lift_c``) for the middle of the trace, ramped
+    within the paper's drift bound (0.05 °C/s — bank self-heating is
+    gradual, not a thermal event).
+
+    This is the *thermal* face of the Chang et al. per-bank variation
+    scenario; the matching *access* face is
+    :func:`region_access_mix(profile="hot_bank")`, which concentrates the
+    same DIMMs' accesses in one distance-from-sense-amp class. Unlike
+    :func:`refresh_storm` the lift stays well inside the profiled bins —
+    the point is bin churn under localized heating, not the extended
+    range."""
+    k_base, k_hot = jax.random.split(key)
+    base = diurnal(k_base, n_dimms, n_steps, dt_s, **diurnal_kw)
+    onset = int(onset_frac * n_steps)
+    recover = int(recover_frac * n_steps)
+    t = jnp.arange(n_steps, dtype=jnp.float32)[:, None]
+    rate = ramp_c_per_s * dt_s
+    rise = jnp.maximum(t - float(onset), 0.0) * rate
+    fall = jnp.maximum(t - float(recover), 0.0) * rate
+    env = jnp.clip(jnp.minimum(rise, lift_c) - fall, 0.0, None)
+    hot = jax.random.bernoulli(k_hot, hot_frac, (n_dimms,))
+    return base + env * hot[None, :].astype(jnp.float32)
+
+
+def design_skew(
+    key: jax.Array,
+    n_dimms: int,
+    n_steps: int,
+    dt_s: float = DEFAULT_DT_S,
+    **diurnal_kw,
+) -> Array:
+    """Design-induced-variation regime (Lee et al.): thermally this IS
+    the deployment diurnal — the scenario's signature lives in the paired
+    region-access mix (:func:`region_access_mix(profile="near")`), where
+    the OS's physical-page placement skews accesses toward the fast,
+    near-sense-amp regions. Registered separately so benchmarks can
+    select the (trace, mix) pair by one scenario name; drift-bounded by
+    construction like :func:`diurnal`."""
+    return diurnal(key, n_dimms, n_steps, dt_s, **diurnal_kw)
+
+
 def vendor_skew(
     key: jax.Array,
     n_dimms: int,
@@ -261,6 +316,16 @@ SCENARIOS: Dict[str, Callable[..., Array]] = {
     "hvac_failure": hvac_failure,
     "refresh_storm": refresh_storm,
     "vendor_skew": vendor_skew,
+    "hot_bank": hot_bank,
+    "design_skew": design_skew,
+}
+
+#: Default region-access-mix profile per scenario (see
+#: :func:`region_access_mix`): scenarios without a region signature read
+#: uniformly across distance classes.
+SCENARIO_REGION_PROFILES: Dict[str, str] = {
+    "design_skew": "near",
+    "hot_bank": "hot_bank",
 }
 
 
@@ -280,6 +345,94 @@ def generate(
             f"unknown scenario {name!r}; choose from {sorted(SCENARIOS)}"
         ) from None
     return fn(key, n_dimms, n_steps, dt_s, **kw)
+
+
+#: Region-access-mix profiles (see :func:`region_access_mix`).
+REGION_MIX_PROFILES: Tuple[str, ...] = ("uniform", "near", "far", "hot_bank")
+
+
+def _integer_allocate(weights: Array, total: int) -> Array:
+    """Deterministically split ``total`` accesses across the last axis in
+    proportion to ``weights`` — floor allocation with the remainder dealt
+    to the largest-remainder slots, so every row sums to exactly ``total``
+    (int32 counts, no sampling noise in the figures the gates pin)."""
+    w = weights / weights.sum(axis=-1, keepdims=True)
+    ideal = w * float(total)
+    base = jnp.floor(ideal).astype(jnp.int32)
+    short = total - base.sum(axis=-1)                       # (leading...,)
+    frac = ideal - jnp.floor(ideal)
+    # Rank regions by descending fractional remainder; give slot k one
+    # extra access iff k < short.
+    order = jnp.argsort(-frac, axis=-1)
+    rank = jnp.argsort(order, axis=-1)
+    extra = (rank < short[..., None]).astype(jnp.int32)
+    return base + extra
+
+
+def region_access_mix(
+    key: jax.Array,
+    n_steps: int,
+    n_dimms: int,
+    n_regions: int,
+    profile: str = "uniform",
+    accesses_per_step: int = 64,
+    skew: float = 4.0,
+    hot_share: float = 0.75,
+) -> Array:
+    """Per-step region-access counts — ``(n_steps, n_dimms, n_regions)``
+    int32, each row summing to ``accesses_per_step``.
+
+    Region index 0 is the NEAREST (fastest) distance-from-sense-amp
+    class, matching :func:`repro.core.charge.region_fracs`. Profiles:
+
+    * ``"uniform"`` — equal split (remainders to the nearest regions).
+    * ``"near"`` — geometric skew toward near regions (ratio ``skew``
+      between nearest and farthest): the design-skew regime where page
+      placement targets fast rows, so region-aware scoring has the most
+      to gain.
+    * ``"far"`` — the mirror image (adversarial for region-awareness:
+      the gap shrinks toward zero as mass concentrates on the anchor
+      region whose timings the oblivious set already programs).
+    * ``"hot_bank"`` — each DIMM concentrates ``hot_share`` of its
+      accesses in one random region (its hot bank's rows), the rest
+      uniform.
+
+    Counts are deterministic given the weights (largest-remainder
+    allocation, no multinomial noise) — only ``"hot_bank"``'s per-DIMM
+    region choice consumes the key. int32 counts keep every downstream
+    accumulation (:func:`repro.core.perfmodel.region_counts_accumulate`)
+    exact under any chunking/sharding."""
+    if n_regions < 1:
+        raise ValueError(f"n_regions must be >= 1, got {n_regions}")
+    if accesses_per_step < 1:
+        raise ValueError(
+            f"accesses_per_step must be >= 1, got {accesses_per_step}"
+        )
+    if profile not in REGION_MIX_PROFILES:
+        raise ValueError(
+            f"unknown region mix profile {profile!r}; choose from "
+            f"{REGION_MIX_PROFILES}"
+        )
+    idx = jnp.arange(n_regions, dtype=jnp.float32)
+    if profile == "uniform":
+        w = jnp.ones((n_dimms, n_regions), jnp.float32)
+    elif profile in ("near", "far"):
+        span = max(n_regions - 1, 1)
+        g = jnp.power(jnp.float32(skew), -idx / span)       # nearest-heavy
+        if profile == "far":
+            g = g[::-1]
+        w = jnp.broadcast_to(g[None, :], (n_dimms, n_regions))
+    else:  # hot_bank
+        hot_region = jax.random.randint(key, (n_dimms,), 0, n_regions)
+        onehot = (
+            hot_region[:, None] == jnp.arange(n_regions)[None, :]
+        ).astype(jnp.float32)
+        cold = (1.0 - hot_share) / float(n_regions)
+        w = onehot * hot_share + cold
+    per_dimm = _integer_allocate(w, accesses_per_step)      # (N, R)
+    return jnp.broadcast_to(
+        per_dimm[None, :, :], (n_steps, n_dimms, n_regions)
+    ).astype(jnp.int32)
 
 
 def error_injections(

@@ -31,7 +31,11 @@ from __future__ import annotations
 import jax
 
 from repro.core.controller import step
-from repro.core.perfmodel import ScorePartials, trace_score_accumulate
+from repro.core.perfmodel import (
+    ScorePartials,
+    region_counts_accumulate,
+    trace_score_accumulate,
+)
 
 
 def chunk_body(stack, edges, params, state, partials, temps, errors):
@@ -80,3 +84,40 @@ def chunk_scan_emit(stack, edges, params, state,
         stack, edges, params, state, partials, temps, errors
     )
     return (state,) + tuple(partials) + (rows, switched, eff)
+
+
+@jax.jit
+def region_chunk_scan(stack, edges, params, state,
+                      occupancy, switches, timing_sums, n_steps,
+                      region_counts, temps, errors, region_mix):
+    """Region-resolved chunk scan: :func:`chunk_scan` plus an int32
+    ``(N, n_bins + 1, n_regions)`` region-access-count carry.
+
+    Each step advances the SAME vmapped transition kernel (``stack`` is
+    the region-OBLIVIOUS ``(N, B, 2, 4)`` registers — bin dynamics depend
+    only on temperature), then scatters that step's ``(N, n_regions)``
+    access-mix row into the effective bin's counters
+    (:func:`repro.core.perfmodel.region_counts_accumulate` on a one-step
+    block — the identical integer adds in the identical order). The
+    counts are the sufficient statistic for the per-(DIMM, bin, region)
+    timing lookup: finalize evaluates each region's own rank-5 register
+    block and weights it by these counts
+    (:func:`repro.core.perfmodel.region_score_finalize`), so nothing
+    step-indexed and nothing region-resolved is ever materialized.
+    Integer accumulators are exact under any ordering — streamed region
+    counts equal a one-pass materialized accumulation bitwise at every
+    chunking and under any same-mesh sharding."""
+    partials = ScorePartials(occupancy, switches, timing_sums, n_steps)
+
+    def body(carry, xs):
+        st, p, rc = carry
+        temps_s, errs_s, mix_s = xs
+        st, rows, switched, eff = step(stack, edges, params, st, temps_s, errs_s)
+        p = trace_score_accumulate(p, rows[None], eff[None], switched[None])
+        rc = region_counts_accumulate(rc, eff[None], mix_s[None])
+        return (st, p, rc), None
+
+    (state, partials, region_counts), _ = jax.lax.scan(
+        body, (state, partials, region_counts), (temps, errors, region_mix)
+    )
+    return (state,) + tuple(partials) + (region_counts,)

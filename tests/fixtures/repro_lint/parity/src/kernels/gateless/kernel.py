@@ -1,0 +1,8 @@
+# Seeded violation: a COMPLETE kernel/ref/ops triad whose only defect is
+# the missing tests/test_*_kernel.py interpret-mode parity gate — the
+# check's gate branch must fire alone (no missing-sibling findings).
+import jax.experimental.pallas as pl  # noqa: F401
+
+
+def gateless_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] + 1.0

@@ -1,0 +1,6 @@
+# Sibling entry point present: the triad is complete, only the gate is
+# absent.
+
+
+def gateless(x):
+    return x + 1.0

@@ -1,0 +1,5 @@
+# Sibling oracle present: the triad is complete, only the gate is absent.
+
+
+def gateless(x):
+    return x + 1.0

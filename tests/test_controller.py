@@ -70,7 +70,7 @@ def test_json_schema_versioned():
     can keep old registers loadable (and unknown versions fail loudly)."""
     table = small_table()
     obj = json.loads(table.to_json())
-    assert obj["schema_version"] == TABLE_SCHEMA_VERSION == 4
+    assert obj["schema_version"] == TABLE_SCHEMA_VERSION == 5
     assert obj["params"] == list(PARAM_NAMES)
     assert obj["access_types"] == list(ACCESS_TYPES)
     assert obj["refresh"] is None  # small_table carries no refresh policy

@@ -72,6 +72,27 @@ def test_fixtures_cover_every_registered_check():
     assert set(FIXTURE_CASES) == {name for name, _ in all_checks()}
 
 
+def test_parity_gateless_triad_fires_only_the_gate_branch():
+    """A COMPLETE kernel/ref/ops triad with no tests/test_*_kernel.py gate
+    must yield exactly ONE finding — the missing-gate branch — while the
+    orphan package (no siblings at all) yields the missing-sibling
+    findings too. Distinguishes the two failure modes the check guards:
+    a kernel without its oracle vs a kernel whose oracle is unpinned."""
+    root = FIXTURES / "parity"
+    findings = run_lint(
+        [str(root / "src")], repo_root=root, include_fixtures=True,
+        checks=["parity-convention"], flag_unused_allowlist=False,
+    )
+    by_pkg = {}
+    for f in findings:
+        by_pkg.setdefault(f.symbol, []).append(f)
+    assert set(by_pkg) == {"orphan", "gateless"}
+    assert len(by_pkg["gateless"]) == 1
+    assert "parity gate" in by_pkg["gateless"][0].message
+    # orphan: ref.py missing + ops.py missing + no gate.
+    assert len(by_pkg["orphan"]) == 3
+
+
 # ---------------------------------------------------------------------------
 # The real tree is clean (the CI gate, in-process)
 # ---------------------------------------------------------------------------
